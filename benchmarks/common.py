@@ -1,0 +1,62 @@
+"""Shared benchmark helpers: timing, model builders, result IO."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def timeit(fn, *args, warmup: int = 2, iters: int = 10) -> float:
+    """Median wall seconds per call (blocking on the result)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def save_json(name: str, obj) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, name)
+    with open(path, "w") as f:
+        json.dump(obj, f, indent=2)
+    return path
+
+
+def load_json(name: str):
+    path = os.path.join(RESULTS_DIR, name)
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def paper_tgn_config(variant: str, n_nodes: int, n_edges: int,
+                     f_feat: int = 0, f_edge: int = 172, f_mem: int = 100):
+    """TGNConfig for a Table-II ladder variant at PAPER dims."""
+    from repro.core.tgn import TGNConfig
+    kw = dict(n_nodes=n_nodes, n_edges=n_edges, f_feat=f_feat,
+              f_edge=f_edge, f_mem=f_mem, f_time=f_mem, f_emb=f_mem, m_r=10)
+    ladder = {
+        "Baseline": dict(attention="vanilla", encoder="cosine"),
+        "+SAT": dict(attention="sat", encoder="cosine"),
+        "+LUT": dict(attention="sat", encoder="lut"),
+        "+NP(L)": dict(attention="sat", encoder="lut", prune_k=6),
+        "+NP(M)": dict(attention="sat", encoder="lut", prune_k=4),
+        "+NP(S)": dict(attention="sat", encoder="lut", prune_k=2),
+    }
+    return TGNConfig(**kw, **ladder[variant])
+
+
+VARIANTS = ("Baseline", "+SAT", "+LUT", "+NP(L)", "+NP(M)", "+NP(S)")

@@ -1,0 +1,82 @@
+"""Fig. 5 — latency & throughput vs batch size: baseline (vanilla TGN) vs
+the optimized StreamingEngine with NP(L/M/S), plus the real-time
+time-window replay (the paper's "every 15 minutes" experiment)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import save_json, timeit, paper_tgn_config
+from repro.core import tgn
+from repro.data import stream as stream_mod
+from repro.data import temporal_graph as tgd
+from repro.serving.engine import EngineConfig, StreamingEngine
+
+
+def sweep(batch_sizes=(25, 50, 100, 200, 400), n_edges: int = 3000,
+          f_mem: int = 100):
+    g = tgd.wikipedia_like(n_edges=n_edges)
+    ef = jnp.asarray(g.edge_feats)
+    rows = []
+
+    # baseline: vanilla TGN-attn through process_batch
+    cfg_b = paper_tgn_config("Baseline", g.cfg.n_nodes, g.n_edges,
+                             f_mem=f_mem)
+    params_b = tgn.init_params(jax.random.key(0), cfg_b)
+
+    for bs in batch_sizes:
+        batch = next(iter(stream_mod.fixed_count(
+            g, bs, window=slice(1000, 3000))))
+        b = tuple(jnp.asarray(x) for x in (batch.src, batch.dst, batch.eid,
+                                           batch.ts, batch.valid))
+        state = tgn.init_state(cfg_b)
+        fn = jax.jit(lambda p, s, bb: tgn.process_batch(
+            p, cfg_b, s, None, ef, *bb).emb_src)
+        t = timeit(fn, params_b, state, b, iters=5)
+        rows.append({"model": "Baseline", "batch": bs,
+                     "latency_ms": round(t * 1e3, 3),
+                     "throughput_eps": round(bs / t)})
+
+        for name, k in (("NP(L)", 6), ("NP(M)", 4), ("NP(S)", 2)):
+            cfg_s = paper_tgn_config(f"+{name}", g.cfg.n_nodes, g.n_edges,
+                                     f_mem=f_mem)
+            params_s = tgn.init_params(jax.random.key(1), cfg_s)
+            eng = StreamingEngine(EngineConfig(model=cfg_s), params_s, ef)
+            dev = tuple(jnp.asarray(x) for x in
+                        (batch.src, batch.dst, batch.eid, batch.ts,
+                         batch.valid))
+            t = timeit(lambda *a: eng._step(eng.params, eng.state, dev),
+                       iters=5)
+            rows.append({"model": name, "batch": bs,
+                         "latency_ms": round(t * 1e3, 3),
+                         "throughput_eps": round(bs / t)})
+    return rows
+
+
+def realtime_replay(window_s: float = 900.0, n_edges: int = 3000):
+    """Real-time latency: batches formed by wall-clock windows."""
+    g = tgd.wikipedia_like(n_edges=n_edges)
+    ef = jnp.asarray(g.edge_feats)
+    cfg = paper_tgn_config("+NP(M)", g.cfg.n_nodes, g.n_edges)
+    params = tgn.init_params(jax.random.key(2), cfg)
+    eng = StreamingEngine(EngineConfig(model=cfg), params, ef)
+    for batch, _out in eng.run(stream_mod.time_window(g, window_s, 256)):
+        pass
+    return eng.summary()
+
+
+def main(full: bool = False):
+    print("== Fig. 5: latency/throughput vs batch size ==")
+    rows = sweep()
+    for r in rows:
+        print(f"  {r['model']:9s} B={r['batch']:4d} "
+              f"lat={r['latency_ms']:8.3f}ms "
+              f"thpt={r['throughput_eps']:8d} E/s")
+    rt = realtime_replay()
+    print(f"-- real-time window replay (NP(M), 15-min windows): {rt}")
+    save_json("fig5.json", {"sweep": rows, "realtime": rt})
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Fig. 7 — accuracy/latency frontier: AP (from the table2 --ap ladder, or
+a quick re-train) against measured per-batch latency of each variant."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import (VARIANTS, load_json, paper_tgn_config,
+                               save_json, timeit)
+from repro.core import tgn
+from repro.data import stream as stream_mod
+from repro.data import temporal_graph as tgd
+from repro.serving.engine import EngineConfig, StreamingEngine
+
+
+def latencies(n_edges: int = 2000, batch: int = 200, f_mem: int = 100):
+    g = tgd.wikipedia_like(n_edges=n_edges)
+    ef = jnp.asarray(g.edge_feats)
+    b0 = next(iter(stream_mod.fixed_count(g, batch,
+                                          window=slice(1000, 2000))))
+    dev = tuple(jnp.asarray(x) for x in (b0.src, b0.dst, b0.eid, b0.ts,
+                                         b0.valid))
+    out = {}
+    for name in VARIANTS:
+        cfg = paper_tgn_config(name, g.cfg.n_nodes, g.n_edges, f_mem=f_mem)
+        params = tgn.init_params(jax.random.key(0), cfg)
+        if cfg.attention == "sat" and cfg.encoder == "lut":
+            eng = StreamingEngine(EngineConfig(model=cfg), params, ef)
+            t = timeit(lambda: eng._step(eng.params, eng.state, dev),
+                       iters=5)
+        else:
+            state = tgn.init_state(cfg)
+            fn = jax.jit(lambda p, s, bb: tgn.process_batch(
+                p, cfg, s, None, ef, *bb).emb_src)
+            t = timeit(fn, params, state, dev, iters=5)
+        out[name] = round(t * 1e3, 3)
+    return out
+
+
+def main(full: bool = False):
+    print("== Fig. 7: accuracy-latency frontier ==")
+    lat = latencies()
+    table2 = load_json("table2.json") or {}
+    aps = table2.get("ap")
+    for name in VARIANTS:
+        ap_s = f"AP={aps[name]:.4f}" if aps else "AP=(run table2 --ap)"
+        print(f"  {name:9s} latency={lat[name]:8.3f}ms  {ap_s}")
+    save_json("fig7.json", {"latency_ms": lat, "ap": aps})
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""§Roofline — read the dry-run JSONs and emit the per-(arch x shape) table:
+three roofline terms, dominant bottleneck, MODEL_FLOPS ratio, and a one-line
+what-would-move-it note. Single-pod cells only (per the assignment)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import save_json
+from repro.core import perf_model as pm
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                          "dryrun")
+
+
+def _advice(bound: str, r: dict) -> str:
+    ucr = r.get("useful_compute_ratio", 0)
+    if bound == "compute":
+        if ucr < 0.4:
+            return ("compute-bound with low useful ratio: cut remat "
+                    "recompute / causal-block waste")
+        return "compute-bound near useful peak: more chips or lower remat"
+    if bound == "memory":
+        return ("memory-bound: fuse elementwise chains, shrink remat "
+                "residual traffic, bf16 more activations")
+    return ("collective-bound: reshard to cut all-gathers (see "
+            "collectives_by_op), overlap with compute")
+
+
+def load_rows(multi_pod: bool = False):
+    rows = []
+    tag = "2pod" if multi_pod else "1pod"
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR,
+                                              f"*__{tag}.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if r["status"].startswith("skip"):
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "status": r["status"]})
+            continue
+        if r["status"] != "ok":
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "status": "FAIL"})
+            continue
+        rl = r["roofline"]
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "status": "ok",
+            "compute_s": rl["compute_s"], "memory_s": rl["memory_s"],
+            "collective_s": rl["collective_s"], "bound": rl["bound"],
+            "model_flops_per_device": r["model_flops_per_device"],
+            "useful_compute_ratio": r["useful_compute_ratio"],
+            "peak_gib": (r["memory"]["peak_bytes"] or 0) / 2 ** 30,
+            "advice": _advice(rl["bound"], r),
+        })
+    return rows
+
+
+def main(full: bool = False):
+    rows = load_rows(multi_pod=False)
+    if not rows:
+        print("== §Roofline: no dry-run results found; run "
+              "`python -m repro.launch.dryrun --arch all --shape all "
+              "--both-meshes --out results/dryrun` first ==")
+        return
+    print("== §Roofline (single-pod 16x16, per-device terms, seconds) ==")
+    print(f"{'arch':22s}{'shape':13s}{'compute':>10s}{'memory':>10s}"
+          f"{'collective':>11s}  {'bound':10s}{'useful':>7s}{'peakGiB':>8s}")
+    for r in rows:
+        if r["status"] != "ok":
+            print(f"{r['arch']:22s}{r['shape']:13s}  -> {r['status']}")
+            continue
+        print(f"{r['arch']:22s}{r['shape']:13s}"
+              f"{r['compute_s']:10.4f}{r['memory_s']:10.4f}"
+              f"{r['collective_s']:11.4f}  {r['bound']:10s}"
+              f"{r['useful_compute_ratio']:7.2f}{r['peak_gib']:8.2f}")
+    save_json("roofline.json", rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Run every benchmark (one per paper table/figure) and the roofline table.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+
+--full additionally trains the AP ladder (table2 --ap), which takes
+minutes; default mode is analytic + measured-performance only.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    full = "--full" in sys.argv
+    from benchmarks import (fig5_latency_throughput, fig6_perf_model,
+                            fig7_accuracy_latency, roofline,
+                            table1_case_study, table2_model_opts)
+    benches = [
+        ("table1_case_study", table1_case_study),
+        ("table2_model_opts", table2_model_opts),
+        ("fig5_latency_throughput", fig5_latency_throughput),
+        ("fig6_perf_model", fig6_perf_model),
+        ("fig7_accuracy_latency", fig7_accuracy_latency),
+        ("roofline", roofline),
+    ]
+    for name, mod in benches:
+        t0 = time.time()
+        print(f"\n######## {name} ########")
+        mod.main(full=full)
+        print(f"[{name}: {time.time()-t0:.1f}s]")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,116 @@
+"""Table I — case study: per-stage kMEM/kMAC (analytic, exact) and measured
+per-stage execution time of OUR implementation on this host.
+
+The paper profiles sample/memory/GNN/update on CPU/GPU; we reproduce the
+complexity accounting exactly (core/complexity.py) and measure the same
+four stages of our JAX implementation by timing separately-jitted stage
+functions over a warmed vertex state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import timeit, save_json
+from repro.core import complexity as cx
+from repro.core import mailbox, memory, tgn, updater
+from repro.data import stream as stream_mod
+from repro.data import temporal_graph as tgd
+
+
+def analytic_rows(dataset: str = "Wikipedia"):
+    f_feat, f_edge = cx.DATASETS[dataset]
+    cfg = cx.ComplexityConfig(f_feat=f_feat, f_edge=f_edge)
+    macs, mems = cx.stage_macs(cfg), cx.stage_mems(cfg)
+    rows = []
+    for stage in ("sample", "memory", "GNN", "update", "total"):
+        rows.append({
+            "stage": stage,
+            "kMEM": round(mems[stage] / 1e3, 2),
+            "MEM_pct": round(100 * mems[stage] / mems["total"], 1),
+            "kMAC": round(macs[stage] / 1e3, 1),
+            "MAC_pct": round(100 * macs[stage] / macs["total"], 1),
+        })
+    return rows
+
+
+def measured_stage_times(batch_size: int = 200, f_mem: int = 100):
+    """Per-stage wall time (us per dynamic node embedding) of our impl."""
+    g = tgd.wikipedia_like(n_edges=3000)
+    cfg = tgn.TGNConfig(n_nodes=g.cfg.n_nodes, n_edges=g.n_edges,
+                        f_edge=172, f_mem=f_mem, f_time=f_mem, f_emb=f_mem,
+                        m_r=10)
+    params = tgn.init_params(jax.random.key(0), cfg)
+    ef = jnp.asarray(g.edge_feats)
+    state = tgn.init_state(cfg)
+    # warm the state over the first half of the stream
+    for batch in stream_mod.fixed_count(g, batch_size,
+                                        window=slice(0, 1500)):
+        b = tuple(jnp.asarray(x) for x in (batch.src, batch.dst, batch.eid,
+                                           batch.ts, batch.valid))
+        state = tgn.process_batch(params, cfg, state, None, ef, *b).state
+
+    batch = next(iter(stream_mod.fixed_count(g, batch_size,
+                                             window=slice(1500, 3000))))
+    src = jnp.asarray(batch.src)
+    dst = jnp.asarray(batch.dst)
+    eid = jnp.asarray(batch.eid)
+    ts = jnp.asarray(batch.ts)
+    vids = jnp.concatenate([src, dst])
+    t_inst = jnp.concatenate([ts, ts])
+
+    @jax.jit
+    def stage_sample(state):
+        return mailbox.gather_neighbors(state, vids)
+
+    @jax.jit
+    def stage_memory(state):
+        return memory.update_memory(
+            params["gru"], params["time"], cfg.gru, state.mail[vids],
+            state.mail_ts[vids], state.mail_valid[vids],
+            state.memory[vids], state.last_update[vids])
+
+    @jax.jit
+    def stage_gnn(state):
+        h, _, _, _ = tgn._embed(params, cfg, state, None, ef, vids, t_inst)
+        return h
+
+    @jax.jit
+    def stage_update(state):
+        s_upd = state.memory[vids]  # value content irrelevant for timing
+        w = updater.last_write_wins(vids,
+                                    order=updater.interleave_order(
+                                        src.shape[0]))
+        mem_t = updater.commit(state.memory, vids, s_upd, w)
+        return mailbox.insert_neighbors(
+            state._replace(memory=mem_t), src, dst, eid, ts)
+
+    n_emb = 2 * batch_size
+    out = {}
+    for name, fn in (("sample", stage_sample), ("memory", stage_memory),
+                     ("GNN", stage_gnn), ("update", stage_update)):
+        out[name] = timeit(fn, state) / n_emb * 1e9  # ns per embedding
+    out["total"] = sum(out.values())
+    return out
+
+
+def main(full: bool = False):
+    print("== Table I: per-stage complexity (analytic, paper dims) ==")
+    for ds in ("Wikipedia", "Reddit", "GDELT"):
+        print(f"-- {ds} --")
+        for r in analytic_rows(ds):
+            print(f"  {r['stage']:7s} kMEM={r['kMEM']:6.2f} "
+                  f"({r['MEM_pct']:5.1f}%)  kMAC={r['kMAC']:7.1f} "
+                  f"({r['MAC_pct']:5.1f}%)")
+    print("-- measured per-stage time of our impl (ns/embedding, CPU) --")
+    times = measured_stage_times()
+    for k, v in times.items():
+        print(f"  {k:7s} {v:10.0f}")
+    save_json("table1.json",
+              {"analytic": {ds: analytic_rows(ds)
+                            for ds in ("Wikipedia", "Reddit", "GDELT")},
+               "measured_ns_per_embedding": times})
+
+
+if __name__ == "__main__":
+    main()

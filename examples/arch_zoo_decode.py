@@ -1,0 +1,22 @@
+"""Generate tokens with every assigned architecture (reduced configs):
+demonstrates the uniform family adapter + KV/ring/SSM/LRU cache handling.
+
+    PYTHONPATH=src python examples/arch_zoo_decode.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.models import lm_common
+from repro.serving import lm_serve
+
+prompts = jnp.asarray(np.random.RandomState(0).randint(0, 256, (2, 6)),
+                      jnp.int32)
+for arch in configs.all_archs():
+    cfg = configs.get(arch).smoke_config()
+    params = lm_common.init_params(jax.random.key(0), cfg)
+    out = lm_serve.generate(params, cfg, prompts % cfg.vocab,
+                            lm_serve.ServeConfig(max_new_tokens=8))
+    print(f"{arch:22s} tokens={tuple(out['tokens'].shape)} "
+          f"decode={out['decode_s_per_tok']*1e3:6.2f} ms/tok")

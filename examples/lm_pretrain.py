@@ -1,0 +1,19 @@
+"""End-to-end LM training driver example: pretrain a ~100M-parameter dense
+transformer for a few hundred steps on synthetic tokens, with fault-tolerant
+checkpointing — kill this script at any point and rerun: it resumes from the
+newest valid checkpoint with bitwise-identical results (deterministic data
+order; see tests/test_checkpoint.py::test_lm_restart_determinism).
+
+    PYTHONPATH=src python examples/lm_pretrain.py [--steps 200]
+"""
+import sys
+
+sys.argv = [sys.argv[0], "--mode", "lm", "--preset", "100m",
+            "--steps", "200", "--batch", "4", "--seq", "256",
+            "--ckpt", "/tmp/repro_lm100m", "--ckpt-every", "50",
+            "--log-every", "10"] + sys.argv[1:]
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    main()

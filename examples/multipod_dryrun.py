@@ -1,0 +1,20 @@
+"""Multi-pod dry-run example: compile one (arch x shape) cell on the
+production 2-pod x 256-chip mesh with 512 placeholder devices and print the
+roofline decomposition.
+
+    python examples/multipod_dryrun.py            # note: NOT via -m repro...
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import json
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.dryrun import run_cell
+
+result = run_cell("gemma3_12b", "decode_32k", multi_pod=True)
+print(json.dumps({k: v for k, v in result.items()
+                  if k not in ("per_device",)}, indent=2))
+print("collectives:", result["per_device"]["collectives_by_op"])

@@ -1,0 +1,36 @@
+"""Real-time streaming inference: the paper's Fig.-5-right experiment.
+
+Processes a temporal-graph stream in wall-clock windows through the
+optimized engine and reports per-window latency — the production deployment
+scenario (fraud screening on incoming transactions etc.).
+
+    PYTHONPATH=src python examples/streaming_inference.py
+"""
+import jax
+import numpy as np
+
+from repro.core import tgn
+from repro.data import stream, temporal_graph as tgd
+from repro.serving.engine import EngineConfig, StreamingEngine
+
+g = tgd.reddit_like(n_edges=4000)
+cfg = tgn.TGNConfig(n_nodes=g.cfg.n_nodes, n_edges=g.n_edges, f_edge=172,
+                    f_mem=32, f_time=32, f_emb=32, m_r=10,
+                    attention="sat", encoder="lut", prune_k=4)
+params = tgn.init_params(jax.random.key(0), cfg)
+engine = StreamingEngine(EngineConfig(model=cfg), params,
+                         jax.numpy.asarray(g.edge_feats))
+
+# 15-minute windows, capped at 256 edges per window
+for batch, (h_src, h_dst) in engine.run(stream.time_window(g, 900.0, 256)):
+    pass
+
+s = engine.summary()
+print(f"windows processed : {s['batches']}")
+print(f"mean latency      : {s['mean_latency_ms']:.2f} ms")
+print(f"p99 latency       : {s['p99_latency_ms']:.2f} ms")
+print(f"throughput        : {s['throughput_eps']:.0f} edges/s")
+
+lat = np.array([m["latency_s"] for m in engine.metrics[1:]]) * 1e3
+print(f"latency histogram (ms): min={lat.min():.2f} med={np.median(lat):.2f}"
+      f" max={lat.max():.2f}")

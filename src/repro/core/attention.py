@@ -1,0 +1,197 @@
+"""Temporal attention aggregators.
+
+Teacher — vanilla transformer-style temporal attention (Eq. 11-15):
+    f'_i = s_i + W_s f_i + b_s
+    q    = W_q [f'_i || Phi(0)] + b_q
+    K    = W_k [f'_j || e_ij || Phi(dt_j)] + b_k
+    V    = W_v [f'_j || e_ij || Phi(dt_j)] + b_v
+    h_i  = softmax(q K^T / sqrt(d)) V            (multi-head generalisation)
+
+Student — Simplified temporal Attention (SAT, Eq. 16):
+    alpha'(u) = softmax(a + W_t dt^u)            logits from timestamps ONLY
+followed by top-k neighbor pruning (§III-B) and a V-projection of just the
+surviving neighbors. The output transform (FTM analogue) is shared:
+    h_i = W_out [f'_i || h~_i] + b_out
+
+Both return their pre-softmax logits so the distillation loss (Eq. 17) can
+align student and teacher score distributions.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import FrozenConfig, dense_init
+from repro.core import time_encode as te
+from repro.core import pruning
+
+NEG_INF = pruning.NEG_INF
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig(FrozenConfig):
+    f_mem: int = 100
+    f_feat: int = 0          # static node feature dim (0 on Wikipedia/Reddit)
+    f_edge: int = 172
+    f_time: int = 100
+    f_emb: int = 100
+    n_heads: int = 2         # teacher heads (TGN default)
+    m_r: int = 10            # neighbor buffer width
+    prune_k: int | None = None   # SAT pruning budget; None = keep all m_r
+
+    @property
+    def d_kv_in(self) -> int:
+        return self.f_mem + self.f_edge + self.f_time
+
+    @property
+    def d_q_in(self) -> int:
+        return self.f_mem + self.f_time
+
+
+# ---------------------------------------------------------------------------
+# Shared input transform
+# ---------------------------------------------------------------------------
+
+
+def init_feat_proj(key: jax.Array, cfg: AttnConfig) -> dict:
+    p = {}
+    if cfg.f_feat > 0:
+        p["w_s"] = dense_init(key, (cfg.f_feat, cfg.f_mem))
+        p["b_s"] = jnp.zeros((cfg.f_mem,), jnp.float32)
+    return p
+
+
+def feat_proj(params: dict, s: jax.Array, f: jax.Array | None) -> jax.Array:
+    """f'_i = s_i + W_s f_i + b_s   (Eq. 11; identity when f_feat == 0)."""
+    if "w_s" in params and f is not None:
+        return s + f @ params["w_s"] + params["b_s"]
+    return s
+
+
+# ---------------------------------------------------------------------------
+# Teacher: vanilla temporal attention
+# ---------------------------------------------------------------------------
+
+
+def init_vanilla(key: jax.Array, cfg: AttnConfig) -> dict:
+    ks = jax.random.split(key, 6)
+    d = cfg.f_emb
+    return {
+        "feat": init_feat_proj(ks[0], cfg),
+        "w_q": dense_init(ks[1], (cfg.d_q_in, d)),
+        "b_q": jnp.zeros((d,), jnp.float32),
+        "w_k": dense_init(ks[2], (cfg.d_kv_in, d)),
+        "b_k": jnp.zeros((d,), jnp.float32),
+        "w_v": dense_init(ks[3], (cfg.d_kv_in, d)),
+        "b_v": jnp.zeros((d,), jnp.float32),
+        "w_out": dense_init(ks[4], (cfg.f_mem + d, cfg.f_emb)),
+        "b_out": jnp.zeros((cfg.f_emb,), jnp.float32),
+    }
+
+
+def vanilla_attention(params: dict, cfg: AttnConfig, time_params: dict,
+                      s_self: jax.Array, f_self: jax.Array | None,
+                      s_nbr: jax.Array, e_nbr: jax.Array, dt_nbr: jax.Array,
+                      valid: jax.Array):
+    """Teacher aggregator.
+
+    s_self (B, f_mem); s_nbr (B, m_r, f_mem); e_nbr (B, m_r, f_edge);
+    dt_nbr (B, m_r) time deltas (t_query - t_interaction); valid (B, m_r).
+    Returns (h (B, f_emb), logits (B, m_r) head-mean pre-softmax scores).
+    """
+    B, m_r = dt_nbr.shape
+    H = cfg.n_heads
+    fp = feat_proj(params["feat"], s_self, f_self)
+
+    phi0 = te.cosine_encode(time_params, jnp.zeros((B,), jnp.float32))
+    q_in = jnp.concatenate([fp, phi0], axis=-1)
+    q = (q_in @ params["w_q"] + params["b_q"]).reshape(B, H, -1)
+
+    phi = te.cosine_encode(time_params, dt_nbr)
+    kv_in = jnp.concatenate([s_nbr, e_nbr, phi], axis=-1)
+    k = (kv_in @ params["w_k"] + params["b_k"]).reshape(B, m_r, H, -1)
+    v = (kv_in @ params["w_v"] + params["b_v"]).reshape(B, m_r, H, -1)
+
+    d_h = q.shape[-1]
+    scores = jnp.einsum("bhd,bnhd->bhn", q, k) / math.sqrt(d_h)
+    attn = pruning.masked_softmax(scores, valid[:, None, :])
+    agg = jnp.einsum("bhn,bnhd->bhd", attn, v).reshape(B, -1)
+
+    h = jnp.concatenate([fp, agg], axis=-1) @ params["w_out"] + params["b_out"]
+    logits = jnp.mean(scores, axis=1)  # (B, m_r) for distillation
+    return h, logits
+
+
+# ---------------------------------------------------------------------------
+# Student: SAT (+ optional pruning)
+# ---------------------------------------------------------------------------
+
+
+def init_sat(key: jax.Array, cfg: AttnConfig) -> dict:
+    ks = jax.random.split(key, 4)
+    d = cfg.f_emb
+    return {
+        "feat": init_feat_proj(ks[0], cfg),
+        "a": jnp.zeros((cfg.m_r,), jnp.float32),          # shared logit vector
+        "w_t": dense_init(ks[1], (cfg.m_r, cfg.m_r), scale=0.01),
+        "w_v": dense_init(ks[2], (cfg.d_kv_in, d)),
+        "b_v": jnp.zeros((d,), jnp.float32),
+        "w_out": dense_init(ks[3], (cfg.f_mem + d, cfg.f_emb)),
+        "b_out": jnp.zeros((cfg.f_emb,), jnp.float32),
+    }
+
+
+def sat_logits(params: dict, dt_nbr: jax.Array) -> jax.Array:
+    """alpha-bar' = a + W_t dt  (Eq. 16). dt is log1p-compressed for numeric
+    stability (time spans decades; raw dt saturates the linear map — a
+    numerics adaptation recorded in DESIGN.md)."""
+    dtf = jnp.log1p(jnp.maximum(dt_nbr, 0.0))
+    return params["a"] + dtf @ params["w_t"].T
+
+
+def sat_attention(params: dict, cfg: AttnConfig, time_params: dict,
+                  s_self: jax.Array, f_self: jax.Array | None,
+                  s_nbr: jax.Array, e_nbr: jax.Array, dt_nbr: jax.Array,
+                  valid: jax.Array, *, encoder: str = "cosine",
+                  lut_folded: dict | None = None):
+    """Student aggregator with prune-then-fetch.
+
+    NOTE on dataflow: in the streaming engine the top-k indices are computed
+    BEFORE s_nbr/e_nbr are gathered from the sharded tables (that is the whole
+    point — see serving/engine.py); this function also accepts pre-gathered
+    full buffers for the training path, pruning them internally so both paths
+    share one definition. Returns (h, full logits (B, m_r)).
+    """
+    B, m_r = dt_nbr.shape
+    fp = feat_proj(params["feat"], s_self, f_self)
+    logits = sat_logits(params, dt_nbr)
+
+    if cfg.prune_k is not None and cfg.prune_k < m_r:
+        idx, sel_logits, sel_valid = pruning.topk_select(logits, valid, cfg.prune_k)
+        s_sel = pruning.gather_rows(s_nbr, idx)
+        e_sel = pruning.gather_rows(e_nbr, idx)
+        dt_sel = jnp.take_along_axis(dt_nbr, idx, axis=1)
+        attn = pruning.masked_softmax(sel_logits, sel_valid)
+    else:
+        s_sel, e_sel, dt_sel, sel_valid = s_nbr, e_nbr, dt_nbr, valid
+        attn = pruning.masked_softmax(logits, valid)
+
+    if encoder == "lut":
+        folded = lut_folded
+        if folded is None:
+            folded = te.fold_projection(
+                time_params, params["w_v"][cfg.f_mem + cfg.f_edge:])
+        v = (jnp.concatenate([s_sel, e_sel], axis=-1)
+             @ params["w_v"][:cfg.f_mem + cfg.f_edge]
+             + te.lut_encode(folded, dt_sel) + params["b_v"])
+    else:
+        phi = te.cosine_encode(time_params, dt_sel)
+        kv_in = jnp.concatenate([s_sel, e_sel, phi], axis=-1)
+        v = kv_in @ params["w_v"] + params["b_v"]
+
+    agg = jnp.einsum("bn,bnd->bd", attn, v)
+    h = jnp.concatenate([fp, agg], axis=-1) @ params["w_out"] + params["b_out"]
+    return h, logits

@@ -1,0 +1,101 @@
+"""Knowledge distillation (Eq. 17) + self-supervised link-prediction losses.
+
+The student (SAT [+LUT] [+NP]) is trained under two signals:
+
+  1. self-supervision from temporal edges — BCE on positive (src,dst) pairs
+     vs negative (src, random-dst) pairs, using the downstream link head;
+  2. a soft cross-entropy between the student's simplified attention logits
+     alpha-bar' = a + W_t * dt and the teacher's vanilla attention logits
+     alpha-bar (Eq. 17), temperature T (paper uses T=1):
+
+         l_a = - sum_v Softmax(abar'(v)/T) . log Softmax(abar(v)/T)
+
+     (The paper writes the product of two softmaxes; the standard KD form is
+     teacher-prob . log student-prob — we use the standard form, with the
+     teacher distribution as the target, which is what "encourage the student
+     to mimic the teacher" requires. Invalid neighbor slots are masked.)
+
+Teacher and student see identical vertex-state trajectories during
+distillation: the teacher runs on its OWN state (vanilla model), the student
+on its own; logits are aligned per edge instance over the shared neighbor
+ring-buffer ordering (most-recent first), which is identical for both because
+the neighbor table dynamics do not depend on model parameters.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pruning import NEG_INF
+
+
+def masked_log_softmax(logits: jax.Array, valid: jax.Array) -> jax.Array:
+    masked = jnp.where(valid, logits, NEG_INF)
+    m = jnp.max(masked, axis=-1, keepdims=True)
+    shifted = masked - jax.lax.stop_gradient(m)
+    lse = jnp.log(jnp.sum(jnp.exp(shifted) * valid, axis=-1, keepdims=True)
+                  + 1e-30)
+    return shifted - lse
+
+
+def attn_distill_loss(student_logits: jax.Array, teacher_logits: jax.Array,
+                      valid: jax.Array, temperature: float = 1.0) -> jax.Array:
+    """Eq. 17: soft cross-entropy between attention score distributions.
+
+    student_logits, teacher_logits, valid: (B, m_r). Rows with no valid
+    neighbor contribute zero. Teacher side is stop-gradient (it is a frozen
+    teacher during distillation anyway, but this makes the intent explicit).
+    """
+    t = jnp.asarray(temperature, jnp.float32)
+    teacher_p = jnp.where(
+        valid,
+        jax.nn.softmax(
+            jnp.where(valid, jax.lax.stop_gradient(teacher_logits) / t,
+                      NEG_INF), axis=-1),
+        0.0)
+    student_logp = masked_log_softmax(student_logits / t, valid)
+    per_row = -jnp.sum(teacher_p * jnp.where(valid, student_logp, 0.0), axis=-1)
+    has_valid = jnp.any(valid, axis=-1)
+    denom = jnp.maximum(jnp.sum(has_valid), 1)
+    # T^2 rescaling keeps gradient magnitude comparable across temperatures
+    # (Hinton et al. 2015).
+    return (t * t) * jnp.sum(jnp.where(has_valid, per_row, 0.0)) / denom
+
+
+def bce_link_loss(pos_scores: jax.Array, neg_scores: jax.Array) -> jax.Array:
+    """Self-supervised temporal link prediction BCE (Section II)."""
+    return 0.5 * (jnp.mean(jax.nn.softplus(-pos_scores))
+                  + jnp.mean(jax.nn.softplus(neg_scores)))
+
+
+def distill_loss(student_logits: jax.Array, teacher_logits: jax.Array,
+                 valid: jax.Array, pos_scores: jax.Array,
+                 neg_scores: jax.Array, *, temperature: float = 1.0,
+                 kd_weight: float = 1.0):
+    """Combined student objective: link BCE + kd_weight * l_a.
+
+    Returns (total, dict of components).
+    """
+    l_link = bce_link_loss(pos_scores, neg_scores)
+    l_a = attn_distill_loss(student_logits, teacher_logits, valid,
+                            temperature)
+    total = l_link + kd_weight * l_a
+    return total, {"link": l_link, "kd": l_a, "total": total}
+
+
+def average_precision(pos_scores: jax.Array, neg_scores: jax.Array) -> jax.Array:
+    """AP for balanced pos/neg link prediction (the paper's accuracy metric).
+
+    Pure-jnp implementation (no sklearn): sort all scores descending and
+    compute mean precision at each positive hit.
+    """
+    scores = jnp.concatenate([pos_scores, neg_scores])
+    labels = jnp.concatenate([jnp.ones_like(pos_scores),
+                              jnp.zeros_like(neg_scores)])
+    order = jnp.argsort(-scores)
+    lab = labels[order]
+    cum_tp = jnp.cumsum(lab)
+    ranks = jnp.arange(1, lab.shape[0] + 1, dtype=jnp.float32)
+    precision_at = cum_tp / ranks
+    n_pos = jnp.maximum(jnp.sum(lab), 1.0)
+    return jnp.sum(precision_at * lab) / n_pos

@@ -1,0 +1,154 @@
+"""Vertex state tables: Mailbox, Memory Table, Neighbor (ring-buffer) Table.
+
+These are the on-device analogues of the paper's Graph Storage (§IV-A):
+
+  - Vertex Memory Table   {s_v}      (V, f_mem)  float32
+  - Vertex Mailbox        {m_v}      raw message components + timestamp; the
+    time-encoding of dt is applied lazily at UPDT time (so the stored mail is
+    ``s_src || s_dst || f_e`` plus ``mail_ts``), matching the paper's cached
+    messages whose dt is measured when consumed.
+  - Vertex Neighbor Table {N_mr(v)}  ring buffer of the m_r most-recent
+    neighbors: ids, timestamps and edge-feature pointers. This is the FIFO
+    hardware sampler (§IV, DESIGN.md §2): insertion is O(1) via a rotating
+    cursor, and "sample most recent m_r" is just "read the buffer".
+
+All tables are dense jnp arrays so the whole structure shards over the
+(`pod`,`data`) mesh axes by vertex id and updates are scatters.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import FrozenConfig
+
+
+class VertexState(NamedTuple):
+    """The complete per-vertex dynamic state (a pytree; shardable)."""
+    memory: jax.Array        # (V, f_mem) float32
+    last_update: jax.Array   # (V,) float32 — timestamp of last memory update
+    mail: jax.Array          # (V, f_mail_raw) float32 — s_src||s_dst||f_e
+    mail_ts: jax.Array       # (V,) float32 — timestamp of cached message
+    mail_valid: jax.Array    # (V,) bool — has this vertex any cached message
+    nbr_ids: jax.Array       # (V, m_r) int32 — ring buffer of neighbor ids
+    nbr_ts: jax.Array        # (V, m_r) float32 — interaction timestamps
+    nbr_eid: jax.Array       # (V, m_r) int32 — edge-feature row pointers
+    nbr_cursor: jax.Array    # (V,) int32 — rotating write cursor
+
+
+@dataclasses.dataclass(frozen=True)
+class TableConfig(FrozenConfig):
+    n_nodes: int = 10_000
+    f_mem: int = 100
+    f_edge: int = 172
+    m_r: int = 10            # neighbor buffer width (paper samples 10)
+
+
+def init_state(cfg: TableConfig) -> VertexState:
+    V, mr = cfg.n_nodes, cfg.m_r
+    f_mail_raw = 2 * cfg.f_mem + cfg.f_edge
+    return VertexState(
+        memory=jnp.zeros((V, cfg.f_mem), jnp.float32),
+        last_update=jnp.zeros((V,), jnp.float32),
+        mail=jnp.zeros((V, f_mail_raw), jnp.float32),
+        mail_ts=jnp.zeros((V,), jnp.float32),
+        mail_valid=jnp.zeros((V,), bool),
+        nbr_ids=jnp.zeros((V, mr), jnp.int32),
+        nbr_ts=jnp.full((V, mr), -1.0, jnp.float32),
+        nbr_eid=jnp.zeros((V, mr), jnp.int32),
+        nbr_cursor=jnp.zeros((V,), jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Neighbor ring buffer (FIFO hardware sampler analogue)
+# ---------------------------------------------------------------------------
+
+
+def insert_neighbors(state: VertexState, src: jax.Array, dst: jax.Array,
+                     eid: jax.Array, ts: jax.Array,
+                     valid: jax.Array | None = None) -> VertexState:
+    """Insert edges (src->dst and dst->src) into the ring buffers.
+
+    ``src, dst, eid, ts``: (B,). Each edge contributes dst to src's buffer and
+    src to dst's buffer, at the vertex's rotating cursor. Because a vertex may
+    appear several times in one batch, insertion must be *serial in batch
+    order* per vertex; we realise that with a cumulative per-vertex occurrence
+    count so every insert in the batch lands in a distinct slot — identical
+    result to the FIFO pushing edges one by one.
+
+    ``valid``: optional (B,) bool — padding rows are dropped (their scatter
+    indices are redirected out of bounds, which jit scatters silently drop).
+    """
+    V = state.nbr_ids.shape[0]
+    B = src.shape[0]
+    ids = jnp.concatenate([src, dst])                    # vertex being appended to
+    nbrs = jnp.concatenate([dst, src])                   # the neighbor id stored
+    eids = jnp.concatenate([eid, eid])
+    tss = jnp.concatenate([ts, ts])
+    if valid is not None:
+        vv = jnp.concatenate([valid, valid])
+        ids = jnp.where(vv, ids, V)                      # OOB -> dropped
+    n = ids.shape[0]
+
+    # occurrence index of each id within the batch in CHRONOLOGICAL order
+    # (edge e's src entry precedes its dst entry; edges in batch order) —
+    # the concat layout puts all src rows first, so array order is wrong
+    # for vertices hit from both sides.
+    occ = _occurrence_index(ids, updater_order(B))
+    slot = (state.nbr_cursor[ids] + occ) % state.nbr_ids.shape[1]
+
+    # Scatter: duplicate (id, slot) pairs cannot collide because occ is unique
+    # per (id, occurrence).
+    nbr_ids = state.nbr_ids.at[ids, slot].set(nbrs.astype(jnp.int32))
+    nbr_ts = state.nbr_ts.at[ids, slot].set(tss.astype(jnp.float32))
+    nbr_eid = state.nbr_eid.at[ids, slot].set(eids.astype(jnp.int32))
+
+    counts = jnp.zeros_like(state.nbr_cursor).at[ids].add(1)
+    cursor = (state.nbr_cursor + counts) % (2 ** 30)
+    return state._replace(nbr_ids=nbr_ids, nbr_ts=nbr_ts, nbr_eid=nbr_eid,
+                          nbr_cursor=cursor)
+
+
+def updater_order(B: int) -> jax.Array:
+    """Chronological positions for the concat([src, dst]) layout."""
+    return jnp.concatenate([2 * jnp.arange(B), 2 * jnp.arange(B) + 1])
+
+
+def _occurrence_index(ids: jax.Array,
+                      order: jax.Array | None = None) -> jax.Array:
+    """occ[i] = number of j with ids[j]==ids[i] and order[j] < order[i].
+    O(B^2) compare — B is a processing micro-batch (~1e2-1e3), and this
+    lowers to one masked reduce."""
+    n = ids.shape[0]
+    if order is None:
+        order = jnp.arange(n)
+    same = ids[None, :] == ids[:, None]
+    before = order[None, :] < order[:, None]
+    return jnp.sum(same & before, axis=1).astype(jnp.int32)
+
+
+def gather_neighbors(state: VertexState, vids: jax.Array):
+    """Read the ring buffer for a batch of vertices.
+
+    Returns (nbr_ids, nbr_ts, nbr_eid, valid_mask), each (B, m_r), ordered by
+    buffer slot age: slot (cursor-1) is the most recent. We roll each row so
+    output column 0 = most recent, matching the paper's timestamp-sorted
+    neighbor lists (descending recency).
+    """
+    ids = state.nbr_ids[vids]
+    ts = state.nbr_ts[vids]
+    eid = state.nbr_eid[vids]
+    cur = state.nbr_cursor[vids]
+    mr = ids.shape[1]
+    # roll so that most-recent (cursor-1) comes first, then cursor-2, ...
+    col = jnp.arange(mr)
+    src_slot = (cur[:, None] - 1 - col) % mr
+    ids = jnp.take_along_axis(ids, src_slot, axis=1)
+    ts = jnp.take_along_axis(ts, src_slot, axis=1)
+    eid = jnp.take_along_axis(eid, src_slot, axis=1)
+    valid = ts >= 0.0
+    return ids, ts, eid, valid

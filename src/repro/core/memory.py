@@ -1,0 +1,130 @@
+"""Message construction (Eq. 4-5) and the GRU memory updater (Eq. 7-10).
+
+The GRU maps an aggregated message m̄ (input) and the previous node memory s
+(hidden state) to the updated memory:
+
+    r = sigmoid(W_ir m̄ + b_ir + W_hr s + b_hr)
+    z = sigmoid(W_iz m̄ + b_iz + W_hz s + b_hz)
+    n = tanh  (W_in m̄ + b_in + r * (W_hn s + b_hn))
+    s' = (1 - z) * n + z * s
+
+Weights are stored packed: W_i (f_mail, 3*f_mem), W_h (f_mem, 3*f_mem) with
+gate order [r | z | n] — one MXU matmul per projection instead of three
+(DESIGN.md §2, the Pallas kernel `kernels/gru_cell.py` fuses the rest).
+
+The message is m = s_self || s_other || f_e || Phi(dt)  (Eq. 4-5); the mailbox
+stores the raw part (s_self || s_other || f_e) and the timestamp, and Phi(dt)
+is appended at consume time. With the LUT encoder the time contribution is
+folded: instead of concatenating Phi(dt) and multiplying by the last f_time
+rows of W_i, we add ``(table @ W_i[time rows])[bucket(dt)]`` — one row fetch.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import FrozenConfig, dense_init
+from repro.core import time_encode as te
+
+
+@dataclasses.dataclass(frozen=True)
+class GRUConfig(FrozenConfig):
+    f_mem: int = 100
+    f_edge: int = 172
+    f_time: int = 100
+
+    @property
+    def f_mail_raw(self) -> int:
+        return 2 * self.f_mem + self.f_edge
+
+    @property
+    def f_mail(self) -> int:
+        return self.f_mail_raw + self.f_time
+
+
+def init_gru(key: jax.Array, cfg: GRUConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "w_i": dense_init(k1, (cfg.f_mail, 3 * cfg.f_mem)),
+        "w_h": dense_init(k2, (cfg.f_mem, 3 * cfg.f_mem)),
+        "b_i": jnp.zeros((3 * cfg.f_mem,), jnp.float32),
+        "b_h": jnp.zeros((3 * cfg.f_mem,), jnp.float32),
+    }
+
+
+def gru_cell(params: dict, mail: jax.Array, s: jax.Array) -> jax.Array:
+    """Plain-JAX GRU cell. mail: (B, f_mail), s: (B, f_mem) -> (B, f_mem).
+
+    The Pallas production path is kernels/ops.gru_cell; this function is the
+    algorithmic definition used by tests and the CPU path.
+    """
+    gi = mail @ params["w_i"] + params["b_i"]
+    gh = s @ params["w_h"] + params["b_h"]
+    f_mem = s.shape[-1]
+    i_r, i_z, i_n = gi[..., :f_mem], gi[..., f_mem:2 * f_mem], gi[..., 2 * f_mem:]
+    h_r, h_z, h_n = gh[..., :f_mem], gh[..., f_mem:2 * f_mem], gh[..., 2 * f_mem:]
+    r = jax.nn.sigmoid(i_r + h_r)
+    z = jax.nn.sigmoid(i_z + h_z)
+    n = jnp.tanh(i_n + r * h_n)
+    return (1.0 - z) * n + z * s
+
+
+def gru_cell_lut(params: dict, mail_raw: jax.Array, time_rows: jax.Array,
+                 s: jax.Array) -> jax.Array:
+    """GRU cell with the time contribution pre-projected (LUT-fused path).
+
+    ``mail_raw``: (B, f_mail_raw) — message without the time encoding.
+    ``time_rows``: (B, 3*f_mem) — LUT rows already folded through
+    W_i[time slice] (see time_encode.fold_projection); added to the input
+    projection directly, eliminating the (B,f_time)x(f_time,3*f_mem) matmul.
+    """
+    n_raw = mail_raw.shape[-1]
+    gi = mail_raw @ params["w_i"][:n_raw] + params["b_i"] + time_rows
+    gh = s @ params["w_h"] + params["b_h"]
+    f_mem = s.shape[-1]
+    i_r, i_z, i_n = gi[..., :f_mem], gi[..., f_mem:2 * f_mem], gi[..., 2 * f_mem:]
+    h_r, h_z, h_n = gh[..., :f_mem], gh[..., f_mem:2 * f_mem], gh[..., 2 * f_mem:]
+    r = jax.nn.sigmoid(i_r + h_r)
+    z = jax.nn.sigmoid(i_z + h_z)
+    n = jnp.tanh(i_n + r * h_n)
+    return (1.0 - z) * n + z * s
+
+
+def build_mail_raw(s_self: jax.Array, s_other: jax.Array,
+                   f_e: jax.Array) -> jax.Array:
+    """Raw cached message (Eq. 4-5 minus the time encoding): (B, f_mail_raw)."""
+    return jnp.concatenate([s_self, s_other, f_e], axis=-1)
+
+
+def update_memory(gru_params: dict, time_params: dict, cfg: GRUConfig,
+                  mail_raw: jax.Array, mail_ts: jax.Array,
+                  mail_valid: jax.Array, s: jax.Array, last_update: jax.Array,
+                  *, encoder: str = "cosine",
+                  lut_folded: dict | None = None):
+    """Consume cached messages: s' = UPDT(mail, s).  (Alg. 1 lines 3-5.)
+
+    dt = mail_ts - last_update (time between the last memory write and the
+    cached message). Vertices without a valid mail keep their memory.
+    Returns (s_new, last_update_new).
+    """
+    dt = mail_ts - last_update
+    if encoder == "cosine":
+        phi = te.cosine_encode(time_params, dt)
+        mail = jnp.concatenate([mail_raw, phi], axis=-1)
+        s_new = gru_cell(gru_params, mail, s)
+    elif encoder == "lut":
+        folded = lut_folded
+        if folded is None:
+            # fold on the fly (training path; inference precomputes once)
+            folded = te.fold_projection(
+                time_params, gru_params["w_i"][cfg.f_mail_raw:])
+        time_rows = te.lut_encode(folded, dt)
+        s_new = gru_cell_lut(gru_params, mail_raw, time_rows, s)
+    else:
+        raise ValueError(f"unknown encoder {encoder!r}")
+    ok = mail_valid[:, None]
+    s_out = jnp.where(ok, s_new, s)
+    lu_out = jnp.where(mail_valid, mail_ts, last_update)
+    return s_out, lu_out

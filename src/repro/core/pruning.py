@@ -1,0 +1,41 @@
+"""Temporal neighbor pruning (§III-B): score-then-fetch.
+
+Because SAT logits depend only on timestamps, the top-k neighbor subset is
+known *before* any feature/memory gather — computation and HBM traffic then
+scale with the pruning budget k instead of the buffer width m_r. NP(L/M/S)
+in the paper are k = 6/4/2 with m_r = 10.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def topk_select(logits: jax.Array, valid: jax.Array, k: int):
+    """Select the k highest-logit valid neighbors.
+
+    logits, valid: (B, m_r). Returns (idx, sel_logits, sel_valid):
+      idx        (B, k) int32 — positions into the m_r axis
+      sel_logits (B, k) — logits of the selected slots (NEG_INF where invalid)
+      sel_valid  (B, k) bool — whether the selected slot was a valid neighbor
+    """
+    masked = jnp.where(valid, logits, NEG_INF)
+    sel_logits, idx = jax.lax.top_k(masked, k)
+    sel_valid = jnp.take_along_axis(valid, idx, axis=1)
+    return idx.astype(jnp.int32), sel_logits, sel_valid
+
+
+def masked_softmax(logits: jax.Array, valid: jax.Array) -> jax.Array:
+    """Softmax over valid entries; rows with zero valid entries return zeros."""
+    masked = jnp.where(valid, logits, NEG_INF)
+    m = jnp.max(masked, axis=-1, keepdims=True)
+    e = jnp.exp(masked - jax.lax.stop_gradient(m)) * valid
+    z = jnp.sum(e, axis=-1, keepdims=True)
+    return jnp.where(z > 0, e / jnp.maximum(z, 1e-30), 0.0)
+
+
+def gather_rows(x: jax.Array, idx: jax.Array) -> jax.Array:
+    """Gather (B, m_r, d) -> (B, k, d) rows by per-row indices (B, k)."""
+    return jnp.take_along_axis(x, idx[..., None], axis=1)

@@ -1,0 +1,102 @@
+"""Chronological Updater (§IV-B) — TPU adaptation.
+
+The paper's Updater is a fully-associative cache with rotating write pointers:
+CUs emit updated vertex state round-robin; a commit pointer drains lines in
+chronological order; a newer uncommitted update to the same vertex
+*invalidates* the older line. Net semantics per processing batch:
+
+    for each vertex touched by the batch, exactly the CHRONOLOGICALLY LAST
+    update survives; commits happen in chronological order.
+
+On a SIMD machine we realise identical semantics with a vectorized
+last-write-wins reduction (DESIGN.md §2): compute, for every batch row, whether
+it is the final occurrence of its vertex id, then scatter only the winners.
+Because winners have unique vertex ids the scatter is collision-free and
+order-independent — chronology is preserved by construction. Property tests
+(tests/test_updater.py) check equivalence against a serial replay oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def last_write_wins(ids: jax.Array, valid: jax.Array | None = None,
+                    order: jax.Array | None = None) -> jax.Array:
+    """Winner mask: True where row i is the chronologically-last valid
+    occurrence of ids[i].
+
+    ``ids``: (B,) int — vertex ids. ``order``: optional (B,) int giving each
+    row's chronological position (defaults to array order). Needed because
+    process_batch lays rows out as concat([src, dst]): edge e's dst row sits
+    B rows after its src row, so array order is NOT chronological —
+    callers pass order = concat([2*arange(B), 2*arange(B)+1]).
+    ``valid``: optional (B,) bool — rows excluded from the race entirely.
+
+    O(B^2) masked reduce; B is a processing micro-batch. A sort-based
+    O(B log B) variant is ``last_write_wins_sorted`` for large batches.
+    """
+    n = ids.shape[0]
+    if order is None:
+        order = jnp.arange(n)
+    if valid is None:
+        valid = jnp.ones((n,), bool)
+    same = (ids[None, :] == ids[:, None]) & valid[None, :]
+    eff = jnp.where(same, order[None, :], -1)
+    last = jnp.max(eff, axis=1)            # last valid occurrence of ids[i]
+    return (order == last) & valid
+
+
+def last_write_wins_sorted(ids: jax.Array, valid: jax.Array | None = None,
+                           order: jax.Array | None = None) -> jax.Array:
+    """O(B log B) winner mask via sort by (id, chronological order)."""
+    n = ids.shape[0]
+    if order is None:
+        order = jnp.arange(n)
+    if valid is None:
+        valid = jnp.ones((n,), bool)
+    # Invalid rows get a sentinel id so they never win their group.
+    sent = jnp.where(valid, ids, jnp.iinfo(jnp.int32).max)
+    perm = jnp.lexsort((order, sent))               # group ids, chron inside
+    sorted_ids = sent[perm]
+    # winner within sorted order: last element of each id-group
+    next_differs = jnp.concatenate(
+        [sorted_ids[1:] != sorted_ids[:-1], jnp.ones((1,), bool)])
+    winner_sorted = next_differs & (sorted_ids != jnp.iinfo(jnp.int32).max)
+    return jnp.zeros((n,), bool).at[perm].set(winner_sorted)
+
+
+def interleave_order(B: int) -> jax.Array:
+    """Chronological positions for concat([src, dst]) row layout: edge e's
+    src row precedes its dst row, edges in batch order."""
+    return jnp.concatenate([2 * jnp.arange(B), 2 * jnp.arange(B) + 1])
+
+
+def commit(table: jax.Array, ids: jax.Array, values: jax.Array,
+           winners: jax.Array) -> jax.Array:
+    """Scatter winner rows into ``table`` (V, ...). Losers' ids are redirected
+    to row ``drop`` trick-free: we use where-masked ids pointing at their own
+    current value (id kept, value kept) — simpler: scatter with winner values,
+    losers write the row's existing value back (no-op write).
+
+    To stay O(B) and avoid a gather of existing rows, losers are instead
+    redirected to a scratch row appended at index V; callers never see it
+    because we slice it off. This keeps the scatter collision-free AND
+    side-effect-free for losers.
+    """
+    V = table.shape[0]
+    safe_ids = jnp.where(winners, ids, V)  # losers -> scratch row
+    scratch = jnp.zeros((1,) + table.shape[1:], table.dtype)
+    ext = jnp.concatenate([table, scratch], axis=0)
+    ext = ext.at[safe_ids].set(values.astype(table.dtype))
+    return ext[:V]
+
+
+def commit_scalar(table: jax.Array, ids: jax.Array, values: jax.Array,
+                  winners: jax.Array) -> jax.Array:
+    """commit() for (V,)-shaped tables."""
+    V = table.shape[0]
+    safe_ids = jnp.where(winners, ids, V)
+    ext = jnp.concatenate([table, jnp.zeros((1,), table.dtype)])
+    ext = ext.at[safe_ids].set(values.astype(table.dtype))
+    return ext[:V]

@@ -1,0 +1,40 @@
+"""Elastic scaling: resume the same logical job on a different topology.
+
+Because checkpoints are stored as full logical arrays (checkpoint.py) and
+shardings are a pure function of (param tree, mesh) (sharding.py), changing
+the chip count is just: build the new mesh -> recompute specs -> restore
+with the new NamedShardings. ``remesh`` does the same for live arrays
+(device-to-device through host; a real multi-host deployment would use
+jax.device_put with donation across slices).
+
+Straggler/failure model (DESIGN.md §4): data order is a pure function of
+(seed, step), so a replacement worker reproduces exactly the shard the dead
+worker would have consumed — restart-consistency is property-tested in
+tests/test_checkpoint.py.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+from repro.distributed import checkpoint as ckpt
+from repro.distributed import sharding as shd
+
+PyTree = Any
+
+
+def remesh(tree: PyTree, new_mesh, spec_tree: PyTree) -> PyTree:
+    """Move live arrays onto a new mesh with new specs."""
+    shardings = shd.make_shardings(new_mesh, spec_tree)
+    return jax.tree.map(
+        lambda x, s: jax.device_put(jax.device_get(x), s), tree, shardings)
+
+
+def resume(root: str, tree_like: PyTree, new_mesh, mode: str,
+           step: int | None = None):
+    """Restore a checkpoint onto ``new_mesh`` (any compatible topology)."""
+    n_model = new_mesh.shape.get("model", 1)
+    specs = shd.param_specs(tree_like, mode, n_model)
+    shardings = shd.make_shardings(new_mesh, specs)
+    return ckpt.restore(root, tree_like, step=step, shardings=shardings)

@@ -1,0 +1,253 @@
+"""Sharding rules: parameter-path patterns -> PartitionSpecs.
+
+Two weight layouts, selected per architecture by size (configs set
+``shard_mode``):
+
+  * ``tp``     — Megatron-style: weights replicated over the DP axes,
+                 tensor-parallel over ``model``; optimizer moments
+                 additionally shard over ``data`` (ZeRO-1).
+  * ``fsdp2d`` — 2-D sharded weights (data x model) for models whose
+                 parameters cannot be DP-replicated (dbrx-132B, grok-314B);
+                 XLA inserts the per-layer all-gathers (ZeRO-3 semantics).
+
+Leaf-name conventions come from models/layers.py. Stacked scan dims (leading
+``n_blocks`` axes under blocks./layers./enc./dec.) are absorbed by
+left-padding the spec with None up to the leaf rank.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+# (regex on dot-path, tp spec, fsdp2d spec) — first match wins; specs are for
+# the trailing dims of the logical weight (leading scan dims padded None).
+_RULES = [
+    # MoE experts (E, D, F) / (E, F, D): EP over model when E divides it,
+    # else TP inside the expert — decided at runtime in _moe_spec.
+    (r"\.router$", P(), P()),
+    (r"moe\.w_(gate|up)$", "moe_in", "moe_in"),
+    (r"moe\.w_down$", "moe_out", "moe_out"),
+    # embeddings
+    (r"\.embed$", P("model", None), P("model", "data")),
+    (r"\.unembed$", P(None, "model"), P("data", "model")),
+    (r"\.pos_dec$", P(), P()),
+    # attention / mlp / recurrent projections: (D_in, D_out) column-parallel
+    (r"\.(wq|wk|wv|w_gate|w_up|in_proj|w_gate_in|w_main_in)$",
+     P(None, "model"), P("data", "model")),
+    # row-parallel back-projections: (D_out, D_in)
+    (r"\.(wo|w_down|out_proj|w_out)$", P("model", None), P("model", "data")),
+    # RG-LRU block-diagonal gates (H, bw, bw)
+    (r"\.(w_a|w_x)$", P("model", None, None), P("model", None, None)),
+    # small/1-D leaves: replicate
+    (r".*", P(), P()),
+]
+
+
+def _moe_spec(kind: str, shape, n_model: int) -> P:
+    E = shape[-3]
+    if E % n_model == 0:
+        # expert parallelism
+        return (P("model", "data", None) if kind == "moe_in"
+                else P("model", None, "data"))
+    # TP inside each expert (grok: 8 experts on a 16-way model axis)
+    return (P(None, "data", "model") if kind == "moe_in"
+            else P(None, "model", "data"))
+
+
+def spec_for(path: str, shape, mode: str, n_model: int) -> P:
+    for pat, tp_spec, fsdp_spec in _RULES:
+        if re.search(pat, path):
+            spec = tp_spec if mode == "tp" else fsdp_spec
+            if isinstance(spec, str):
+                spec = _moe_spec(spec, shape, n_model)
+            # left-pad for stacked scan dims
+            pad = len(shape) - len(spec)
+            if pad > 0:
+                spec = P(*((None,) * pad + tuple(spec)))
+            elif pad < 0:  # 1-D leaf matched a 2-D rule (shouldn't happen)
+                spec = P()
+            # drop axes that don't divide and would waste padding badly
+            spec = _validate(spec, shape, n_model)
+            return spec
+    raise AssertionError("unreachable")
+
+
+AXIS_SIZES = {"pod": 2, "data": 16, "model": 16}
+
+
+def _axis_size(ax) -> int:
+    axes = ax if isinstance(ax, tuple) else (ax,)
+    n = 1
+    for a in axes:
+        n *= AXIS_SIZES.get(a, 1)
+    return n
+
+
+def _validate(spec: P, shape, n_model: int) -> P:
+    """pjit argument shardings need exact divisibility. Drop axes whose dim
+    doesn't divide, then greedily re-home each dropped axis onto another
+    still-unsharded dim that does divide (e.g. a 49155-row vocab embedding
+    falls back to sharding its d_model dim)."""
+    entries = list(tuple(spec) + (None,) * (len(shape) - len(spec)))
+    dropped = []
+    for i, (dim, ax) in enumerate(zip(shape, entries)):
+        if ax is None:
+            continue
+        if dim % _axis_size(ax) != 0 or dim < _axis_size(ax):
+            dropped.append(ax)
+            entries[i] = None
+    for ax in dropped:
+        for i, (dim, cur) in enumerate(zip(shape, entries)):
+            if cur is None and dim % _axis_size(ax) == 0 \
+                    and dim >= _axis_size(ax):
+                entries[i] = ax
+                break
+    return P(*entries)
+
+
+def _path_str(kp) -> str:
+    parts = []
+    for k in kp:
+        if isinstance(k, jax.tree_util.DictKey):
+            parts.append(str(k.key))
+        elif isinstance(k, jax.tree_util.SequenceKey):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(getattr(k, "name", k)))
+    return ".".join(parts)
+
+
+def param_specs(tree: PyTree, mode: str, n_model: int = 16) -> PyTree:
+    """PartitionSpec tree congruent to ``tree`` (arrays or SDS leaves)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    specs = [spec_for(_path_str(kp), leaf.shape, mode, n_model)
+             for kp, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def zero1_specs(tree: PyTree, mode: str, n_model: int = 16,
+                dp_axis: str = "data") -> PyTree:
+    """Optimizer-moment specs: params' specs with the first free (None) dim
+    of each >=2-D leaf sharded over the DP axis (ZeRO-1). fsdp2d weights are
+    already fully sharded — moments just mirror them."""
+    if mode == "fsdp2d":
+        return param_specs(tree, mode, n_model)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for kp, leaf in flat:
+        spec = spec_for(_path_str(kp), leaf.shape, mode, n_model)
+        entries = list(tuple(spec) + (None,) * (len(leaf.shape) - len(spec)))
+        if leaf.ndim >= 2:
+            for i, (dim, ax) in enumerate(zip(leaf.shape, entries)):
+                if ax is None and dim >= 16 and dim % 16 == 0:
+                    entries[i] = dp_axis
+                    break
+        out.append(P(*entries))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# batch / cache specs
+# ---------------------------------------------------------------------------
+
+
+def dp_axes(mesh: Mesh):
+    """The data-parallel axes of a mesh (('pod','data') on multipod)."""
+    axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    return axes if len(axes) > 1 else axes[0]
+
+
+def batch_spec(mesh: Mesh, batch: int, ndim: int) -> P:
+    """Shard the leading batch dim over as many DP axes as divide it."""
+    axes = [a for a in mesh.axis_names if a in ("pod", "data")]
+    use = []
+    prod = 1
+    for a in axes:
+        n = mesh.shape[a]
+        if batch % (prod * n) == 0:
+            use.append(a)
+            prod *= n
+    lead = tuple(use) if len(use) > 1 else (use[0] if use else None)
+    return P(lead, *((None,) * (ndim - 1)))
+
+
+def cache_spec(mesh: Mesh, leaf_shape, batch: int) -> P:
+    """KV-cache leaves: (L?, B, S, kv, hd) -> batch over DP (when divisible),
+    sequence over `model` (distributed decode attention: partial softmax +
+    combine emerges from the partitioner). Small leaves replicate."""
+    nd = len(leaf_shape)
+    if nd <= 1:
+        return P()
+    # find the batch dim: first dim equal to `batch`
+    entries = [None] * nd
+    try:
+        b_idx = next(i for i, d in enumerate(leaf_shape) if d == batch)
+    except StopIteration:
+        return P()
+    bs = batch_spec(mesh, batch, 1)
+    entries[b_idx] = bs[0]
+    n_model = mesh.shape["model"]
+    # the dim right after batch is sequence/window/state: shard over model
+    if b_idx + 1 < nd and leaf_shape[b_idx + 1] % n_model == 0 \
+            and leaf_shape[b_idx + 1] >= n_model:
+        entries[b_idx + 1] = "model"
+    return P(*entries)
+
+
+def make_shardings(mesh: Mesh, spec_tree: PyTree) -> PyTree:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# activation sharding constraints (sequence parallelism)
+# ---------------------------------------------------------------------------
+#
+# Models call ``constrain(x, "carry")`` at scan-block boundaries. When the
+# launcher has installed rules (inside a mesh context), the carry is pinned
+# to a (dp, model, None) layout — SEQUENCE PARALLELISM: the remat residual
+# per block shrinks by the model-axis size, which is what makes train_4k on
+# 64-layer/314B models fit HBM (DESIGN.md §4). Off (empty rules) for
+# single-host smoke tests: a no-op.
+
+_ACTIVATION_RULES: dict[str, P] = {}
+
+
+def set_activation_rules(rules: dict[str, P]) -> None:
+    _ACTIVATION_RULES.clear()
+    _ACTIVATION_RULES.update(rules)
+
+
+def constrain(x, kind: str):
+    spec = _ACTIVATION_RULES.get(kind)
+    if spec is None:
+        return x
+    entries = tuple(spec) + (None,) * (x.ndim - len(tuple(spec)))
+    mesh = None
+    try:
+        from jax.sharding import get_abstract_mesh
+        mesh = get_abstract_mesh()
+    except Exception:
+        pass
+    # drop axes that don't divide the dim
+    fixed = []
+    for dim, ax in zip(x.shape, entries[:x.ndim]):
+        if ax is None:
+            fixed.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        ok = True
+        size = 1
+        if mesh is not None and getattr(mesh, "shape", None):
+            for a in axes:
+                size *= mesh.shape.get(a, 1)
+            ok = size > 0 and dim % size == 0
+        fixed.append(ax if ok else None)
+    return jax.lax.with_sharding_constraint(x, P(*fixed))

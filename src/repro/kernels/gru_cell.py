@@ -1,0 +1,84 @@
+"""Fused GRU memory-update Pallas kernel — the MUU (§IV-B) on TPU.
+
+The paper maps each GRU gate to an S_g x S_g DSP multiply-accumulate array and
+pipelines the gates through FIFOs. On TPU the analogous design is ONE kernel
+invocation per batch tile that:
+
+  1. computes the packed input projection  gi = mail @ W_i   (one MXU matmul
+     covering all three gates: W_i is (f_mail, 3*m) with gate blocks at
+     lane-aligned m strides),
+  2. computes the packed hidden projection gh = s @ W_h,
+  3. fuses the gate nonlinearities and the convex memory merge in VREGs —
+     no HBM round-trip between the matmuls and the elementwise tail.
+
+Block layout: the batch axis is tiled (block_b rows per grid step); weights
+are small enough (f_mail_p x 3*m_p fp32 < 1 MiB for the paper dims) to pin
+fully in VMEM for every grid step, the TPU analogue of the paper keeping
+"learnable parameters on-chip".
+
+All feature dims must be pre-padded to LANE (=128) multiples by the caller
+(see ops.pad_gru_params); zero padding is a fixed point of the GRU tail, so
+padded columns stay exactly zero (asserted in tests).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gru_kernel(mail_ref, s_ref, extra_ref, w_i_ref, w_h_ref, b_i_ref,
+                b_h_ref, out_ref, *, m_p: int):
+    """One batch tile: out = GRU(mail, s). Shapes (VMEM):
+    mail (Bb, F), s (Bb, M), extra (Bb, 3M) — per-row additive input-gate
+    contribution (the LUT-folded time rows, §III-C; zeros when unused),
+    w_i (F, 3M), w_h (M, 3M), b_* (1, 3M), out (Bb, M).
+    """
+    mail = mail_ref[...]
+    s = s_ref[...]
+    gi = jnp.dot(mail, w_i_ref[...], preferred_element_type=jnp.float32)
+    gi = gi + b_i_ref[...] + extra_ref[...]
+    gh = jnp.dot(s, w_h_ref[...], preferred_element_type=jnp.float32)
+    gh = gh + b_h_ref[...]
+    # gate blocks live at lane-aligned strides [r | z | n]
+    i_r, i_z, i_n = gi[:, :m_p], gi[:, m_p:2 * m_p], gi[:, 2 * m_p:]
+    h_r, h_z, h_n = gh[:, :m_p], gh[:, m_p:2 * m_p], gh[:, 2 * m_p:]
+    r = jax.nn.sigmoid(i_r + h_r)
+    z = jax.nn.sigmoid(i_z + h_z)
+    n = jnp.tanh(i_n + r * h_n)
+    out_ref[...] = (1.0 - z) * n + z * s
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def gru_cell_pallas(mail: jax.Array, s: jax.Array, extra: jax.Array,
+                    w_i: jax.Array, w_h: jax.Array, b_i: jax.Array,
+                    b_h: jax.Array, *, block_b: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """Fused GRU cell. All dims must already be LANE-aligned:
+    mail (B, F), s (B, M), extra (B, 3M), w_i (F, 3M), w_h (M, 3M),
+    b_i/b_h (1, 3M). B must be a multiple of block_b. Returns (B, M) fp32.
+    """
+    B, F = mail.shape
+    M = s.shape[-1]
+    assert B % block_b == 0, (B, block_b)
+    assert w_i.shape == (F, 3 * M) and w_h.shape == (M, 3 * M)
+    assert extra.shape == (B, 3 * M)
+    grid = (B // block_b,)
+    return pl.pallas_call(
+        functools.partial(_gru_kernel, m_p=M),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, F), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, M), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, 3 * M), lambda i: (i, 0)),
+            pl.BlockSpec((F, 3 * M), lambda i: (0, 0)),
+            pl.BlockSpec((M, 3 * M), lambda i: (0, 0)),
+            pl.BlockSpec((1, 3 * M), lambda i: (0, 0)),
+            pl.BlockSpec((1, 3 * M), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, M), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, M), jnp.float32),
+        interpret=interpret,
+    )(mail, s, extra, w_i, w_h, b_i, b_h)

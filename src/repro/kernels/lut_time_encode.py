@@ -1,0 +1,52 @@
+"""LUT time-encoder Pallas kernel (§III-C on TPU).
+
+The paper's BRAM LUT emits one (possibly weight-folded) row per clock. The
+TPU analogue: bucket each dt by counting quantile boundaries <= dt (a fully
+vectorized VPU compare-reduce over the 128 boundary lanes), then fetch the
+row as ``one_hot(bucket) @ table`` — a (B,128)x(128,D) MXU matmul instead of
+a scalar gather. With the projection folded into the table (§III-C), this
+kernel IS the whole encode-then-project path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lut_kernel(dt_ref, bounds_ref, table_ref, out_ref, *, n_entries: int):
+    """dt (Bb, 1), bounds (1, E), table (E, D) -> out (Bb, D)."""
+    bb = dt_ref.shape[0]
+    dt = dt_ref[...]
+    bucket = jnp.sum((dt >= bounds_ref[...]).astype(jnp.int32), axis=1,
+                     keepdims=True)
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (bb, n_entries), 1)
+    one_hot = (lanes == bucket).astype(jnp.float32)
+    out_ref[...] = jnp.dot(one_hot, table_ref[...],
+                           preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def lut_encode_pallas(dt: jax.Array, bounds: jax.Array, table: jax.Array,
+                      *, block_b: int = 256,
+                      interpret: bool = False) -> jax.Array:
+    """dt (B,) float32; bounds (1, E); table (E, D). B multiple of block_b,
+    D LANE-aligned. Returns (B, D) float32."""
+    B = dt.shape[0]
+    E, D = table.shape
+    assert B % block_b == 0, (B, block_b)
+    grid = (B // block_b,)
+    return pl.pallas_call(
+        functools.partial(_lut_kernel, n_entries=E),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, E), lambda i: (0, 0)),
+            pl.BlockSpec((E, D), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, D), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, D), jnp.float32),
+        interpret=interpret,
+    )(dt.reshape(B, 1), bounds, table)

@@ -1,0 +1,166 @@
+"""Public jit'd entry points for the Pallas kernels.
+
+These wrappers own all the padding/unpadding between the paper's native dims
+(f_mem=100, f_edge=172, ...) and the LANE(128)-aligned shapes the kernels
+require, pick interpret mode automatically off-TPU, and repack the core/
+parameter layout (gate blocks at f_mem strides) into the lane-aligned kernel
+layout (gate blocks at m_p strides).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.utils import LANE, round_up
+from repro.kernels.gru_cell import gru_cell_pallas
+from repro.kernels.sat_aggregate import sat_aggregate_pallas
+from repro.kernels.lut_time_encode import lut_encode_pallas
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad2(x: jax.Array, rows: int, cols: int) -> jax.Array:
+    return jnp.pad(x, ((0, rows - x.shape[0]), (0, cols - x.shape[1])))
+
+
+# ---------------------------------------------------------------------------
+# GRU memory update
+# ---------------------------------------------------------------------------
+
+
+def pad_gru_params(params: dict, f_mail: int, f_mem: int) -> dict:
+    """Repack core-layout GRU params into lane-aligned kernel layout.
+
+    core layout: w_i (f_mail, 3*f_mem) with gates at f_mem strides.
+    kernel layout: (f_mail_p, 3*m_p) with gates at m_p strides.
+    Precompute once per model; reuse across calls.
+    """
+    f_p, m_p = round_up(f_mail), round_up(f_mem)
+
+    def repack_w(w, in_dim, in_p):
+        gates = [w[:, g * f_mem:(g + 1) * f_mem] for g in range(3)]
+        return jnp.concatenate(
+            [_pad2(g, in_p, m_p) for g in gates], axis=1)
+
+    def repack_b(b):
+        gates = [b[g * f_mem:(g + 1) * f_mem] for g in range(3)]
+        return jnp.concatenate(
+            [jnp.pad(g, (0, m_p - f_mem)) for g in gates])[None, :]
+
+    return {
+        "w_i": repack_w(params["w_i"], f_mail, f_p),
+        "w_h": repack_w(params["w_h"], f_mem, m_p),
+        "b_i": repack_b(params["b_i"]),
+        "b_h": repack_b(params["b_h"]),
+    }
+
+
+def repack_gate_rows(x: jax.Array, f_mem: int, m_p: int) -> jax.Array:
+    """Per-row gate vectors (B, 3*f_mem) [r|z|n at f_mem strides] ->
+    lane-aligned (B, 3*m_p)."""
+    gates = [x[:, g * f_mem:(g + 1) * f_mem] for g in range(3)]
+    return jnp.concatenate(
+        [jnp.pad(g, ((0, 0), (0, m_p - f_mem))) for g in gates], axis=1)
+
+
+def gru_cell(mail: jax.Array, s: jax.Array, packed: dict,
+             extra: jax.Array | None = None, *,
+             block_b: int = 128) -> jax.Array:
+    """Fused GRU cell on native dims. mail (B, f_mail), s (B, f_mem);
+    ``packed`` from pad_gru_params; ``extra`` optional (B, 3*f_mem) additive
+    input-gate rows in core layout (LUT-folded time rows, §III-C).
+    Returns (B, f_mem)."""
+    B, f_mail = mail.shape
+    f_mem = s.shape[-1]
+    f_p = packed["w_i"].shape[0]
+    m_p = packed["w_h"].shape[0]
+    bb = min(block_b, round_up(B, 8))
+    B_p = round_up(B, bb)
+    mail_p = _pad2(mail.astype(jnp.float32), B_p, f_p)
+    s_p = _pad2(s.astype(jnp.float32), B_p, m_p)
+    if extra is None:
+        extra_p = jnp.zeros((B_p, 3 * m_p), jnp.float32)
+    else:
+        extra_p = _pad2(repack_gate_rows(extra.astype(jnp.float32),
+                                         f_mem, m_p), B_p, 3 * m_p)
+    out = gru_cell_pallas(mail_p, s_p, extra_p, packed["w_i"], packed["w_h"],
+                          packed["b_i"], packed["b_h"], block_b=bb,
+                          interpret=_use_interpret())
+    return out[:B, :f_mem]
+
+
+# ---------------------------------------------------------------------------
+# LUT time encode
+# ---------------------------------------------------------------------------
+
+
+def pad_lut_params(boundaries: jax.Array, table: jax.Array) -> dict:
+    """bounds (E-1,) -> (1, E) with +inf sentinel; table (E, D) -> (E, D_p)."""
+    E, D = table.shape
+    bounds = jnp.concatenate(
+        [boundaries.astype(jnp.float32),
+         jnp.full((E - boundaries.shape[0],), np.inf, jnp.float32)])[None, :]
+    return {"bounds": bounds,
+            "table": _pad2(table.astype(jnp.float32), E, round_up(D)),
+            "d": D}
+
+
+def lut_encode(dt: jax.Array, packed: dict) -> jax.Array:
+    """dt (...,) -> (..., D) via the LUT kernel."""
+    shape = dt.shape
+    flat = dt.reshape(-1).astype(jnp.float32)
+    B = flat.shape[0]
+    bb = min(256, round_up(B, 8))
+    B_p = round_up(B, bb)
+    flat = jnp.pad(flat, (0, B_p - B))
+    out = lut_encode_pallas(flat, packed["bounds"], packed["table"],
+                            block_b=bb, interpret=_use_interpret())
+    return out[:B, :packed["d"]].reshape(*shape, packed["d"])
+
+
+# ---------------------------------------------------------------------------
+# SAT aggregation
+# ---------------------------------------------------------------------------
+
+
+def pad_sat_params(w_v: jax.Array, b_v: jax.Array, boundaries: jax.Array,
+                   folded_table: jax.Array) -> dict:
+    """w_v (Dkv, D) [memory||edge rows only], b_v (D,), folded LUT table
+    (E, D) already = table @ W_v[time rows]."""
+    dkv, d = w_v.shape
+    dkv_p, d_p = round_up(dkv), round_up(d)
+    E = folded_table.shape[0]
+    bounds = jnp.concatenate(
+        [boundaries.astype(jnp.float32),
+         jnp.full((E - boundaries.shape[0],), np.inf, jnp.float32)])[None, :]
+    return {
+        "w_v": _pad2(w_v.astype(jnp.float32), dkv_p, d_p),
+        "b_v": jnp.pad(b_v.astype(jnp.float32), (0, d_p - d))[None, :],
+        "bounds": bounds,
+        "table": _pad2(folded_table.astype(jnp.float32), E, d_p),
+        "dkv": dkv, "d": d,
+    }
+
+
+def sat_aggregate(kv: jax.Array, dt: jax.Array, logits: jax.Array,
+                  valid: jax.Array, packed: dict,
+                  *, block_b: int = 128) -> jax.Array:
+    """Fused student EU tail. kv (B, k, dkv); dt/logits (B, k);
+    valid (B, k) bool. Returns (B, d)."""
+    B, k, dkv = kv.shape
+    dkv_p = packed["w_v"].shape[0]
+    bb = min(block_b, round_up(B, 8))
+    B_p = round_up(B, bb)
+    kv_p = jnp.pad(kv.astype(jnp.float32),
+                   ((0, B_p - B), (0, 0), (0, dkv_p - dkv)))
+    pad_rows = ((0, B_p - B), (0, 0))
+    out = sat_aggregate_pallas(
+        kv_p, jnp.pad(dt.astype(jnp.float32), pad_rows),
+        jnp.pad(logits.astype(jnp.float32), pad_rows),
+        jnp.pad(valid.astype(jnp.float32), pad_rows),
+        packed["w_v"], packed["b_v"], packed["bounds"], packed["table"],
+        block_b=bb, interpret=_use_interpret())
+    return out[:B, :packed["d"]]

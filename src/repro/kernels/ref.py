@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for every Pallas kernel (same padded shapes, no Pallas).
+
+Tests sweep shapes/dtypes and assert_allclose kernel-vs-oracle; the oracles
+themselves are cross-checked against the algorithmic definitions in
+``repro.core`` (memory.gru_cell, attention.sat_attention, time_encode).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def gru_ref(mail: jax.Array, s: jax.Array, w_i: jax.Array, w_h: jax.Array,
+            b_i: jax.Array, b_h: jax.Array,
+            extra: jax.Array | None = None) -> jax.Array:
+    m_p = s.shape[-1]
+    gi = mail @ w_i + b_i
+    if extra is not None:
+        gi = gi + extra
+    gh = s @ w_h + b_h
+    r = jax.nn.sigmoid(gi[:, :m_p] + gh[:, :m_p])
+    z = jax.nn.sigmoid(gi[:, m_p:2 * m_p] + gh[:, m_p:2 * m_p])
+    n = jnp.tanh(gi[:, 2 * m_p:] + r * gh[:, 2 * m_p:])
+    return (1.0 - z) * n + z * s
+
+
+def lut_encode_ref(dt: jax.Array, bounds: jax.Array,
+                   table: jax.Array) -> jax.Array:
+    bucket = jnp.sum(dt[:, None] >= bounds[0], axis=1).astype(jnp.int32)
+    return jnp.take(table, bucket, axis=0)
+
+
+def sat_aggregate_ref(kv: jax.Array, dt: jax.Array, logits: jax.Array,
+                      valid: jax.Array, w_v: jax.Array, b_v: jax.Array,
+                      bounds: jax.Array, table: jax.Array) -> jax.Array:
+    B, k, dkv = kv.shape
+    v = kv.reshape(B * k, dkv) @ w_v
+    v = v + lut_encode_ref(dt.reshape(B * k), bounds, table)
+    v = (v + b_v).reshape(B, k, -1)
+    masked = jnp.where(valid > 0, logits, NEG_INF)
+    mx = jnp.max(masked, axis=1, keepdims=True)
+    e = jnp.exp(masked - mx) * valid
+    z = jnp.sum(e, axis=1, keepdims=True)
+    attn = jnp.where(z > 0, e / jnp.maximum(z, 1e-30), 0.0)
+    return jnp.sum(attn[:, :, None] * v, axis=1)

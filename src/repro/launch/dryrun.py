@@ -1,0 +1,343 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: 512 host
+placeholder devices let ``make_production_mesh`` build the real (2,16,16)
+topology; ``.lower(...).compile()`` runs the full GSPMD partitioner and the
+backend; ``memory_analysis()`` proves the per-device footprint fits a v5e
+(16 GB HBM); the compiled HLO feeds the trip-count-aware roofline analyzer
+(hlo_analysis.py).
+
+Usage:
+    python -m repro.launch.dryrun --arch gemma3_12b --shape train_4k
+    python -m repro.launch.dryrun --arch all --shape all --multipod \
+        --out results/dryrun
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.launch.mesh import make_production_mesh
+from repro.launch import hlo_analysis
+from repro.models import lm_common
+from repro.distributed import sharding as shd
+from repro.training import optim as opt_mod
+from repro.training.lr_schedule import ScheduleConfig, schedule
+from repro.core import perf_model
+
+
+def _shardify(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _opt_state_specs(opt_abs, params_abs, mode, n_model):
+    z1 = shd.zero1_specs(params_abs, mode, n_model)
+    p_struct = jax.tree.structure(params_abs)
+    out = {"step": P()}
+    for k in ("m", "v"):
+        if k not in opt_abs:
+            continue
+        if jax.tree.structure(opt_abs[k]) == p_struct:
+            out[k] = z1
+        else:  # QTensor moments: flat int8 payloads + scales. Payload
+            # length is always a _QBLOCK (=256) multiple -> shard over the
+            # full (data x model) = 256 chips; scales over data when they
+            # divide. (Leaving these data-only once cost 38 GiB/device on
+            # grok-314B — EXPERIMENTS.md §Dry-run.)
+            def qspec(l):
+                n = l.shape[0] if l.ndim == 1 else 0
+                if n and n % 256 == 0:
+                    return P(("data", "model"))
+                if n and n % 16 == 0 and n >= 16:
+                    return P("data")
+                return P()
+            out[k] = jax.tree.map(qspec, opt_abs[k])
+    return out
+
+
+def build_train_cell(spec, cfg, mesh, seq_len, global_batch):
+    """-> (fn, abstract args, in_shardings, out_shardings, donate)."""
+    mode = spec.shard_mode
+    n_model = mesh.shape["model"]
+    ocfg = opt_mod.OptimConfig(moment_dtype=spec.moment_dtype)
+    scfg = ScheduleConfig()
+
+    params_abs = lm_common.abstract_params(cfg)
+    opt_abs = jax.eval_shape(lambda p: opt_mod.init_state(ocfg, p),
+                             params_abs)
+    batch_abs = lm_common.train_inputs(cfg, global_batch, seq_len)
+
+    p_specs = shd.param_specs(params_abs, mode, n_model)
+    o_specs = _opt_state_specs(opt_abs, params_abs, mode, n_model)
+    b_specs = jax.tree.map(
+        lambda l: shd.batch_spec(mesh, global_batch, len(l.shape)),
+        batch_abs)
+
+    accum = spec.grad_accum
+
+    def train_step(params, opt_state, batch, step_idx):
+        def loss_of(p, b):
+            return lm_common.loss_fn(p, cfg, b)
+
+        if accum > 1:
+            def resplit(x):
+                b = x.shape[0]
+                return x.reshape(accum, b // accum, *x.shape[1:])
+
+            micro = jax.tree.map(resplit, batch)
+
+            def body(carry, mb):
+                l_acc, g_acc = carry
+                l, g = jax.value_and_grad(loss_of)(params, mb)
+                return (l_acc + l, jax.tree.map(jnp.add, g_acc, g)), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params)
+            (loss, grads), _ = jax.lax.scan(
+                body, (jnp.zeros((), jnp.float32), zeros), micro)
+            loss = loss / accum
+            grads = jax.tree.map(lambda g: g / accum, grads)
+        else:
+            loss, grads = jax.value_and_grad(loss_of)(params, batch)
+
+        lr_scale = schedule(scfg, step_idx)
+        opt_state, params = opt_mod.apply_updates(ocfg, opt_state, grads,
+                                                  params, lr_scale)
+        return params, opt_state, loss
+
+    in_sh = (_shardify(mesh, p_specs), _shardify(mesh, o_specs),
+             _shardify(mesh, b_specs), NamedSharding(mesh, P()))
+    out_sh = (_shardify(mesh, p_specs), _shardify(mesh, o_specs),
+              NamedSharding(mesh, P()))
+    args = (params_abs, opt_abs, batch_abs,
+            jax.ShapeDtypeStruct((), jnp.int32))
+    return train_step, args, in_sh, out_sh, (0, 1)
+
+
+def build_decode_cell(spec, cfg, mesh, seq_len, global_batch,
+                      params_bf16: bool = False):
+    mode = spec.shard_mode
+    n_model = mesh.shape["model"]
+    params_abs = lm_common.abstract_params(cfg)
+    if params_bf16:  # §Perf O1: serving weights stored bf16
+        params_abs = jax.tree.map(
+            lambda l: (jax.ShapeDtypeStruct(l.shape, jnp.bfloat16)
+                       if l.dtype == jnp.float32 else l), params_abs)
+    batch_abs = lm_common.decode_inputs(cfg, global_batch, seq_len)
+
+    p_specs = shd.param_specs(params_abs, mode, n_model)
+    tok_spec = shd.batch_spec(mesh, global_batch, 2)
+    cache_specs = jax.tree.map(
+        lambda l: shd.cache_spec(mesh, l.shape, global_batch),
+        batch_abs["caches"])
+    b_specs = {"token": tok_spec, "caches": cache_specs}
+
+    def serve_step(params, batch):
+        return lm_common.decode_fn(params, cfg, batch)
+
+    logits_spec = shd.batch_spec(mesh, global_batch, 2)
+    in_sh = (_shardify(mesh, p_specs), _shardify(mesh, b_specs))
+    out_sh = (NamedSharding(mesh, logits_spec), _shardify(mesh, cache_specs))
+    args = (params_abs, batch_abs)
+    return serve_step, args, in_sh, out_sh, (1,)
+
+
+def build_prefill_cell(spec, cfg, mesh, seq_len, global_batch):
+    mode = spec.shard_mode
+    n_model = mesh.shape["model"]
+    params_abs = lm_common.abstract_params(cfg)
+    batch_abs = lm_common.train_inputs(cfg, global_batch, seq_len)
+    batch_abs.pop("targets")
+
+    p_specs = shd.param_specs(params_abs, mode, n_model)
+    b_specs = jax.tree.map(
+        lambda l: shd.batch_spec(mesh, global_batch, len(l.shape)),
+        batch_abs)
+
+    fam = lm_common.family_of(cfg)
+    mod = lm_common.FAMILIES[fam]
+
+    def prefill_step(params, batch):
+        if fam == "whisper":
+            logits, _ = mod.prefill(params, cfg, batch["frames"],
+                                    batch["tokens"])
+        elif fam == "vision_lm":
+            logits, _ = mod.prefill(params, cfg, batch["tokens"],
+                                    batch["vision"])
+        else:
+            logits, _ = mod.prefill(params, cfg, batch["tokens"])
+        return logits
+
+    in_sh = (_shardify(mesh, p_specs), _shardify(mesh, b_specs))
+    out_sh = NamedSharding(mesh, shd.batch_spec(mesh, global_batch, 2))
+    args = (params_abs, batch_abs)
+    return prefill_step, args, in_sh, out_sh, ()
+
+
+def run_cell(arch: str, shape: str, *, multi_pod: bool = False,
+             save_hlo: str | None = None, override_cfg=None,
+             extra_rules: dict | None = None,
+             params_bf16: bool = False) -> dict:
+    spec = configs.get(arch)
+    cfg = override_cfg or spec.config()
+    seq_len, global_batch, kind = configs.SHAPES[shape]
+
+    if shape == "long_500k" and not lm_common.supports_long_context(cfg):
+        return {"arch": arch, "shape": shape, "multi_pod": multi_pod,
+                "status": "skip(full-attn)",
+                "note": "pure full-attention arch; see DESIGN.md §5"}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    dp = shd.dp_axes(mesh)
+    rules = {"carry": P(dp, "model", None)} if kind == "train" else {}
+    if extra_rules:
+        rules.update(extra_rules)
+    shd.set_activation_rules(rules)
+
+    t0 = time.time()
+    with mesh:
+        if kind == "train":
+            fn, args, in_sh, out_sh, donate = build_train_cell(
+                spec, cfg, mesh, seq_len, global_batch)
+        elif kind == "decode":
+            fn, args, in_sh, out_sh, donate = build_decode_cell(
+                spec, cfg, mesh, seq_len, global_batch,
+                params_bf16=params_bf16)
+        else:
+            fn, args, in_sh, out_sh, donate = build_prefill_cell(
+                spec, cfg, mesh, seq_len, global_batch)
+
+        lowered = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                          donate_argnums=donate).lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    if save_hlo:
+        import gzip
+        with gzip.open(save_hlo, "wt") as f:
+            f.write(hlo)
+    stats = hlo_analysis.analyze(hlo)
+
+    n_chips = mesh.size
+    tokens = global_batch * (seq_len if kind != "decode" else 1)
+    mf = perf_model.model_flops(cfg.n_active_params, tokens,
+                                training=(kind == "train"))
+    rl = perf_model.roofline(stats["flops"], stats["bytes"],
+                             stats["collective_bytes"], 1)
+
+    result = {
+        "arch": arch, "shape": shape, "multi_pod": multi_pod,
+        "status": "ok",
+        "kind": kind, "n_chips": n_chips,
+        "seq_len": seq_len, "global_batch": global_batch,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        },
+        "xla_cost_analysis": {k: cost.get(k) for k in
+                              ("flops", "bytes accessed")},
+        "per_device": {
+            "flops": stats["flops"], "bytes": stats["bytes"],
+            "collective_bytes": stats["collective_bytes"],
+            "collectives_by_op": stats["collectives_by_op"],
+            "collectives_count": stats["collectives_count"],
+        },
+        "roofline": {
+            "compute_s": rl.compute_s, "memory_s": rl.memory_s,
+            "collective_s": rl.collective_s, "bound": rl.bound,
+        },
+        "model_flops_total": mf,
+        "model_flops_per_device": mf / n_chips,
+        "useful_compute_ratio": (mf / n_chips) / max(stats["flops"], 1.0),
+    }
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None, help="JSON output directory")
+    args = ap.parse_args()
+
+    archs = configs.all_archs() if args.arch == "all" else [args.arch]
+    shapes = list(configs.SHAPES) if args.shape == "all" else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multipod]
+
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}/{shape}/{'2pod' if mp else '1pod'}"
+                out_path = None
+                if args.out:
+                    os.makedirs(args.out, exist_ok=True)
+                    out_path = os.path.join(
+                        args.out, f"{arch}__{shape}__"
+                        f"{'2pod' if mp else '1pod'}.json")
+                    if os.path.exists(out_path):
+                        print(f"[skip cached] {tag}")
+                        with open(out_path) as f:
+                            results.append(json.load(f))
+                        continue
+                print(f"[dryrun] {tag} ...", flush=True)
+                hlo_path = None
+                if args.out:
+                    hlo_dir = os.path.join(args.out, "hlo")
+                    os.makedirs(hlo_dir, exist_ok=True)
+                    hlo_path = os.path.join(
+                        hlo_dir, f"{arch}__{shape}__"
+                        f"{'2pod' if mp else '1pod'}.hlo.gz")
+                try:
+                    r = run_cell(arch, shape, multi_pod=mp,
+                                 save_hlo=hlo_path)
+                except Exception as e:
+                    r = {"arch": arch, "shape": shape, "multi_pod": mp,
+                         "status": f"FAIL: {type(e).__name__}: {e}",
+                         "traceback": traceback.format_exc()}
+                results.append(r)
+                status = r["status"]
+                extra = ""
+                if status == "ok":
+                    pk = r["memory"]["peak_bytes"]
+                    extra = (f" peak={pk/2**30:.2f}GiB"
+                             f" bound={r['roofline']['bound']}"
+                             f" compile={r['compile_s']}s")
+                print(f"[done] {tag}: {status}{extra}", flush=True)
+                if out_path:
+                    with open(out_path, "w") as f:
+                        json.dump(r, f, indent=2)
+
+    n_ok = sum(1 for r in results if r["status"] == "ok")
+    n_skip = sum(1 for r in results if r["status"].startswith("skip"))
+    n_fail = len(results) - n_ok - n_skip
+    print(f"\n=== dry-run: {n_ok} ok, {n_skip} skip, {n_fail} FAIL "
+          f"of {len(results)} cells ===")
+    if n_fail:
+        for r in results:
+            if r["status"].startswith("FAIL"):
+                print(f"  {r['arch']}/{r['shape']}: {r['status']}")
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

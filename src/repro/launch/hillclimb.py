@@ -1,0 +1,89 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb driver: lower+compile named variants of a cell and print
+the roofline deltas (hypothesis -> change -> before -> after).
+
+    PYTHONPATH=src python -m repro.launch.hillclimb qwen3_8b train_4k \
+        baseline H1 H1+H2
+
+Variants (composable with '+'):
+    baseline   paper-faithful execution (naive autodiff attention, SP carry)
+    H1         flash-style rematted attention backward (attn_remat=True)
+    H2         Megatron-SP block schedule (gather once per block)
+    H3         no sequence parallelism (replicated carry — control arm)
+    H4         bf16 optimizer moments
+    H5         loss in bf16 logits (chunked CE matmul in bf16)
+"""
+
+import json
+import sys
+
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.launch import dryrun
+
+
+def variant_spec(cell_arch: str, names: str):
+    spec = configs.get(cell_arch)
+    cfg = spec.config()
+    rules = {}
+    kwargs = {}
+    parts = set(names.split("+")) - {"baseline"}
+    if "H1" in parts:
+        cfg = cfg.replace(attn_remat=True)
+    if "H2" in parts:
+        rules["block_in"] = P(None, None, None)
+    if "H3" in parts:
+        rules["carry"] = P(None, None, None)  # overrides the default
+    if "O1" in parts:
+        kwargs["params_bf16"] = True
+    if "O2" in parts:
+        cfg = cfg.replace(kv_prune_keep=4096)
+    if "O4" in parts:
+        cfg = cfg.replace(decode_upcast=False)
+    if "O5" in parts:
+        cfg = cfg.replace(decode_unroll=True)
+    return cfg, rules, kwargs
+
+
+def main():
+    arch, shape = sys.argv[1], sys.argv[2]
+    variants = sys.argv[3:] or ["baseline"]
+    out_dir = os.path.join("results", "hillclimb")
+    os.makedirs(out_dir, exist_ok=True)
+    rows = []
+    for name in variants:
+        cache = os.path.join(out_dir, f"{arch}__{shape}__{name}.json")
+        if os.path.exists(cache):
+            with open(cache) as f:
+                r = json.load(f)
+            print(f"[cached] {name}")
+        else:
+            cfg, rules, kwargs = variant_spec(arch, name)
+            hlo_path = os.path.join(out_dir,
+                                    f"{arch}__{shape}__{name}.hlo.gz")
+            print(f"[compile] {name} ...", flush=True)
+            r = dryrun.run_cell(arch, shape, override_cfg=cfg,
+                                extra_rules=rules, save_hlo=hlo_path,
+                                **kwargs)
+            with open(cache, "w") as f:
+                json.dump(r, f, indent=2)
+        rows.append((name, r))
+
+    print(f"\n=== {arch} x {shape}: roofline terms (per-device seconds) ===")
+    print(f"{'variant':14s}{'compute':>10s}{'memory':>10s}"
+          f"{'collective':>11s}  {'bound':10s}{'step_opt':>9s}")
+    for name, r in rows:
+        if r["status"] != "ok":
+            print(f"{name:14s} {r['status']}")
+            continue
+        rl = r["roofline"]
+        step = max(rl["compute_s"], rl["memory_s"], rl["collective_s"])
+        print(f"{name:14s}{rl['compute_s']:10.3f}{rl['memory_s']:10.3f}"
+              f"{rl['collective_s']:11.3f}  {rl['bound']:10s}{step:9.3f}")
+
+
+if __name__ == "__main__":
+    main()

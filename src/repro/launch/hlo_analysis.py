@@ -1,0 +1,427 @@
+"""Trip-count-aware static analysis of compiled (post-SPMD) HLO text.
+
+Why this exists: ``compiled.cost_analysis()`` visits while-loop bodies ONCE —
+a scanned 48-layer model reports ~1/48th of its real FLOPs (verified
+empirically, see EXPERIMENTS.md §Dry-run notes). Since every model here
+scans over layers (and attention scans over q/k blocks), all roofline terms
+must be scaled by loop trip counts. XLA conveniently records
+``backend_config={"known_trip_count":{"n":...}}`` on while ops.
+
+The analyzer parses the HLO module into computations, builds a call graph
+(while bodies/conds weighted by trip count, fusions/calls by 1), and
+accumulates per-device totals:
+
+  * flops        — dot (2*M*N*K), elementwise, reduce
+  * bytes        — operands + result of every top-level op (fusion internals
+                   excluded: they never touch HBM), the cost_analysis
+                   convention
+  * collectives  — ring-weighted per-device traffic: all-gather ~ result,
+                   reduce-scatter/all-to-all ~ operand, all-reduce ~
+                   2 x operand, collective-permute ~ operand
+"""
+from __future__ import annotations
+
+import json
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "token": 0,
+}
+
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*{\s*$")
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^)]*\)|[\w\[\],{}]+))\s+"
+    r"([\w\-]+)\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_REF_RE = re.compile(r"%([\w.\-]+)")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_TO_APPLY_RE = re.compile(r"to_apply=%?([\w.\-]+)")
+_WHILE_RE = re.compile(r"condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":{"n":"(\d+)"}')
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "power", "maximum", "minimum",
+    "tanh", "exponential", "log", "log-plus-one", "rsqrt", "sqrt", "negate",
+    "abs", "sign", "floor", "ceil", "cosine", "sine", "logistic",
+    "and", "or", "xor", "not", "compare", "select", "clamp", "convert",
+    "round-nearest-afz", "round-nearest-even", "expm1",
+}
+_NO_BYTES = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "conditional", "call", "after-all", "add-dependency",
+    "iota", "partition-id", "replica-id",
+}
+
+# Ops that touch only a REGION of their big operand: counting the full
+# operand would inflate scan-over-stacked-weights by the trip count.
+#   dynamic-slice: traffic = slice read + result write = 2 x result
+#   dynamic-update-slice: read-modify-write of the update region = 2 x update
+#   gather: 2 x result; scatter: 2 x updates operand (approx)
+_REGION_OPS = {"dynamic-slice", "gather"}          # 2 x result bytes
+_REGION_UPDATE_OPS = {"dynamic-update-slice", "scatter"}  # 2 x update op
+
+COLLECTIVE_FACTORS = {
+    "all-gather": ("result", 1.0), "all-gather-start": ("result", 1.0),
+    "all-reduce": ("operand", 2.0), "all-reduce-start": ("operand", 2.0),
+    "reduce-scatter": ("operand", 1.0),
+    "all-to-all": ("operand", 1.0),
+    "collective-permute": ("operand", 1.0),
+    "collective-permute-start": ("operand", 1.0),
+    "ragged-all-to-all": ("operand", 1.0),
+}
+_SKIP_DONE = {"all-gather-done", "all-reduce-done", "collective-permute-done"}
+
+
+def _shape_info(type_str: str):
+    """-> (bytes, [per-shape dims list])."""
+    total, shapes = 0, []
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        dd = [int(d) for d in dims.split(",") if d]
+        n = 1
+        for d in dd:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+        shapes.append(dd)
+    return total, shapes
+
+
+@dataclass
+class _Op:
+    name: str
+    kind: str
+    bytes_: int
+    shapes: list
+    line: str
+
+
+@dataclass
+class _Computation:
+    name: str
+    ops: list = field(default_factory=list)
+    table: dict = field(default_factory=dict)   # name -> _Op
+
+
+def _parse(hlo_text: str) -> dict:
+    comps: dict[str, _Computation] = {}
+    cur: _Computation | None = None
+    for line in hlo_text.splitlines():
+        hdr = _COMP_HDR.match(line)
+        if hdr:
+            cur = _Computation(name=hdr.group(2))
+            comps[cur.name] = cur
+            if hdr.group(1):
+                comps["__entry__"] = cur
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, type_str, kind = m.groups()
+        b, shapes = _shape_info(type_str)
+        op = _Op(name=name, kind=kind, bytes_=b, shapes=shapes, line=line)
+        cur.ops.append(op)
+        cur.table[name] = op
+    return comps
+
+
+def _operand_refs(op: _Op) -> list[str]:
+    paren = op.line[op.line.find("("):]
+    # cut control metadata to avoid counting calls=%x etc.
+    for key in (", calls=", ", condition=", ", to_apply=", ", metadata=",
+                ", backend_config=", ", sharding=", ", replica_groups=",
+                ", dimensions=", ", source_target_pairs="):
+        i = paren.find(key)
+        if i >= 0:
+            paren = paren[:i]
+    return _REF_RE.findall(paren)
+
+
+def _operand_bytes(op: _Op, comp: _Computation) -> int:
+    return sum(comp.table[r].bytes_ for r in _operand_refs(op)
+               if r in comp.table)
+
+
+def _op_traffic(op: _Op, comp: _Computation,
+                fusion_param_bytes: dict | None = None) -> int:
+    """HBM bytes touched by one op (region-aware)."""
+    k = op.kind
+    if k in _REGION_OPS:
+        return 2 * op.bytes_
+    if k in _REGION_UPDATE_OPS:
+        refs = _operand_refs(op)
+        upd = comp.table[refs[1]].bytes_ if len(refs) > 1 and \
+            refs[1] in comp.table else op.bytes_
+        return 2 * upd
+    if k == "fusion" and fusion_param_bytes is not None:
+        return op.bytes_ + fusion_param_bytes.get(op.name,
+                                                  _operand_bytes(op, comp))
+    return op.bytes_ + _operand_bytes(op, comp)
+
+
+_TRANSPARENT_KINDS = {"convert", "bitcast", "copy", "reshape", "transpose",
+                      "parameter", "constant", "tuple", "get-tuple-element"}
+
+
+def _pure_transparent_bytes(op: _Op, comp: _Computation,
+                            comps: dict) -> int | None:
+    """Pure dtype/layout-conversion fusions (e.g. the CPU backend's
+    bf16<->f32 emulation converts, which do not exist on TPU's native-bf16
+    datapath) count once at the NARROW side — reading the data, no wide
+    replica. Returns None when the fusion does real work."""
+    if op.kind == "convert":
+        return min(op.bytes_, _operand_bytes(op, comp))
+    if op.kind != "fusion":
+        return None
+    mc = _CALLS_RE.search(op.line)
+    if not mc or mc.group(1) not in comps:
+        return None
+    fused = comps[mc.group(1)]
+    if all(o.kind in _TRANSPARENT_KINDS for o in fused.ops):
+        return min(op.bytes_, _operand_bytes(op, comp))
+    return None
+
+
+def _fusion_traffic(op: _Op, comp: _Computation, comps: dict) -> int:
+    """HBM traffic of a fusion op, region-aware:
+
+      * an operand whose only fused users are dynamic-slice ops counts at
+        the slice sizes (scan bodies slice one block of a stacked buffer
+        per iteration — the stack itself is not re-read);
+      * an operand that is only the DESTINATION of dynamic-update-slice
+        ops counts at the update size (in-place region write, aliased);
+      * the fusion RESULT counts at the update size when the root is a
+        dynamic-update-slice (possibly through bitcasts) — the rest of the
+        output buffer is aliased, not written.
+    """
+    mc = _CALLS_RE.search(op.line)
+    refs = _operand_refs(op)
+    if not mc or mc.group(1) not in comps:
+        return op.bytes_ + sum(comp.table[r].bytes_ for r in refs
+                               if r in comp.table)
+    fused = comps[mc.group(1)]
+
+    def resolve(name, depth=0):
+        """Follow dtype/layout-only chains to the defining op."""
+        o = fused.table.get(name)
+        while o is not None and depth < 8 and \
+                o.kind in ("bitcast", "copy", "convert", "reshape",
+                           "transpose"):
+            rs = _operand_refs(o)
+            if not rs or rs[0] not in fused.table:
+                break
+            o = fused.table[rs[0]]
+            depth += 1
+        return o
+
+    _TRANSPARENT = ("convert", "bitcast", "copy", "reshape", "transpose")
+
+    def terminal_users(name, depth=0):
+        """Users of ``name``, looking through dtype/layout-only ops (a
+        convert wrapping a DUS must still classify as a region write)."""
+        out = []
+        for o in fused.ops:
+            if o.name == name or name not in _operand_refs(o):
+                continue
+            if o.kind in _TRANSPARENT and depth < 6:
+                out.extend(terminal_users(o.name, depth + 1))
+            else:
+                out.append((o, name))
+        return out
+
+    # effective bytes per parameter index
+    param_eff: dict[int, int] = {}
+    for fop in fused.ops:
+        if fop.kind != "parameter":
+            continue
+        midx = re.search(r"parameter\((\d+)\)", fop.line)
+        if not midx:
+            continue
+        idx = int(midx.group(1))
+        users = terminal_users(fop.name)
+        if not users:
+            param_eff[idx] = 0
+            continue
+
+        def region_bytes(u, via):
+            if u.kind == "dynamic-slice":
+                return 2 * u.bytes_
+            if u.kind == "gather":
+                return 2 * u.bytes_
+            if u.kind == "dynamic-update-slice" \
+                    and _operand_refs(u)[:1] == [via]:
+                urefs = _operand_refs(u)
+                if len(urefs) > 1 and urefs[1] in fused.table:
+                    return 2 * fused.table[urefs[1]].bytes_
+                return 2 * u.bytes_
+            return None
+
+        rbs = [region_bytes(u, via) for u, via in users]
+        if all(r is not None for r in rbs):
+            param_eff[idx] = sum(rbs)
+
+    total = 0
+    for i, r in enumerate(refs):
+        if r not in comp.table:
+            continue
+        total += param_eff.get(i, comp.table[r].bytes_)
+
+    # result side
+    root = fused.ops[-1] if fused.ops else None
+    root = resolve(root.name) if root is not None else None
+    if root is not None and root.kind == "dynamic-update-slice":
+        urefs = _operand_refs(root)
+        upd = fused.table[urefs[1]].bytes_ if len(urefs) > 1 and \
+            urefs[1] in fused.table else op.bytes_
+        total += upd
+    else:
+        total += op.bytes_
+    return total
+
+
+def _dot_flops(op: _Op, comp: _Computation) -> float:
+    # result elements x 2 x contraction size (from lhs shape + dims)
+    mc = re.search(r"lhs_contracting_dims={([\d,]*)}", op.line)
+    if not mc:
+        return 0.0
+    cdims = [int(d) for d in mc.group(1).split(",") if d]
+    paren = op.line[op.line.find("("):]
+    refs = _REF_RE.findall(paren)
+    lhs = comp.table.get(refs[0]) if refs else None
+    if lhs is None or not lhs.shapes:
+        return 0.0
+    k = 1
+    for d in cdims:
+        if d < len(lhs.shapes[0]):
+            k *= lhs.shapes[0][d]
+    out_elems = 1
+    for d in (op.shapes[0] if op.shapes else []):
+        out_elems *= d
+    return 2.0 * out_elems * k
+
+
+def _trip_count(op: _Op, comps: dict) -> int:
+    m = _TRIP_RE.search(op.line)
+    if m:
+        return int(m.group(1))
+    # fallback: constant in the condition computation's compare
+    mw = _WHILE_RE.search(op.line)
+    if mw:
+        cond = comps.get(mw.group(1))
+        if cond:
+            for o in cond.ops:
+                if o.kind == "constant":
+                    mc = re.search(r"constant\((\d+)\)", o.line)
+                    if mc:
+                        return int(mc.group(1))
+    return 1
+
+
+def analyze(hlo_text: str) -> dict:
+    """Per-device totals with loop multipliers applied."""
+    comps = _parse(hlo_text)
+    entry = comps.get("__entry__")
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+
+    # fusion-target computations contribute flops at their call site but no
+    # bytes (internal values stay in registers/VMEM)
+    fusion_targets = set()
+    for comp in comps.values():
+        for op in comp.ops:
+            if op.kind == "fusion":
+                mc = _CALLS_RE.search(op.line)
+                if mc:
+                    fusion_targets.add(mc.group(1))
+
+    totals = {"flops": 0.0, "bytes": 0.0, "transcendentals": 0.0,
+              "collective_bytes": 0.0}
+    by_coll: dict[str, float] = defaultdict(float)
+    n_coll: dict[str, int] = defaultdict(int)
+    bytes_by_kind: dict[str, float] = defaultdict(float)
+    top_ops: list[tuple[float, str]] = []
+    visited_stack = []
+
+    def visit(comp_name: str, mult: float, in_fusion: bool):
+        comp = comps.get(comp_name)
+        if comp is None or comp_name in visited_stack:
+            return
+        visited_stack.append(comp_name)
+        for op in comp.ops:
+            k = op.kind
+            out_elems = 1
+            for d in (op.shapes[0] if op.shapes else []):
+                out_elems *= d
+            # ---- flops ----
+            if k == "dot":
+                totals["flops"] += mult * _dot_flops(op, comp)
+            elif k in _ELEMENTWISE:
+                totals["flops"] += mult * out_elems
+                if k in ("tanh", "exponential", "log", "rsqrt", "sqrt",
+                         "logistic", "cosine", "sine", "power", "expm1",
+                         "log-plus-one"):
+                    totals["transcendentals"] += mult * out_elems
+            elif k == "reduce":
+                totals["flops"] += mult * _operand_bytes(op, comp) / 4.0
+            # ---- bytes (skip fusion internals; region-aware slices) ----
+            if not in_fusion and k not in _NO_BYTES:
+                pure = _pure_transparent_bytes(op, comp, comps)
+                if pure is not None:
+                    b = pure
+                elif k == "fusion":
+                    b = _fusion_traffic(op, comp, comps)
+                else:
+                    b = _op_traffic(op, comp)
+                totals["bytes"] += mult * b
+                bytes_by_kind[k] += mult * b
+                if mult * b > 1e9:
+                    top_ops.append((mult * b, f"{comp_name}/{op.name} "
+                                    f"[{k}] x{mult:g}"))
+            # ---- collectives ----
+            if k in COLLECTIVE_FACTORS and not in_fusion:
+                kind, factor = COLLECTIVE_FACTORS[k]
+                raw = op.bytes_ if kind == "result" \
+                    else _operand_bytes(op, comp)
+                totals["collective_bytes"] += mult * factor * raw
+                by_coll[k] += mult * raw
+                n_coll[k] += int(mult)
+            # ---- recursion ----
+            if k == "fusion":
+                mc = _CALLS_RE.search(op.line)
+                if mc:
+                    visit(mc.group(1), mult, True)
+            elif k == "while":
+                trips = _trip_count(op, comps)
+                mw = _WHILE_RE.search(op.line)
+                if mw:
+                    visit(mw.group(1), mult * trips, in_fusion)  # cond
+                    visit(mw.group(2), mult * trips, in_fusion)  # body
+            elif k in ("call", "conditional", "custom-call", "reduce",
+                       "sort", "scatter", "map", "reduce-window",
+                       "select-and-scatter", "reduce-scatter", "all-reduce"):
+                mt = _TO_APPLY_RE.search(op.line) or _CALLS_RE.search(op.line)
+                if mt:
+                    visit(mt.group(1), mult, in_fusion)
+        visited_stack.pop()
+
+    visit(entry.name, 1.0, False)
+    totals["collectives_by_op"] = dict(by_coll)
+    totals["collectives_count"] = dict(n_coll)
+    totals["bytes_by_kind"] = dict(bytes_by_kind)
+    totals["top_bytes_ops"] = [f"{b/1e9:.1f}GB {s}" for b, s in
+                               sorted(top_ops, reverse=True)[:20]]
+    return totals
+
+
+def summarize(hlo_text: str) -> str:
+    return json.dumps(analyze(hlo_text), indent=2)

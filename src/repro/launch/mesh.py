@@ -1,0 +1,41 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state — required because the dry-run
+must set XLA_FLAGS before any jax initialization.
+
+Topology: TPU v5e, 256 chips per pod arranged (data=16, model=16); the
+multi-pod mesh adds a leading ``pod`` axis (2 pods = 512 chips). The `model`
+axis maps to the pod's fast ICI dimension (TP/EP/SP traffic); `data` carries
+DP gradient reduction; `pod` crosses DCN (gradient all-reduce only — which
+is why gradient compression in distributed/compression.py targets it).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, found {len(devices)} — run "
+            "under launch/dryrun.py (sets xla_force_host_platform_device_"
+            "count) or on real hardware")
+    import numpy as np
+    dev_array = np.asarray(devices[:n]).reshape(shape)
+    from jax.sharding import Mesh
+    return Mesh(dev_array, axes)
+
+
+def make_host_mesh():
+    """1-device mesh for CPU smoke tests (same axis names as single-pod)."""
+    import numpy as np
+    from jax.sharding import Mesh
+    return Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))

@@ -1,0 +1,54 @@
+"""Refresh dry-run JSONs from saved HLO texts with the CURRENT analyzer —
+accounting improvements shouldn't force 80 recompiles.
+
+    PYTHONPATH=src python -m repro.launch.reanalyze results/dryrun
+"""
+from __future__ import annotations
+
+import glob
+import gzip
+import json
+import os
+import sys
+
+from repro.core import perf_model
+from repro.launch import hlo_analysis
+
+
+def refresh(out_dir: str) -> None:
+    for jpath in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(jpath) as f:
+            r = json.load(f)
+        if r.get("status") != "ok":
+            continue
+        base = os.path.basename(jpath)[:-5]
+        hpath = os.path.join(out_dir, "hlo", base + ".hlo.gz")
+        if not os.path.exists(hpath):
+            print(f"[skip] {base}: no saved HLO")
+            continue
+        with gzip.open(hpath, "rt") as f:
+            hlo = f.read()
+        stats = hlo_analysis.analyze(hlo)
+        rl = perf_model.roofline(stats["flops"], stats["bytes"],
+                                 stats["collective_bytes"], 1)
+        r["per_device"] = {
+            "flops": stats["flops"], "bytes": stats["bytes"],
+            "collective_bytes": stats["collective_bytes"],
+            "collectives_by_op": stats["collectives_by_op"],
+            "collectives_count": stats["collectives_count"],
+            "bytes_by_kind": stats["bytes_by_kind"],
+            "top_bytes_ops": stats["top_bytes_ops"],
+        }
+        r["roofline"] = {"compute_s": rl.compute_s, "memory_s": rl.memory_s,
+                         "collective_s": rl.collective_s, "bound": rl.bound}
+        r["useful_compute_ratio"] = (r["model_flops_per_device"]
+                                     / max(stats["flops"], 1.0))
+        with open(jpath, "w") as f:
+            json.dump(r, f, indent=2)
+        print(f"[ok] {base}: mem={rl.memory_s:.3f}s "
+              f"coll={rl.collective_s:.3f}s comp={rl.compute_s:.3f}s "
+              f"-> {rl.bound}")
+
+
+if __name__ == "__main__":
+    refresh(sys.argv[1] if len(sys.argv) > 1 else "results/dryrun")

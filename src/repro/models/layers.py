@@ -1,0 +1,562 @@
+"""Shared transformer building blocks (pure functions + dict params).
+
+Conventions (used by distributed/sharding.py path rules):
+  * params are nested dicts; leaf names fix the sharding rule:
+      embed (V, D) | wq/wk/wv (D, H*hd) | wo (H*hd, D)
+      w_gate/w_up (D, F) | w_down (F, D) | unembed (D, V)
+      scale (D,) norms | q_norm/k_norm (hd,)
+  * weights are stored fp32; compute casts to ``dtype`` (bf16 on TPU);
+    norms/softmax/rope run in fp32.
+  * attention supports GQA, causal & sliding-window masks, logit softcap,
+    qk-norm, cross-attention, and single-token decode against a KV cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import dense_init, embed_init
+
+NEG_INF = -2.3819763e38  # max bf16-representable negative; avoids inf-inf NaNs
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(d: int) -> dict:
+    return {"scale": jnp.zeros((d,), jnp.float32)}  # gemma-style (1+scale)
+
+
+def rmsnorm(p: dict, x: jax.Array, *, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * (1.0 + p["scale"])
+    return y.astype(x.dtype)
+
+
+def init_layernorm(d: int) -> dict:
+    return {"scale": jnp.ones((d,), jnp.float32),
+            "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm(p: dict, x: jax.Array, *, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope(x: jax.Array, positions: jax.Array, *, theta: float = 10_000.0,
+         scaling: float = 1.0) -> jax.Array:
+    """x (..., S, H, hd); positions (..., S) int32. fp32 internally."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs / scaling  # (...,S,half)
+    cos = jnp.cos(ang)[..., None, :]     # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    xf = x.astype(jnp.float32)
+    x1, x2 = xf[..., :half], xf[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA / MQA / MHA, causal / sliding-window / cross, cached decode)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnCfg:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    rope_theta: float = 10_000.0
+    rope_scaling: float = 1.0
+    qk_norm: bool = False
+    window: int | None = None        # sliding-window size (None = full)
+    softcap: float | None = None     # attention-logit softcap
+    use_rope: bool = True
+    bias: bool = False               # projection biases (whisper)
+    cache_upcast: bool = True        # decode: materialize fp32 cache copy
+    # (baseline-faithful). False = §Perf O4: score in the cache dtype with
+    # fp32 ACCUMULATION (preferred_element_type) — no fp32 cache replica.
+
+
+def init_attention(key: jax.Array, cfg: AttnCfg) -> dict:
+    ks = jax.random.split(key, 4)
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    p = {
+        "wq": dense_init(ks[0], (d, h * hd)),
+        "wk": dense_init(ks[1], (d, kv * hd)),
+        "wv": dense_init(ks[2], (d, kv * hd)),
+        "wo": dense_init(ks[3], (h * hd, d)),
+    }
+    if cfg.bias:
+        p["bq"] = jnp.zeros((h * hd,), jnp.float32)
+        p["bv"] = jnp.zeros((kv * hd,), jnp.float32)
+        p["bo"] = jnp.zeros((d,), jnp.float32)
+    if cfg.qk_norm:
+        p["q_norm"] = init_rmsnorm(hd)
+        p["k_norm"] = init_rmsnorm(hd)
+    return p
+
+
+def _mask_bias(q_pos: jax.Array, k_pos: jax.Array, window: int | None,
+               causal: bool) -> jax.Array:
+    """(..., S_q, S_k) additive fp32 mask from position vectors."""
+    dq = q_pos[..., :, None]
+    dk = k_pos[..., None, :]
+    ok = jnp.ones(jnp.broadcast_shapes(dq.shape, dk.shape), bool)
+    if causal:
+        ok &= dk <= dq
+    if window is not None:
+        ok &= dk > dq - window
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def attention(p: dict, cfg: AttnCfg, x: jax.Array, positions: jax.Array,
+              *, kv_x: jax.Array | None = None,
+              kv_positions: jax.Array | None = None,
+              cache: dict | None = None, causal: bool = True) -> tuple:
+    """General attention.
+
+    x (B, S, D). Self-attention by default; pass ``kv_x`` for cross-attention
+    (then causal/rope on kv side follow kv_positions and cache is ignored).
+    With ``cache`` (dict k/v (B, S_max, kv, hd), pos scalar int32): appends
+    this call's kv at [pos, pos+S) and attends over the whole cache (decode /
+    chunked prefill). Returns (out (B, S, D), new_cache|None).
+    """
+    B, S, D = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    dt = x.dtype
+
+    q = (x @ p["wq"].astype(dt)).reshape(B, S, h, hd)
+    if "bq" in p:
+        q = q + p["bq"].astype(dt).reshape(h, hd)
+    src = kv_x if kv_x is not None else x
+    Sk = src.shape[1]
+    k = (src @ p["wk"].astype(dt)).reshape(B, Sk, kv, hd)
+    v = (src @ p["wv"].astype(dt)).reshape(B, Sk, kv, hd)
+    if "bv" in p:
+        v = v + p["bv"].astype(dt).reshape(kv, hd)
+
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q)
+        k = rmsnorm(p["k_norm"], k)
+
+    k_pos = kv_positions if kv_positions is not None else positions
+    if cfg.use_rope and kv_x is None:
+        q = rope(q, positions, theta=cfg.rope_theta, scaling=cfg.rope_scaling)
+        k = rope(k, k_pos, theta=cfg.rope_theta, scaling=cfg.rope_scaling)
+
+    new_cache = None
+    if cache is not None:
+        # append at cache["pos"] (same for all rows: aligned serving batch)
+        pos0 = cache["pos"]
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                          (0, pos0, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                          (0, pos0, 0, 0))
+        new_cache = {"k": ck, "v": cv, "pos": pos0 + S}
+        k, v = ck.astype(dt), cv.astype(dt)
+        Sk = k.shape[1]
+        k_pos = jnp.arange(Sk, dtype=jnp.int32)[None, :]
+        # entries beyond pos0+S are invalid -> masked below via positions
+        k_valid = k_pos < (pos0 + S)
+    else:
+        k_valid = None
+        if k_pos.ndim == 1:
+            k_pos = k_pos[None, :]
+
+    if positions.ndim == 1:
+        positions = positions[None, :]
+
+    # group query heads over kv heads: (B, S, kv, h/kv, hd)
+    g = h // kv
+    qg = q.reshape(B, S, kv, g, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    scores = jnp.einsum("bsngd,btnd->bnstg", qg, kf) / math.sqrt(hd)
+    # scores: (B, kv, S_q, S_k=t, g) -> reorder to (B, kv, g, S_q, S_k)
+    scores = jnp.moveaxis(scores, -1, 2)
+    if cfg.softcap is not None:
+        scores = jnp.tanh(scores / cfg.softcap) * cfg.softcap
+    bias = _mask_bias(positions, k_pos, cfg.window,
+                      causal and kv_x is None)          # (B, S_q, S_k)
+    scores = scores + bias[:, None, None, :, :]
+    if k_valid is not None:
+        scores = jnp.where(k_valid[:, None, None, None, :], scores, NEG_INF)
+    attn = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bngst,btnd->bsngd", attn, v.astype(jnp.float32))
+    out = out.reshape(B, S, h * hd).astype(dt)
+    y = out @ p["wo"].astype(dt)
+    if "bo" in p:
+        y = y + p["bo"].astype(dt)
+    return y, new_cache
+
+
+def init_kv_cache(batch: int, max_len: int, cfg: AttnCfg,
+                  dtype=jnp.bfloat16) -> dict:
+    return {
+        "k": jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.d_head), dtype),
+        "v": jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.d_head), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def init_ring_cache(batch: int, window: int, cfg: AttnCfg,
+                    dtype=jnp.bfloat16) -> dict:
+    """Rotating KV cache for sliding-window layers: O(window) memory
+    regardless of sequence length (slot = absolute_position % window).
+    This is what makes ``long_500k`` feasible for gemma3's local layers."""
+    return {
+        "k": jnp.zeros((batch, window, cfg.n_kv_heads, cfg.d_head), dtype),
+        "v": jnp.zeros((batch, window, cfg.n_kv_heads, cfg.d_head), dtype),
+        "k_pos": jnp.full((window,), -1, jnp.int32),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_attention(p: dict, cfg: AttnCfg, x: jax.Array, cache: dict) -> tuple:
+    """Single-token decode (S=1) against a full or ring KV cache.
+
+    Returns (out (B, 1, D), new_cache). Scores are (B, h, 1, S_cache) —
+    linear in cache length, no chunking needed.
+    """
+    B, S, D = x.shape
+    assert S == 1, "decode_attention is single-token; use attention() else"
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    dt = x.dtype
+    pos0 = cache["pos"]
+    positions = pos0[None, None]  # (1, 1)
+
+    q = (x @ p["wq"].astype(dt)).reshape(B, 1, h, hd)
+    if "bq" in p:
+        q = q + p["bq"].astype(dt).reshape(h, hd)
+    k = (x @ p["wk"].astype(dt)).reshape(B, 1, kv, hd)
+    v = (x @ p["wv"].astype(dt)).reshape(B, 1, kv, hd)
+    if "bv" in p:
+        v = v + p["bv"].astype(dt).reshape(kv, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q)
+        k = rmsnorm(p["k_norm"], k)
+    if cfg.use_rope:
+        q = rope(q, positions, theta=cfg.rope_theta, scaling=cfg.rope_scaling)
+        k = rope(k, positions, theta=cfg.rope_theta, scaling=cfg.rope_scaling)
+
+    if "k_pos" in cache:  # ring cache
+        W = cache["k"].shape[1]
+        slot = pos0 % W
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                          (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                          (0, slot, 0, 0))
+        k_pos = jax.lax.dynamic_update_slice(cache["k_pos"], pos0[None], (slot,))
+        new_cache = {"k": ck, "v": cv, "k_pos": k_pos, "pos": pos0 + 1}
+        k_pos_b = k_pos[None, :]
+        k_valid = k_pos >= 0
+    else:
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                          (0, pos0, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                          (0, pos0, 0, 0))
+        new_cache = {"k": ck, "v": cv, "pos": pos0 + 1}
+        Sk = ck.shape[1]
+        k_pos_b = jnp.arange(Sk, dtype=jnp.int32)[None, :]
+        k_valid = k_pos_b[0] <= pos0
+
+    g = h // kv
+    if cfg.cache_upcast:
+        kf, vf = ck.astype(jnp.float32), cv.astype(jnp.float32)
+        qg = q.reshape(B, kv, g, hd).astype(jnp.float32)
+    else:
+        kf, vf = ck, cv
+        qg = q.reshape(B, kv, g, hd).astype(ck.dtype)
+    scores = jnp.einsum("bngd,btnd->bngt", qg, kf,
+                        preferred_element_type=jnp.float32) / math.sqrt(hd)
+    if cfg.softcap is not None:
+        scores = jnp.tanh(scores / cfg.softcap) * cfg.softcap
+    bias = _mask_bias(positions, k_pos_b, cfg.window, True)[:, 0]  # (B, S_k)
+    scores = scores + bias[:, None, None, :]
+    scores = jnp.where(k_valid[None, None, None, :], scores, NEG_INF)
+    attn = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bngt,btnd->bngd",
+                     attn if cfg.cache_upcast else attn.astype(cv.dtype),
+                     vf, preferred_element_type=jnp.float32)
+    out = out.reshape(B, 1, h * hd)
+    y = out.astype(dt) @ p["wo"].astype(dt)
+    if "bo" in p:
+        y = y + p["bo"].astype(dt)
+    return y, new_cache
+
+
+def pruned_decode_attention(p: dict, cfg: AttnCfg, x: jax.Array,
+                            cache: dict, keep: int,
+                            prune_a: float = 0.0,
+                            prune_w: float = -1.0) -> tuple:
+    """Single-token decode with SAT-style positional KV pruning — the
+    paper's prune-before-fetch at the KV cache (DESIGN.md §5): score every
+    cache slot from POSITION metadata only (a + w*log1p(age)), keep the
+    top-k, gather and attend over just those k rows. Because scores depend
+    only on positions, the index set is shared across the batch and heads —
+    one cheap top-k, one k-row gather, exactly the paper's dataflow.
+
+    Full (non-ring) caches only. Returns (out (B,1,D), new_cache).
+    """
+    B, S, D = x.shape
+    assert S == 1
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    dt = x.dtype
+    pos0 = cache["pos"]
+    Smax = cache["k"].shape[1]
+
+    q = (x @ p["wq"].astype(dt)).reshape(B, 1, h, hd)
+    knew = (x @ p["wk"].astype(dt)).reshape(B, 1, kv, hd)
+    vnew = (x @ p["wv"].astype(dt)).reshape(B, 1, kv, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q)
+        knew = rmsnorm(p["k_norm"], knew)
+    positions = pos0[None, None]
+    if cfg.use_rope:
+        q = rope(q, positions, theta=cfg.rope_theta,
+                 scaling=cfg.rope_scaling)
+        knew = rope(knew, positions, theta=cfg.rope_theta,
+                    scaling=cfg.rope_scaling)
+    ck = jax.lax.dynamic_update_slice(cache["k"],
+                                      knew.astype(cache["k"].dtype),
+                                      (0, pos0, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"],
+                                      vnew.astype(cache["v"].dtype),
+                                      (0, pos0, 0, 0))
+    new_cache = {"k": ck, "v": cv, "pos": pos0 + 1}
+
+    # metadata-only scores -> top-k index set (shared across batch/heads)
+    k_pos = jnp.arange(Smax, dtype=jnp.int32)
+    age = jnp.maximum(pos0 - k_pos, 0).astype(jnp.float32)
+    meta = prune_a + prune_w * jnp.log1p(age)
+    meta = jnp.where(k_pos <= pos0, meta, -jnp.inf)
+    _, idx = jax.lax.top_k(meta, keep)
+
+    k_sel = jnp.take(ck, idx, axis=1)
+    v_sel = jnp.take(cv, idx, axis=1)
+    pos_sel = jnp.take(k_pos, idx)
+    g = h // kv
+    qg = q.reshape(B, kv, g, hd).astype(k_sel.dtype)
+    s = jnp.einsum("bngd,btnd->bngt", qg, k_sel,
+                   preferred_element_type=jnp.float32) / math.sqrt(hd)
+    if cfg.softcap is not None:
+        s = jnp.tanh(s / cfg.softcap) * cfg.softcap
+    valid = pos_sel <= pos0
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    attn = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bngt,btnd->bngd", attn.astype(v_sel.dtype), v_sel,
+                     preferred_element_type=jnp.float32)
+    y = out.reshape(B, 1, h * hd).astype(dt) @ p["wo"].astype(dt)
+    if "bo" in p:
+        y = y + p["bo"].astype(dt)
+    return y, new_cache
+
+
+def chunked_attention(p: dict, cfg: AttnCfg, x: jax.Array,
+                      positions: jax.Array, *, kv_x: jax.Array | None = None,
+                      kv_positions: jax.Array | None = None,
+                      causal: bool = True, q_block: int = 512,
+                      k_block: int = 1024,
+                      remat_qblocks: bool = False) -> jax.Array:
+    """Flash-style attention: scan over query blocks; online-softmax scan
+    over key blocks. Peak live buffer is O(q_block * k_block) instead of
+    O(S^2) — required to fit train_4k / prefill_32k activations in HBM.
+
+    ``remat_qblocks`` (§Perf optimization H1): wrap each query block's
+    key-scan in jax.checkpoint so the BACKWARD recomputes the scores
+    instead of autodiff stacking per-k-step fp32 score residuals to HBM —
+    the flash-attention backward realized with JAX remat. Off by default
+    (the paper-faithful baseline measures the naive autodiff cost).
+
+    For sliding-window layers the key range per query block is exactly
+    ``q_block + window`` wide, fetched with one dynamic_slice — compute
+    scales with the window, not the sequence (the same score-then-fetch
+    spirit as the paper's neighbor pruning, applied to positions).
+    """
+    B, S, D = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    dt = x.dtype
+    g = h // kv
+
+    q = (x @ p["wq"].astype(dt)).reshape(B, S, h, hd)
+    if "bq" in p:
+        q = q + p["bq"].astype(dt).reshape(h, hd)
+    src = kv_x if kv_x is not None else x
+    Sk = src.shape[1]
+    k = (src @ p["wk"].astype(dt)).reshape(B, Sk, kv, hd)
+    v = (src @ p["wv"].astype(dt)).reshape(B, Sk, kv, hd)
+    if "bv" in p:
+        v = v + p["bv"].astype(dt).reshape(kv, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q)
+        k = rmsnorm(p["k_norm"], k)
+    k_pos = kv_positions if kv_positions is not None else positions
+    if k_pos.ndim == 1:
+        k_pos = jnp.broadcast_to(k_pos[None, :], (B, Sk))
+    if positions.ndim == 1:
+        positions = jnp.broadcast_to(positions[None, :], (B, S))
+    if cfg.use_rope and kv_x is None:
+        q = rope(q, positions, theta=cfg.rope_theta, scaling=cfg.rope_scaling)
+        k = rope(k, k_pos, theta=cfg.rope_theta, scaling=cfg.rope_scaling)
+
+    is_causal = causal and kv_x is None
+
+    # pad S to a q_block multiple and Sk to a k_block multiple; padded key
+    # slots carry kv_ok=False and are masked to NEG_INF, padded query rows
+    # are sliced off at the end.
+    qb = min(q_block, S)
+    S_p = -(-S // qb) * qb
+    kb = min(k_block, Sk)
+    Sk_p = -(-Sk // kb) * kb
+    if S_p != S:
+        q = jnp.pad(q, ((0, 0), (0, S_p - S), (0, 0), (0, 0)))
+        positions = jnp.pad(positions, ((0, 0), (0, S_p - S)),
+                            mode="edge")
+    kv_ok = jnp.arange(Sk_p) < Sk
+    if Sk_p != Sk:
+        k = jnp.pad(k, ((0, 0), (0, Sk_p - Sk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, Sk_p - Sk), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, Sk_p - Sk)), mode="edge")
+    S_orig, S, Sk = S, S_p, Sk_p
+    n_q = S // qb
+
+    def score_block(qi, ki, qpos_i, kpos_i, ok_i):
+        """(B,qb,kv,g,hd),(B,kb,kv,hd) -> (B,kv,g,qb,kb) fp32 masked scores."""
+        s = jnp.einsum("bsngd,btnd->bngst", qi.astype(jnp.float32),
+                       ki.astype(jnp.float32)) / math.sqrt(hd)
+        if cfg.softcap is not None:
+            s = jnp.tanh(s / cfg.softcap) * cfg.softcap
+        bias = _mask_bias(qpos_i, kpos_i, cfg.window, is_causal)
+        bias = jnp.where(ok_i[None, None, :], bias, NEG_INF)
+        return s + bias[:, None, None, :, :]
+
+    if cfg.window is not None and kv_x is None:
+        # windowed path: one K slice of width qb + window per query block
+        Wk = min(cfg.window + qb, Sk)
+
+        def q_step(_, i):
+            qi = jax.lax.dynamic_slice_in_dim(q, i * qb, qb, 1)
+            qi = qi.reshape(B, qb, kv, g, hd)
+            qpos_i = jax.lax.dynamic_slice_in_dim(positions, i * qb, qb, 1)
+            start = jnp.clip(i * qb + qb - Wk, 0, Sk - Wk)
+            ki = jax.lax.dynamic_slice_in_dim(k, start, Wk, 1)
+            vi = jax.lax.dynamic_slice_in_dim(v, start, Wk, 1)
+            kpos_i = jax.lax.dynamic_slice_in_dim(k_pos, start, Wk, 1)
+            ok_i = jax.lax.dynamic_slice_in_dim(kv_ok, start, Wk, 0)
+            s = score_block(qi, ki, qpos_i, kpos_i, ok_i)
+            a = jax.nn.softmax(s, axis=-1)
+            o = jnp.einsum("bngst,btnd->bsngd", a, vi.astype(jnp.float32))
+            return None, o.reshape(B, qb, h, hd)
+
+        _, blocks = jax.lax.scan(q_step, None, jnp.arange(n_q))
+    else:
+        n_k = Sk // kb
+
+        def q_inner(qi, qpos_i, k_, v_, kpos_, ok_):
+            def k_step(carry, j):
+                m, l, acc = carry
+                ki = jax.lax.dynamic_slice_in_dim(k_, j * kb, kb, 1)
+                vi = jax.lax.dynamic_slice_in_dim(v_, j * kb, kb, 1)
+                kpos_j = jax.lax.dynamic_slice_in_dim(kpos_, j * kb, kb, 1)
+                ok_j = jax.lax.dynamic_slice_in_dim(ok_, j * kb, kb, 0)
+                s = score_block(qi, ki, qpos_i, kpos_j, ok_j)  # (B,kv,g,qb,kb)
+                m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+                alpha = jnp.exp(m - m_new)
+                ex = jnp.exp(s - m_new[..., None])
+                l_new = l * alpha + jnp.sum(ex, axis=-1)
+                acc_new = (acc * alpha[..., None]
+                           + jnp.einsum("bngst,btnd->bngsd", ex,
+                                        vi.astype(jnp.float32)))
+                return (m_new, l_new, acc_new), None
+
+            init = (jnp.full((B, kv, g, qb), -jnp.inf, jnp.float32),
+                    jnp.zeros((B, kv, g, qb), jnp.float32),
+                    jnp.zeros((B, kv, g, qb, hd), jnp.float32))
+            (m, l, acc), _ = jax.lax.scan(k_step, init, jnp.arange(n_k))
+            o = acc / jnp.maximum(l, 1e-30)[..., None]    # (B,kv,g,qb,hd)
+            return jnp.moveaxis(o, 3, 1).reshape(B, qb, h, hd)
+
+        if remat_qblocks:
+            q_inner = jax.checkpoint(
+                q_inner, policy=jax.checkpoint_policies.nothing_saveable)
+
+        def q_step(_, i):
+            qi = jax.lax.dynamic_slice_in_dim(q, i * qb, qb, 1)
+            qi = qi.reshape(B, qb, kv, g, hd)
+            qpos_i = jax.lax.dynamic_slice_in_dim(positions, i * qb, qb, 1)
+            return None, q_inner(qi, qpos_i, k, v, k_pos, kv_ok)
+
+        _, blocks = jax.lax.scan(q_step, None, jnp.arange(n_q))
+
+    out = jnp.moveaxis(blocks, 0, 1).reshape(B, S, h * hd)
+    out = out[:, :S_orig].astype(dt)
+    y = out @ p["wo"].astype(dt)
+    if "bo" in p:
+        y = y + p["bo"].astype(dt)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key: jax.Array, d: int, f: int, *, gated: bool = True) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {"w_up": dense_init(ks[0], (d, f)), "w_down": dense_init(ks[1], (f, d))}
+    if gated:
+        p["w_gate"] = dense_init(ks[2], (d, f))
+    return p
+
+
+def mlp(p: dict, x: jax.Array, *, act: str = "silu") -> jax.Array:
+    dt = x.dtype
+    up = x @ p["w_up"].astype(dt)
+    if "w_gate" in p:
+        gate = x @ p["w_gate"].astype(dt)
+        if act == "silu":
+            hidden = jax.nn.silu(gate) * up
+        else:
+            hidden = jax.nn.gelu(gate, approximate=True) * up
+    else:
+        hidden = jax.nn.gelu(up, approximate=True)
+    return hidden @ p["w_down"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def init_embed(key: jax.Array, vocab: int, d: int) -> dict:
+    return {"embed": embed_init(key, (vocab, d))}
+
+
+def embed(p: dict, tokens: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
+    return p["embed"].astype(dtype)[tokens]
+
+
+def init_unembed(key: jax.Array, d: int, vocab: int) -> dict:
+    return {"unembed": dense_init(key, (d, vocab))}
+
+
+def unembed(p: dict, x: jax.Array) -> jax.Array:
+    # logits in fp32 for a numerically-stable softmax/cross-entropy
+    return (x @ p["unembed"].astype(x.dtype)).astype(jnp.float32)

@@ -1,0 +1,120 @@
+"""Uniform adapter over the model families (transformer / mamba2 / rglru /
+whisper / vision_lm): one signature for losses, decode steps, abstract
+parameter trees and input specs, so the launcher, dry-run, trainer and tests
+never special-case a family.
+
+Batch layouts (all leaves jnp arrays or ShapeDtypeStructs):
+  train:   {"tokens": (B,S) i32, "targets": (B,S) i32 [, "frames"|"vision"]}
+  decode:  {"token": (B,1) i32, "caches": <family cache tree>}
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer, mamba2, rglru, whisper, vision_lm
+
+FAMILIES = {
+    "transformer": transformer,
+    "mamba2": mamba2,
+    "rglru": rglru,
+    "whisper": whisper,
+    "vision_lm": vision_lm,
+}
+
+
+def family_of(cfg) -> str:
+    if isinstance(cfg, transformer.LMConfig):
+        return "transformer"
+    if isinstance(cfg, mamba2.MambaConfig):
+        return "mamba2"
+    if isinstance(cfg, rglru.GriffinConfig):
+        return "rglru"
+    if isinstance(cfg, whisper.WhisperConfig):
+        return "whisper"
+    if isinstance(cfg, vision_lm.VisionLMConfig):
+        return "vision_lm"
+    raise TypeError(type(cfg))
+
+
+def init_params(key: jax.Array, cfg):
+    return FAMILIES[family_of(cfg)].init(key, cfg)
+
+
+def abstract_params(cfg):
+    return FAMILIES[family_of(cfg)].init_abstract(cfg)
+
+
+def loss_fn(params, cfg, batch: dict) -> jax.Array:
+    fam = family_of(cfg)
+    if fam == "whisper":
+        return whisper.loss_fn(params, cfg, batch["frames"], batch["tokens"],
+                               batch["targets"])
+    if fam == "vision_lm":
+        return vision_lm.loss_fn(params, cfg, batch["tokens"],
+                                 batch["vision"], batch["targets"])
+    return FAMILIES[fam].loss_fn(params, cfg, batch["tokens"],
+                                 batch["targets"])
+
+
+def decode_fn(params, cfg, batch: dict):
+    """One serve step: next-token logits + updated caches."""
+    return FAMILIES[family_of(cfg)].decode_step(params, cfg, batch["token"],
+                                                batch["caches"])
+
+
+def abstract_caches(cfg, batch: int, seq_len: int):
+    fam = family_of(cfg)
+    mod = FAMILIES[fam]
+    return jax.eval_shape(
+        lambda: mod.init_caches(cfg, batch, seq_len))
+
+
+def train_inputs(cfg, batch: int, seq_len: int, *, abstract: bool = True):
+    """ShapeDtypeStruct batch for a training step (dry-run path)."""
+    fam = family_of(cfg)
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((batch, seq_len), jnp.int32),
+        "targets": jax.ShapeDtypeStruct((batch, seq_len), jnp.int32),
+    }
+    if fam == "whisper":
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (batch, cfg.n_frames, cfg.d_model), jnp.bfloat16)
+    if fam == "vision_lm":
+        specs["vision"] = jax.ShapeDtypeStruct(
+            (batch, cfg.n_patches, cfg.d_model), jnp.bfloat16)
+    if not abstract:
+        specs = jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype), specs,
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    return specs
+
+
+def decode_inputs(cfg, batch: int, seq_len: int, *, abstract: bool = True):
+    """ShapeDtypeStruct batch for a single-token decode step against a
+    seq_len-long cache (dry-run path)."""
+    specs = {
+        "token": jax.ShapeDtypeStruct((batch, 1), jnp.int32),
+        "caches": abstract_caches(cfg, batch, seq_len),
+    }
+    if not abstract:
+        specs = jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype), specs,
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    return specs
+
+
+def supports_long_context(cfg) -> bool:
+    """True when decode memory/compute per token is sub-linear in history
+    (SSM/hybrid) or dominated by windowed layers (gemma3-style local:global).
+    Pure full-attention archs skip ``long_500k`` (DESIGN.md §5)."""
+    fam = family_of(cfg)
+    if fam in ("mamba2", "rglru"):
+        return True
+    if fam == "transformer":
+        return cfg.window is not None and "local" in cfg.pattern
+    return False
+
+
+def has_decode(cfg) -> bool:
+    return True  # all assigned archs are decoder-bearing (whisper: enc-dec)

@@ -1,0 +1,334 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) language model.
+
+The SSD layer computes, per head h with scalar decay A_h < 0:
+
+    state_t = exp(dt_t A) state_{t-1} + dt_t B_t x_t^T        (P x N outer)
+    y_t     = C_t . state_t + D x_t
+
+Training uses the chunked block-decomposition (the "duality"): sequences are
+split into chunks of Q tokens; within a chunk the quadratic form
+(C_t.B_s) exp(l_t - l_s) dt_s runs on the MXU like attention, across chunks a
+``lax.scan`` carries the (B, H, P, N) state. Because A < 0 and dt > 0 every
+exponent is <= 0 — all decays live in (0, 1], no overflow anywhere.
+
+Decode is the O(1) recurrence — the reason this arch runs the ``long_500k``
+cell that quadratic-attention models skip.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import FrozenConfig, fold_path, dense_init
+from repro.models import layers as L
+from repro.distributed import sharding as shd
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaConfig(FrozenConfig):
+    arch: str = "mamba2"
+    n_layers: int = 24
+    d_model: int = 768
+    expand: int = 2
+    d_head: int = 64            # SSD head dim P
+    d_state: int = 128          # N
+    n_groups: int = 1           # B/C groups G
+    conv_width: int = 4
+    vocab: int = 50_280
+    chunk: int = 128            # SSD chunk length Q
+    dtype: str = "bfloat16"
+    remat: str = "nothing"
+    loss_chunk: int = 512
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.d_head
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.n_groups * self.d_state
+
+    @property
+    def compute_dtype(self):
+        return jnp.bfloat16 if self.dtype == "bfloat16" else jnp.float32
+
+    @property
+    def n_params(self) -> int:
+        d, di = self.d_model, self.d_inner
+        proj_in = d * (2 * di + 2 * self.n_groups * self.d_state
+                       + self.n_heads)
+        conv = self.conv_dim * self.conv_width
+        per_layer = (proj_in + conv + 3 * self.n_heads + di * d + d + di)
+        return self.vocab * d * 2 + self.n_layers * per_layer + d
+
+    n_active_params = n_params
+
+
+def _init_layer(key: jax.Array, cfg: MambaConfig) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    H = cfg.n_heads
+    return {
+        "norm": L.init_rmsnorm(cfg.d_model),
+        "in_proj": dense_init(k1, (cfg.d_model,
+                                   2 * cfg.d_inner
+                                   + 2 * cfg.n_groups * cfg.d_state + H)),
+        "conv_w": dense_init(k2, (cfg.conv_width, cfg.conv_dim), scale=0.5),
+        "conv_b": jnp.zeros((cfg.conv_dim,), jnp.float32),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, H).astype(jnp.float32)),
+        "d_skip": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.logspace(-3, -1, H).astype(jnp.float32))),  # softplus^-1
+        "gate_norm": L.init_rmsnorm(cfg.d_inner),
+        "out_proj": dense_init(k3, (cfg.d_inner, cfg.d_model)),
+    }
+
+
+def init(key: jax.Array, cfg: MambaConfig) -> dict:
+    lkeys = jax.random.split(fold_path(key, "layers"), cfg.n_layers)
+    layers = jax.vmap(lambda k: _init_layer(k, cfg))(lkeys)
+    return {
+        "embed": L.init_embed(fold_path(key, "embed"), cfg.vocab, cfg.d_model),
+        "layers": layers,
+        "final_norm": L.init_rmsnorm(cfg.d_model),
+        "head": L.init_unembed(fold_path(key, "head"), cfg.d_model, cfg.vocab),
+    }
+
+
+def init_abstract(cfg: MambaConfig):
+    return jax.eval_shape(lambda: init(jax.random.key(0), cfg))
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+
+
+def _split_proj(cfg: MambaConfig, zxbcdt: jax.Array):
+    di, g, n, h = cfg.d_inner, cfg.n_groups, cfg.d_state, cfg.n_heads
+    z = zxbcdt[..., :di]
+    x = zxbcdt[..., di:2 * di]
+    b = zxbcdt[..., 2 * di:2 * di + g * n]
+    c = zxbcdt[..., 2 * di + g * n:2 * di + 2 * g * n]
+    dt = zxbcdt[..., 2 * di + 2 * g * n:]
+    return z, x, b, c, dt
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: jax.Array | None = None):
+    """Depthwise causal conv. x (B, L, C), w (K, C). With ``state``
+    (B, K-1, C) — streaming mode: prepend and return the new tail."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype)
+              for i in range(K))
+    out = jax.nn.silu(out + b.astype(x.dtype))
+    new_state = xp[:, -(K - 1):] if K > 1 else pad
+    return out, new_state
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+                c: jax.Array, chunk: int, h0: jax.Array | None = None):
+    """SSD scan. x (B,L,H,P) fp32; dt (B,L,H) >0; a (H,) <0;
+    b,c (B,L,G,N). Returns (y (B,L,H,P), h_final (B,H,P,N))."""
+    B, Lx, H, P = x.shape
+    G, N = b.shape[2], b.shape[3]
+    Q = min(chunk, Lx)
+    assert Lx % Q == 0, (Lx, Q)
+    nc = Lx // Q
+    rep = H // G
+
+    def resh(t):  # (B, L, ...) -> (nc, B, Q, ...)
+        return jnp.moveaxis(t.reshape(B, nc, Q, *t.shape[2:]), 1, 0)
+
+    xc, dtc, bc, cc = resh(x), resh(dt), resh(b), resh(c)
+    if h0 is None:
+        h0 = jnp.zeros((B, H, P, N), jnp.float32)
+
+    def step(h, inp):
+        x_c, dt_c, b_c, c_c = inp                    # (B,Q,H,P) etc.
+        la = dt_c * a                                # (B,Q,H) log-decays <0
+        l = jnp.cumsum(la, axis=1)                   # inclusive
+        l_last = l[:, -1]                            # (B,H)
+        bh = jnp.repeat(b_c, rep, axis=2)            # (B,Q,H,N)
+        ch = jnp.repeat(c_c, rep, axis=2)
+
+        # inter-chunk: y_t += exp(l_t) C_t . h_in
+        y_inter = jnp.exp(l)[..., None] * jnp.einsum(
+            "bqhn,bhpn->bqhp", ch, h)
+
+        # intra-chunk quadratic form
+        scores = jnp.einsum("bqhn,bshn->bhqs", ch, bh)
+        lt = l.transpose(0, 2, 1)                    # (B,H,Q)
+        decay = jnp.exp(lt[:, :, :, None] - lt[:, :, None, :])
+        qi = jnp.arange(Q)
+        causal = (qi[:, None] >= qi[None, :])
+        w = scores * jnp.where(causal, decay, 0.0) \
+            * dtc_s(dt_c)                            # (B,H,Q,Q)
+        y_intra = jnp.einsum("bhqs,bshp->bqhp", w, x_c)
+
+        # state carry
+        carry_dec = jnp.exp(l_last)                  # (B,H)
+        w_state = (dt_c * jnp.exp(l_last[:, None] - l))  # (B,Q,H)
+        h_new = h * carry_dec[..., None, None] + jnp.einsum(
+            "bqhn,bqhp,bqh->bhpn", bh, x_c, w_state)
+        return h_new, y_inter + y_intra
+
+    def dtc_s(dt_c):                                 # (B,H,1,Q) dt at s
+        return dt_c.transpose(0, 2, 1)[:, :, None, :]
+
+    h_f, yc = jax.lax.scan(step, h0, (xc, dtc, bc, cc))
+    y = jnp.moveaxis(yc, 0, 1).reshape(B, Lx, H, P)
+    return y, h_f
+
+
+def ssd_ref(x, dt, a, b, c):
+    """Naive per-step recurrence oracle (tests)."""
+    B, Lx, H, P = x.shape
+    G, N = b.shape[2], b.shape[3]
+    rep = H // G
+    bh = jnp.repeat(b, rep, axis=2)
+    ch = jnp.repeat(c, rep, axis=2)
+
+    def step(h, t):
+        xt, dtt, bt, ct = x[:, t], dt[:, t], bh[:, t], ch[:, t]
+        dec = jnp.exp(dtt * a)                       # (B,H)
+        h = h * dec[..., None, None] + jnp.einsum(
+            "bhn,bhp,bh->bhpn", bt, xt, dtt)
+        y = jnp.einsum("bhn,bhpn->bhp", ct, h)
+        return h, y
+
+    h0 = jnp.zeros((B, H, P, N), jnp.float32)
+    _, ys = jax.lax.scan(step, h0, jnp.arange(Lx))
+    return jnp.moveaxis(ys, 0, 1)
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+
+
+def _layer_fwd(lp: dict, cfg: MambaConfig, x: jax.Array,
+               conv_state=None, ssm_state=None, streaming: bool = False):
+    dt_c = x.dtype
+    B, Lx, D = x.shape
+    h = L.rmsnorm(lp["norm"], x)
+    zxbcdt = h @ lp["in_proj"].astype(dt_c)
+    z, xs, b, c, dt = _split_proj(cfg, zxbcdt)
+
+    conv_in = jnp.concatenate([xs, b, c], axis=-1)
+    conv_out, new_conv = _causal_conv(conv_in, lp["conv_w"], lp["conv_b"],
+                                      conv_state)
+    di, g, n = cfg.d_inner, cfg.n_groups, cfg.d_state
+    xs = conv_out[..., :di]
+    b = conv_out[..., di:di + g * n]
+    c = conv_out[..., di + g * n:]
+
+    H, P = cfg.n_heads, cfg.d_head
+    xh = xs.reshape(B, Lx, H, P).astype(jnp.float32)
+    bg = b.reshape(B, Lx, g, n).astype(jnp.float32)
+    cg = c.reshape(B, Lx, g, n).astype(jnp.float32)
+    dtp = jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"])
+    a = -jnp.exp(lp["a_log"])
+
+    if streaming and Lx == 1:
+        # O(1) recurrence
+        rep = H // g
+        bh = jnp.repeat(bg[:, 0], rep, axis=1)       # (B,H,N)
+        ch = jnp.repeat(cg[:, 0], rep, axis=1)
+        dec = jnp.exp(dtp[:, 0] * a)
+        h_new = ssm_state * dec[..., None, None] + jnp.einsum(
+            "bhn,bhp,bh->bhpn", bh, xh[:, 0], dtp[:, 0])
+        y = jnp.einsum("bhn,bhpn->bhp", ch, h_new)[:, None]
+        new_ssm = h_new
+    else:
+        y, new_ssm = ssd_chunked(xh, dtp, a, bg, cg, cfg.chunk, ssm_state)
+
+    y = y + lp["d_skip"][:, None] * xh               # D skip
+    y = y.reshape(B, Lx, di).astype(dt_c)
+    y = L.rmsnorm(lp["gate_norm"], y * jax.nn.silu(z))
+    out = y @ lp["out_proj"].astype(dt_c)
+    return x + out, new_conv, new_ssm
+
+
+def backbone(params: dict, cfg: MambaConfig, tokens: jax.Array) -> jax.Array:
+    x = L.embed(params["embed"], tokens, cfg.compute_dtype)
+
+    def body(lp, x):
+        y, _, _ = _layer_fwd(lp, cfg, x)
+        return y
+
+    if cfg.remat != "none":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+
+    def scan_step(carry, lp):
+        return shd.constrain(body(lp, carry), "carry"), None
+
+    x = shd.constrain(x, "carry")
+    x, _ = jax.lax.scan(scan_step, x, params["layers"])
+    return L.rmsnorm(params["final_norm"], x)
+
+
+def loss_fn(params: dict, cfg: MambaConfig, tokens: jax.Array,
+            targets: jax.Array) -> jax.Array:
+    h = backbone(params, cfg, tokens)
+    B, S, D = h.shape
+    chunk = min(cfg.loss_chunk, S)
+    w = params["head"]["unembed"]
+
+    def step(acc, i):
+        hi = jax.lax.dynamic_slice_in_dim(h, i * chunk, chunk, 1)
+        ti = jax.lax.dynamic_slice_in_dim(targets, i * chunk, chunk, 1)
+        logits = (hi @ w.astype(hi.dtype)).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, ti[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum(lse - gold), None
+
+    total, _ = jax.lax.scan(jax.checkpoint(step), jnp.zeros((), jnp.float32),
+                            jnp.arange(S // chunk))
+    return total / (B * S)
+
+
+def init_caches(cfg: MambaConfig, batch: int, max_len: int,
+                dtype=jnp.bfloat16) -> dict:
+    del max_len  # O(1) state — the whole point
+    nl = cfg.n_layers
+    return {
+        "conv": jnp.zeros((nl, batch, cfg.conv_width - 1, cfg.conv_dim),
+                          dtype),
+        "ssm": jnp.zeros((nl, batch, cfg.n_heads, cfg.d_head, cfg.d_state),
+                         jnp.float32),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_step(params: dict, cfg: MambaConfig, token: jax.Array,
+                caches: dict):
+    x = L.embed(params["embed"], token, cfg.compute_dtype)
+
+    def scan_step(x, inp):
+        lp, conv_s, ssm_s = inp
+        y, nc, ns = _layer_fwd(lp, cfg, x, conv_s, ssm_s, streaming=True)
+        return y, (nc, ns)
+
+    x, (conv_n, ssm_n) = jax.lax.scan(
+        scan_step, x, (params["layers"], caches["conv"], caches["ssm"]))
+    h = L.rmsnorm(params["final_norm"], x)
+    logits = L.unembed(params["head"], h)[:, 0]
+    return logits, {"conv": conv_n, "ssm": ssm_n, "pos": caches["pos"] + 1}
+
+
+def prefill(params: dict, cfg: MambaConfig, tokens: jax.Array):
+    h = backbone(params, cfg, tokens)
+    logits = L.unembed(params["head"], h[:, -1:])[:, 0]
+    return logits, h

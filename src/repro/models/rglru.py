@@ -1,0 +1,339 @@
+"""RecurrentGemma / Griffin hybrid: RG-LRU recurrent blocks + local attention.
+
+Layer pattern is (rec, rec, attn) repeating (1 attention : 2 recurrent), with
+MQA sliding-window attention (window 2048). 38 layers = 12 scanned triples +
+a 2-layer recurrent tail.
+
+RG-LRU (arXiv:2402.19427):
+    r_t = sigmoid(W_a x_t + b_a)                  (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)                  (input gate)
+    a_t = exp(-c * softplus(Lambda) * r_t),  c = 8
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training evaluates the recurrence with ``lax.associative_scan`` (log-depth,
+fully parallel across the sequence); decode is the O(1) step — with the
+paper-eye view: a learned, input-dependent recency decay, the closest
+existing LM mechanism to the paper's SAT time-decay attention (DESIGN.md §5).
+Gate matrices are block-diagonal (n_heads blocks), as in the reference model.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import FrozenConfig, fold_path, dense_init
+from repro.models import layers as L
+from repro.distributed import sharding as shd
+
+C_RGLRU = 8.0
+
+
+@dataclasses.dataclass(frozen=True)
+class GriffinConfig(FrozenConfig):
+    arch: str = "recurrentgemma"
+    n_layers: int = 38
+    d_model: int = 4096
+    lru_width: int = 4096
+    n_heads: int = 16           # attention heads; also gate blocks
+    n_kv_heads: int = 1
+    d_head: int = 256
+    d_ff: int = 12288
+    vocab: int = 256_000
+    window: int = 2048
+    rope_theta: float = 10_000.0
+    pattern: tuple[str, ...] = ("rec", "rec", "attn")
+    dtype: str = "bfloat16"
+    remat: str = "nothing"
+    q_block: int = 512
+    k_block: int = 1024
+    loss_chunk: int = 512
+
+    @property
+    def n_full_blocks(self) -> int:
+        return self.n_layers // len(self.pattern)
+
+    @property
+    def tail(self) -> tuple[str, ...]:
+        r = self.n_layers % len(self.pattern)
+        return self.pattern[:r]
+
+    @property
+    def compute_dtype(self):
+        return jnp.bfloat16 if self.dtype == "bfloat16" else jnp.float32
+
+    def attn_cfg(self) -> L.AttnCfg:
+        return L.AttnCfg(d_model=self.d_model, n_heads=self.n_heads,
+                         n_kv_heads=self.n_kv_heads, d_head=self.d_head,
+                         rope_theta=self.rope_theta, window=self.window)
+
+    @property
+    def n_params(self) -> int:
+        d, w, f = self.d_model, self.lru_width, self.d_ff
+        n_rec = sum(k == "rec" for k in
+                    self.pattern * self.n_full_blocks + self.tail)
+        n_att = self.n_layers - n_rec
+        gate = 2 * self.n_heads * (w // self.n_heads) ** 2
+        rec = 2 * d * w + 4 * w + gate + w + w * d
+        att = d * self.n_heads * self.d_head * 2 \
+            + d * self.n_kv_heads * self.d_head * 2
+        mlp = 3 * d * f
+        return (self.vocab * d * 2 + n_rec * rec + n_att * att
+                + self.n_layers * (mlp + 2 * d) + d)
+
+    n_active_params = n_params
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU
+# ---------------------------------------------------------------------------
+
+
+def init_rglru(key: jax.Array, w: int, n_blocks: int) -> dict:
+    k1, k2 = jax.random.split(key)
+    bw = w // n_blocks
+    return {
+        "w_a": dense_init(k1, (n_blocks, bw, bw)),
+        "b_a": jnp.zeros((w,), jnp.float32),
+        "w_x": dense_init(k2, (n_blocks, bw, bw)),
+        "b_x": jnp.zeros((w,), jnp.float32),
+        # softplus(lambda) in ~(0.1, 1) -> per-step decay a in (0.45, 0.92)^r
+        "lam": jnp.linspace(-2.0, 1.0, w).astype(jnp.float32),
+    }
+
+
+def _block_diag(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x (..., W) @ block-diagonal weight (H, W/H, W/H)."""
+    H, bw, _ = w.shape
+    xs = x.reshape(*x.shape[:-1], H, bw)
+    return jnp.einsum("...hi,hij->...hj", xs, w.astype(x.dtype)).reshape(
+        *x.shape[:-1], H * bw)
+
+
+def rglru_scan(p: dict, x: jax.Array, h0: jax.Array | None = None):
+    """x (B, L, W) -> (y (B, L, W), h_last (B, W)). fp32 recurrence."""
+    B, Lx, W = x.shape
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(_block_diag(xf, p["w_a"]) + p["b_a"])
+    i = jax.nn.sigmoid(_block_diag(xf, p["w_x"]) + p["b_x"])
+    log_a = -C_RGLRU * jax.nn.softplus(p["lam"]) * r       # (B,L,W) <= 0
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * xf)
+
+    if h0 is not None:
+        # fold the carried state into the first step's additive term
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a2 * a1, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(x.dtype), h[:, -1]
+
+
+def rglru_step(p: dict, x: jax.Array, h: jax.Array):
+    """Single decode step: x (B, 1, W), h (B, W) -> (y (B,1,W), h_new)."""
+    xf = x[:, 0].astype(jnp.float32)
+    r = jax.nn.sigmoid(_block_diag(xf, p["w_a"]) + p["b_a"])
+    i = jax.nn.sigmoid(_block_diag(xf, p["w_x"]) + p["b_x"])
+    log_a = -C_RGLRU * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    h_new = a * h.astype(jnp.float32) \
+        + jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * xf)
+    return h_new.astype(x.dtype)[:, None], h_new
+
+
+# ---------------------------------------------------------------------------
+# layers
+# ---------------------------------------------------------------------------
+
+
+def _init_layer(key: jax.Array, cfg: GriffinConfig, kind: str) -> dict:
+    ks = jax.random.split(key, 5)
+    p = {"ln1": L.init_rmsnorm(cfg.d_model), "ln2": L.init_rmsnorm(cfg.d_model),
+         "mlp": L.init_mlp(ks[0], cfg.d_model, cfg.d_ff)}
+    if kind == "rec":
+        w = cfg.lru_width
+        p["rec"] = {
+            "w_gate_in": dense_init(ks[1], (cfg.d_model, w)),
+            "w_main_in": dense_init(ks[2], (cfg.d_model, w)),
+            "conv_w": dense_init(ks[3], (4, w), scale=0.5),
+            "conv_b": jnp.zeros((w,), jnp.float32),
+            "lru": init_rglru(ks[4], w, cfg.n_heads),
+            "w_out": dense_init(ks[1], (w, cfg.d_model)),
+        }
+    else:
+        p["attn"] = L.init_attention(ks[1], cfg.attn_cfg())
+    return p
+
+
+def init(key: jax.Array, cfg: GriffinConfig) -> dict:
+    def init_block(bkey):
+        ks = jax.random.split(bkey, len(cfg.pattern))
+        return {f"l{i}": _init_layer(ks[i], cfg, kind)
+                for i, kind in enumerate(cfg.pattern)}
+
+    bkeys = jax.random.split(fold_path(key, "blocks"), cfg.n_full_blocks)
+    p = {
+        "embed": L.init_embed(fold_path(key, "embed"), cfg.vocab, cfg.d_model),
+        "blocks": jax.vmap(init_block)(bkeys),
+        "final_norm": L.init_rmsnorm(cfg.d_model),
+        "head": L.init_unembed(fold_path(key, "head"), cfg.d_model, cfg.vocab),
+    }
+    if cfg.tail:
+        tkeys = jax.random.split(fold_path(key, "tail"), len(cfg.tail))
+        p["tail"] = {f"l{i}": _init_layer(tkeys[i], cfg, kind)
+                     for i, kind in enumerate(cfg.tail)}
+    return p
+
+
+def init_abstract(cfg: GriffinConfig):
+    return jax.eval_shape(lambda: init(jax.random.key(0), cfg))
+
+
+from repro.models.mamba2 import _causal_conv  # depthwise causal conv (shared)
+
+
+def _layer_fwd(lp: dict, cfg: GriffinConfig, kind: str, x: jax.Array,
+               positions: jax.Array) -> jax.Array:
+    dt = x.dtype
+    h = L.rmsnorm(lp["ln1"], x)
+    if kind == "rec":
+        rp = lp["rec"]
+        gate = jax.nn.gelu(h @ rp["w_gate_in"].astype(dt), approximate=True)
+        main = h @ rp["w_main_in"].astype(dt)
+        main, _ = _causal_conv(main, rp["conv_w"], rp["conv_b"])
+        main, _ = rglru_scan(rp["lru"], main)
+        t_out = (gate * main) @ rp["w_out"].astype(dt)
+    else:
+        t_out = L.chunked_attention(lp["attn"], cfg.attn_cfg(), h, positions,
+                                    q_block=cfg.q_block, k_block=cfg.k_block)
+    x = x + t_out
+    h = L.rmsnorm(lp["ln2"], x)
+    return x + L.mlp(lp["mlp"], h, act="gelu")
+
+
+def backbone(params: dict, cfg: GriffinConfig, tokens: jax.Array) -> jax.Array:
+    B, S = tokens.shape
+    positions = jnp.arange(S, dtype=jnp.int32)
+    x = L.embed(params["embed"], tokens, cfg.compute_dtype)
+    x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+
+    def body(bp, x):
+        for i, kind in enumerate(cfg.pattern):
+            x = _layer_fwd(bp[f"l{i}"], cfg, kind, x, positions)
+        return x
+
+    if cfg.remat != "none":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+
+    def scan_step(carry, bp):
+        return shd.constrain(body(bp, carry), "carry"), None
+
+    x = shd.constrain(x, "carry")
+    x, _ = jax.lax.scan(scan_step, x, params["blocks"])
+    for i, kind in enumerate(cfg.tail):
+        x = _layer_fwd(params["tail"][f"l{i}"], cfg, kind, x, positions)
+    return L.rmsnorm(params["final_norm"], x)
+
+
+def loss_fn(params: dict, cfg: GriffinConfig, tokens: jax.Array,
+            targets: jax.Array) -> jax.Array:
+    h = backbone(params, cfg, tokens)
+    B, S, D = h.shape
+    chunk = min(cfg.loss_chunk, S)
+    w = params["head"]["unembed"]
+
+    def step(acc, i):
+        hi = jax.lax.dynamic_slice_in_dim(h, i * chunk, chunk, 1)
+        ti = jax.lax.dynamic_slice_in_dim(targets, i * chunk, chunk, 1)
+        logits = (hi @ w.astype(hi.dtype)).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, ti[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum(lse - gold), None
+
+    total, _ = jax.lax.scan(jax.checkpoint(step), jnp.zeros((), jnp.float32),
+                            jnp.arange(S // chunk))
+    return total / (B * S)
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+
+def _layer_cache(cfg: GriffinConfig, kind: str, batch: int, dtype):
+    if kind == "rec":
+        return {"conv": jnp.zeros((batch, 3, cfg.lru_width), dtype),
+                "h": jnp.zeros((batch, cfg.lru_width), jnp.float32)}
+    return L.init_ring_cache(batch, cfg.window, cfg.attn_cfg(), dtype)
+
+
+def init_caches(cfg: GriffinConfig, batch: int, max_len: int,
+                dtype=jnp.bfloat16) -> dict:
+    del max_len  # bounded state: ring window + O(1) recurrences
+    def stack(kind):
+        c = _layer_cache(cfg, kind, batch, dtype)
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.n_full_blocks,) + x.shape), c)
+
+    caches = {f"l{i}": stack(kind) for i, kind in enumerate(cfg.pattern)}
+    caches["tail"] = {f"l{i}": _layer_cache(cfg, kind, batch, dtype)
+                      for i, kind in enumerate(cfg.tail)}
+    return caches
+
+
+def _layer_decode(lp: dict, cfg: GriffinConfig, kind: str, x: jax.Array,
+                  cache: dict):
+    dt = x.dtype
+    h = L.rmsnorm(lp["ln1"], x)
+    if kind == "rec":
+        rp = lp["rec"]
+        gate = jax.nn.gelu(h @ rp["w_gate_in"].astype(dt), approximate=True)
+        main = h @ rp["w_main_in"].astype(dt)
+        main, conv_n = _causal_conv(main, rp["conv_w"], rp["conv_b"],
+                                    cache["conv"])
+        main, h_n = rglru_step(rp["lru"], main, cache["h"])
+        t_out = (gate * main) @ rp["w_out"].astype(dt)
+        new_cache = {"conv": conv_n, "h": h_n}
+    else:
+        t_out, new_cache = L.decode_attention(lp["attn"], cfg.attn_cfg(), h,
+                                              cache)
+    x = x + t_out
+    h = L.rmsnorm(lp["ln2"], x)
+    return x + L.mlp(lp["mlp"], h, act="gelu"), new_cache
+
+
+def decode_step(params: dict, cfg: GriffinConfig, token: jax.Array,
+                caches: dict):
+    x = L.embed(params["embed"], token, cfg.compute_dtype)
+    x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+
+    def scan_step(x, inp):
+        bp, bc = inp
+        nc = {}
+        for i, kind in enumerate(cfg.pattern):
+            x, nc[f"l{i}"] = _layer_decode(bp[f"l{i}"], cfg, kind, x,
+                                           bc[f"l{i}"])
+        return x, nc
+
+    block_caches = {k: v for k, v in caches.items() if k != "tail"}
+    x, new_caches = jax.lax.scan(scan_step, x,
+                                 (params["blocks"], block_caches))
+    new_caches["tail"] = {}
+    for i, kind in enumerate(cfg.tail):
+        x, new_caches["tail"][f"l{i}"] = _layer_decode(
+            params["tail"][f"l{i}"], cfg, kind, x, caches["tail"][f"l{i}"])
+    h = L.rmsnorm(params["final_norm"], x)
+    logits = L.unembed(params["head"], h)[:, 0]
+    return logits, new_caches
+
+
+def prefill(params: dict, cfg: GriffinConfig, tokens: jax.Array):
+    h = backbone(params, cfg, tokens)
+    logits = L.unembed(params["head"], h[:, -1:])[:, 0]
+    return logits, h

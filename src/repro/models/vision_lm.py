@@ -1,0 +1,264 @@
+"""Llama-3.2-Vision-style backbone: text decoder with gated cross-attention
+image layers every 5th layer (vision frontend stubbed).
+
+Per the assignment, only the transformer BACKBONE is modeled: ``input_specs``
+provides precomputed patch embeddings (B, n_patches, D) — the ViT frontend is
+a stub. Self layers are llama-3.1 GQA + SwiGLU; cross layers attend from text
+to image tokens with tanh-gated residuals (zero-initialized gates, as in the
+reference model, so the text path is intact at init).
+
+Pattern per scan block: 4 self + 1 cross (40 layers = 8 blocks).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import FrozenConfig, fold_path
+from repro.models import layers as L
+from repro.distributed import sharding as shd
+
+
+@dataclasses.dataclass(frozen=True)
+class VisionLMConfig(FrozenConfig):
+    arch: str = "llama32-vision"
+    n_layers: int = 40
+    d_model: int = 4096
+    n_heads: int = 32
+    n_kv_heads: int = 8
+    d_head: int = 128
+    d_ff: int = 14_336
+    vocab: int = 128_256
+    n_patches: int = 1024        # stubbed vision tokens per sample
+    rope_theta: float = 500_000.0
+    cross_every: int = 5         # every 5th layer is cross-attention
+    dtype: str = "bfloat16"
+    remat: str = "nothing"
+    q_block: int = 512
+    k_block: int = 1024
+    loss_chunk: int = 512
+
+    @property
+    def pattern(self) -> tuple[str, ...]:
+        return ("self",) * (self.cross_every - 1) + ("cross",)
+
+    @property
+    def n_blocks(self) -> int:
+        assert self.n_layers % self.cross_every == 0
+        return self.n_layers // self.cross_every
+
+    @property
+    def compute_dtype(self):
+        return jnp.bfloat16 if self.dtype == "bfloat16" else jnp.float32
+
+    def attn_cfg(self) -> L.AttnCfg:
+        return L.AttnCfg(d_model=self.d_model, n_heads=self.n_heads,
+                         n_kv_heads=self.n_kv_heads, d_head=self.d_head,
+                         rope_theta=self.rope_theta)
+
+    def xattn_cfg(self) -> L.AttnCfg:
+        return L.AttnCfg(d_model=self.d_model, n_heads=self.n_heads,
+                         n_kv_heads=self.n_kv_heads, d_head=self.d_head,
+                         use_rope=False, qk_norm=True)
+
+    @property
+    def n_params(self) -> int:
+        d, f = self.d_model, self.d_ff
+        attn = d * self.n_heads * self.d_head * 2 \
+            + d * self.n_kv_heads * self.d_head * 2
+        per_layer = attn + 3 * d * f + 2 * d
+        return self.vocab * d * 2 + self.n_layers * per_layer + d
+
+    n_active_params = n_params
+
+
+def _init_layer(key: jax.Array, cfg: VisionLMConfig, kind: str) -> dict:
+    ka, km = jax.random.split(key)
+    p = {"ln1": L.init_rmsnorm(cfg.d_model),
+         "ln2": L.init_rmsnorm(cfg.d_model),
+         "mlp": L.init_mlp(km, cfg.d_model, cfg.d_ff)}
+    if kind == "self":
+        p["attn"] = L.init_attention(ka, cfg.attn_cfg())
+    else:
+        p["xattn"] = L.init_attention(ka, cfg.xattn_cfg())
+        p["gate_attn"] = jnp.zeros((), jnp.float32)
+        p["gate_ffn"] = jnp.zeros((), jnp.float32)
+    return p
+
+
+def init(key: jax.Array, cfg: VisionLMConfig) -> dict:
+    def init_block(bkey):
+        ks = jax.random.split(bkey, len(cfg.pattern))
+        return {f"l{i}": _init_layer(ks[i], cfg, kind)
+                for i, kind in enumerate(cfg.pattern)}
+
+    bkeys = jax.random.split(fold_path(key, "blocks"), cfg.n_blocks)
+    return {
+        "embed": L.init_embed(fold_path(key, "embed"), cfg.vocab, cfg.d_model),
+        "blocks": jax.vmap(init_block)(bkeys),
+        "final_norm": L.init_rmsnorm(cfg.d_model),
+        "head": L.init_unembed(fold_path(key, "head"), cfg.d_model, cfg.vocab),
+    }
+
+
+def init_abstract(cfg: VisionLMConfig):
+    return jax.eval_shape(lambda: init(jax.random.key(0), cfg))
+
+
+def _layer_fwd(lp: dict, cfg: VisionLMConfig, kind: str, x: jax.Array,
+               positions: jax.Array, vision: jax.Array) -> jax.Array:
+    h = L.rmsnorm(lp["ln1"], x)
+    if kind == "self":
+        a = L.chunked_attention(lp["attn"], cfg.attn_cfg(), h, positions,
+                                q_block=cfg.q_block, k_block=cfg.k_block)
+        x = x + a
+        h = L.rmsnorm(lp["ln2"], x)
+        return x + L.mlp(lp["mlp"], h)
+    vis_pos = jnp.arange(vision.shape[1], dtype=jnp.int32)
+    a = L.chunked_attention(lp["xattn"], cfg.xattn_cfg(), h, positions,
+                            kv_x=vision.astype(h.dtype),
+                            kv_positions=vis_pos, causal=False,
+                            q_block=cfg.q_block, k_block=cfg.k_block)
+    x = x + jnp.tanh(lp["gate_attn"]).astype(x.dtype) * a
+    h = L.rmsnorm(lp["ln2"], x)
+    return x + jnp.tanh(lp["gate_ffn"]).astype(x.dtype) * L.mlp(lp["mlp"], h)
+
+
+def backbone(params: dict, cfg: VisionLMConfig, tokens: jax.Array,
+             vision: jax.Array) -> jax.Array:
+    B, S = tokens.shape
+    positions = jnp.arange(S, dtype=jnp.int32)
+    x = L.embed(params["embed"], tokens, cfg.compute_dtype)
+
+    def body(bp, x):
+        for i, kind in enumerate(cfg.pattern):
+            x = _layer_fwd(bp[f"l{i}"], cfg, kind, x, positions, vision)
+        return x
+
+    if cfg.remat != "none":
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(
+        lambda c, bp: (shd.constrain(body(bp, c), "carry"), None),
+        shd.constrain(x, "carry"), params["blocks"])
+    return L.rmsnorm(params["final_norm"], x)
+
+
+def loss_fn(params: dict, cfg: VisionLMConfig, tokens: jax.Array,
+            vision: jax.Array, targets: jax.Array) -> jax.Array:
+    h = backbone(params, cfg, tokens, vision)
+    B, S, D = h.shape
+    chunk = min(cfg.loss_chunk, S)
+    w = params["head"]["unembed"]
+
+    def step(acc, i):
+        hi = jax.lax.dynamic_slice_in_dim(h, i * chunk, chunk, 1)
+        ti = jax.lax.dynamic_slice_in_dim(targets, i * chunk, chunk, 1)
+        logits = (hi @ w.astype(hi.dtype)).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, ti[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum(lse - gold), None
+
+    total, _ = jax.lax.scan(jax.checkpoint(step), jnp.zeros((), jnp.float32),
+                            jnp.arange(S // chunk))
+    return total / (B * S)
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+
+def init_caches(cfg: VisionLMConfig, batch: int, max_len: int,
+                params: dict | None = None,
+                vision: jax.Array | None = None,
+                dtype=jnp.bfloat16) -> dict:
+    """Self-KV caches per block + fixed cross K/V from the vision tokens."""
+    nb = cfg.n_blocks
+    caches = {}
+    for i, kind in enumerate(cfg.pattern):
+        if kind == "self":
+            c = L.init_kv_cache(batch, max_len, cfg.attn_cfg(), dtype)
+            caches[f"l{i}"] = jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (nb,) + x.shape), c)
+    kv, hd = cfg.n_kv_heads, cfg.d_head
+    ci = len(cfg.pattern) - 1  # cross position
+    if params is not None and vision is not None:
+        S = vision.shape[1]
+
+        def one(bp):
+            lp = bp[f"l{ci}"]
+            dt = vision.dtype
+            k = (vision @ lp["xattn"]["wk"].astype(dt)).reshape(
+                batch, S, kv, hd)
+            k = L.rmsnorm(lp["xattn"]["k_norm"], k)
+            v = (vision @ lp["xattn"]["wv"].astype(dt)).reshape(
+                batch, S, kv, hd)
+            return k.astype(dtype), v.astype(dtype)
+
+        ck, cv = jax.vmap(one)(params["blocks"])
+    else:
+        ck = jnp.zeros((nb, batch, cfg.n_patches, kv, hd), dtype)
+        cv = jnp.zeros((nb, batch, cfg.n_patches, kv, hd), dtype)
+    caches["cross_k"], caches["cross_v"] = ck, cv
+    return caches
+
+
+def decode_step(params: dict, cfg: VisionLMConfig, token: jax.Array,
+                caches: dict):
+    import math
+    B = token.shape[0]
+    x = L.embed(params["embed"], token, cfg.compute_dtype)
+    ci = len(cfg.pattern) - 1
+    self_keys = [f"l{i}" for i, k in enumerate(cfg.pattern) if k == "self"]
+
+    def scan_step(x, inp):
+        bp, sc, ck, cv = inp
+        new_sc = {}
+        for i, kind in enumerate(cfg.pattern):
+            lp = bp[f"l{i}"]
+            h = L.rmsnorm(lp["ln1"], x)
+            if kind == "self":
+                a, new_sc[f"l{i}"] = L.decode_attention(
+                    lp["attn"], cfg.attn_cfg(), h, sc[f"l{i}"])
+                x = x + a
+                h = L.rmsnorm(lp["ln2"], x)
+                x = x + L.mlp(lp["mlp"], h)
+            else:
+                dt = h.dtype
+                kvh, hd = cfg.n_kv_heads, cfg.d_head
+                q = (h @ lp["xattn"]["wq"].astype(dt)).reshape(
+                    B, kvh, cfg.n_heads // kvh, hd)
+                q = L.rmsnorm(lp["xattn"]["q_norm"], q)
+                s = jnp.einsum("bngd,btnd->bngt", q.astype(jnp.float32),
+                               ck.astype(jnp.float32)) / math.sqrt(hd)
+                attn = jax.nn.softmax(s, axis=-1)
+                o = jnp.einsum("bngt,btnd->bngd", attn,
+                               cv.astype(jnp.float32))
+                o = o.reshape(B, 1, cfg.n_heads * hd).astype(dt)
+                a = o @ lp["xattn"]["wo"].astype(dt)
+                x = x + jnp.tanh(lp["gate_attn"]).astype(dt) * a
+                h = L.rmsnorm(lp["ln2"], x)
+                x = x + jnp.tanh(lp["gate_ffn"]).astype(dt) * L.mlp(
+                    lp["mlp"], h)
+        return x, new_sc
+
+    self_caches = {k: caches[k] for k in self_keys}
+    x, new_self = jax.lax.scan(
+        scan_step, x,
+        (params["blocks"], self_caches, caches["cross_k"],
+         caches["cross_v"]))
+    h = L.rmsnorm(params["final_norm"], x)
+    logits = L.unembed(params["head"], h)[:, 0]
+    out = dict(new_self)
+    out["cross_k"], out["cross_v"] = caches["cross_k"], caches["cross_v"]
+    return logits, out
+
+
+def prefill(params: dict, cfg: VisionLMConfig, tokens: jax.Array,
+            vision: jax.Array):
+    h = backbone(params, cfg, tokens, vision)
+    logits = L.unembed(params["head"], h[:, -1:])[:, 0]
+    return logits, h

@@ -1,0 +1,272 @@
+"""Whisper-style encoder-decoder backbone (audio frontend stubbed).
+
+Per the assignment, the conv frontend is a STUB: ``input_specs()`` provides
+precomputed mel-frame embeddings (B, n_frames, D) — the encoder consumes them
+directly (adding sinusoidal positions). Pre-LayerNorm blocks with biased
+projections and plain-GELU MLPs, per the Whisper architecture; decoder layers
+add cross-attention to the encoder output.
+
+Decode shapes exercise the DECODER: single-token step against a self-KV cache
+of the assigned length plus fixed cross K/V computed once from the encoder.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import FrozenConfig, fold_path, embed_init
+from repro.models import layers as L
+from repro.distributed import sharding as shd
+
+
+@dataclasses.dataclass(frozen=True)
+class WhisperConfig(FrozenConfig):
+    arch: str = "whisper"
+    n_layers: int = 4           # encoder AND decoder layer count
+    d_model: int = 384
+    n_heads: int = 6
+    n_kv_heads: int = 6
+    d_head: int = 64
+    d_ff: int = 1536
+    vocab: int = 51_865
+    n_frames: int = 1500        # encoder positions (30s of audio)
+    max_target: int = 448       # decoder learned-position table size (grown
+                                # to the serving length when needed)
+    dtype: str = "bfloat16"
+    remat: str = "nothing"
+    q_block: int = 512
+    k_block: int = 512
+    loss_chunk: int = 512
+
+    @property
+    def compute_dtype(self):
+        return jnp.bfloat16 if self.dtype == "bfloat16" else jnp.float32
+
+    def attn_cfg(self) -> L.AttnCfg:
+        return L.AttnCfg(d_model=self.d_model, n_heads=self.n_heads,
+                         n_kv_heads=self.n_kv_heads, d_head=self.d_head,
+                         use_rope=False, bias=True)
+
+    @property
+    def n_params(self) -> int:
+        d, f = self.d_model, self.d_ff
+        attn = 4 * d * self.n_heads * self.d_head
+        mlp = 2 * d * f
+        enc = self.n_layers * (attn + mlp + 4 * d)
+        dec = self.n_layers * (2 * attn + mlp + 6 * d)
+        return self.vocab * d + self.max_target * d + enc + dec + 4 * d
+
+    n_active_params = n_params
+
+
+def _sinusoid(n: int, d: int) -> jnp.ndarray:
+    pos = jnp.arange(n, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10_000.0 ** (2 * dim / d))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _init_enc_layer(key, cfg):
+    ka, km = jax.random.split(key)
+    return {"ln1": L.init_layernorm(cfg.d_model),
+            "attn": L.init_attention(ka, cfg.attn_cfg()),
+            "ln2": L.init_layernorm(cfg.d_model),
+            "mlp": L.init_mlp(km, cfg.d_model, cfg.d_ff, gated=False)}
+
+
+def _init_dec_layer(key, cfg):
+    ka, kc, km = jax.random.split(key, 3)
+    return {"ln1": L.init_layernorm(cfg.d_model),
+            "attn": L.init_attention(ka, cfg.attn_cfg()),
+            "ln_x": L.init_layernorm(cfg.d_model),
+            "xattn": L.init_attention(kc, cfg.attn_cfg()),
+            "ln2": L.init_layernorm(cfg.d_model),
+            "mlp": L.init_mlp(km, cfg.d_model, cfg.d_ff, gated=False)}
+
+
+def init(key: jax.Array, cfg: WhisperConfig) -> dict:
+    ekeys = jax.random.split(fold_path(key, "enc"), cfg.n_layers)
+    dkeys = jax.random.split(fold_path(key, "dec"), cfg.n_layers)
+    return {
+        "embed": L.init_embed(fold_path(key, "embed"), cfg.vocab, cfg.d_model),
+        "pos_dec": embed_init(fold_path(key, "pos"),
+                              (cfg.max_target, cfg.d_model)),
+        "enc": jax.vmap(lambda k: _init_enc_layer(k, cfg))(ekeys),
+        "dec": jax.vmap(lambda k: _init_dec_layer(k, cfg))(dkeys),
+        "enc_norm": L.init_layernorm(cfg.d_model),
+        "dec_norm": L.init_layernorm(cfg.d_model),
+    }
+
+
+def init_abstract(cfg: WhisperConfig):
+    return jax.eval_shape(lambda: init(jax.random.key(0), cfg))
+
+
+def encode(params: dict, cfg: WhisperConfig, frames: jax.Array) -> jax.Array:
+    """frames (B, n_frames, D) — precomputed frontend embeddings (stub)."""
+    B, S, D = frames.shape
+    x = frames.astype(cfg.compute_dtype) + _sinusoid(S, D).astype(
+        cfg.compute_dtype)
+    positions = jnp.arange(S, dtype=jnp.int32)
+
+    def body(lp, x):
+        h = L.layernorm(lp["ln1"], x)
+        a, _ = L.attention(lp["attn"], cfg.attn_cfg(), h, positions,
+                           causal=False)
+        x = x + a
+        h = L.layernorm(lp["ln2"], x)
+        return x + L.mlp(lp["mlp"], h)
+
+    if cfg.remat != "none":
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(
+        lambda c, lp: (shd.constrain(body(lp, c), "carry"), None),
+        shd.constrain(x, "carry"), params["enc"])
+    return L.layernorm(params["enc_norm"], x)
+
+
+def _dec_layer(lp, cfg, x, positions, enc_out, enc_pos):
+    h = L.layernorm(lp["ln1"], x)
+    a = L.chunked_attention(lp["attn"], cfg.attn_cfg(), h, positions,
+                            q_block=cfg.q_block, k_block=cfg.k_block)
+    x = x + a
+    h = L.layernorm(lp["ln_x"], x)
+    a = L.chunked_attention(lp["xattn"], cfg.attn_cfg(), h, positions,
+                            kv_x=enc_out, kv_positions=enc_pos, causal=False,
+                            q_block=cfg.q_block, k_block=cfg.k_block)
+    x = x + a
+    h = L.layernorm(lp["ln2"], x)
+    return x + L.mlp(lp["mlp"], h)
+
+
+def _dec_positions(params, cfg, positions):
+    """Learned decoder positions, tiled when serving beyond max_target."""
+    return params["pos_dec"][positions % cfg.max_target]
+
+
+def decode_train(params: dict, cfg: WhisperConfig, tokens: jax.Array,
+                 enc_out: jax.Array) -> jax.Array:
+    B, S = tokens.shape
+    positions = jnp.arange(S, dtype=jnp.int32)
+    x = L.embed(params["embed"], tokens, cfg.compute_dtype)
+    x = x + _dec_positions(params, cfg, positions).astype(x.dtype)
+    enc_pos = jnp.arange(enc_out.shape[1], dtype=jnp.int32)
+
+    def body(lp, x):
+        return _dec_layer(lp, cfg, x, positions, enc_out, enc_pos)
+
+    if cfg.remat != "none":
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(
+        lambda c, lp: (shd.constrain(body(lp, c), "carry"), None),
+        shd.constrain(x, "carry"), params["dec"])
+    return L.layernorm(params["dec_norm"], x)
+
+
+def loss_fn(params: dict, cfg: WhisperConfig, frames: jax.Array,
+            tokens: jax.Array, targets: jax.Array) -> jax.Array:
+    enc_out = encode(params, cfg, frames)
+    h = decode_train(params, cfg, tokens, enc_out)
+    B, S, D = h.shape
+    chunk = min(cfg.loss_chunk, S)
+    w = params["embed"]["embed"].T  # tied unembedding, as in Whisper
+
+    def step(acc, i):
+        hi = jax.lax.dynamic_slice_in_dim(h, i * chunk, chunk, 1)
+        ti = jax.lax.dynamic_slice_in_dim(targets, i * chunk, chunk, 1)
+        logits = (hi @ w.astype(hi.dtype)).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, ti[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum(lse - gold), None
+
+    total, _ = jax.lax.scan(jax.checkpoint(step), jnp.zeros((), jnp.float32),
+                            jnp.arange(S // chunk))
+    return total / (B * S)
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+
+def init_caches(cfg: WhisperConfig, batch: int, max_len: int,
+                params: dict | None = None,
+                enc_out: jax.Array | None = None,
+                dtype=jnp.bfloat16) -> dict:
+    """Self caches for every decoder layer + cross K/V (precomputed once from
+    the encoder output when ``params``+``enc_out`` are given, else zeros —
+    the dry-run path treats the filled caches as inputs)."""
+    nl = cfg.n_layers
+    self_c = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (nl,) + x.shape),
+        L.init_kv_cache(batch, max_len, cfg.attn_cfg(), dtype))
+    kv, hd = cfg.n_kv_heads, cfg.d_head
+    if params is not None and enc_out is not None:
+        S = enc_out.shape[1]
+
+        def one(lp):  # one decoder layer's cross K/V from the encoder output
+            dt = enc_out.dtype
+            k = (enc_out @ lp["xattn"]["wk"].astype(dt))
+            v = (enc_out @ lp["xattn"]["wv"].astype(dt)
+                 + lp["xattn"]["bv"].astype(dt))
+            return (k.reshape(batch, S, kv, hd).astype(dtype),
+                    v.reshape(batch, S, kv, hd).astype(dtype))
+
+        ck, cv = jax.vmap(one)(params["dec"])
+    else:
+        ck = jnp.zeros((nl, batch, cfg.n_frames, kv, hd), dtype)
+        cv = jnp.zeros((nl, batch, cfg.n_frames, kv, hd), dtype)
+    return {"self": self_c, "cross_k": ck, "cross_v": cv}
+
+
+def decode_step(params: dict, cfg: WhisperConfig, token: jax.Array,
+                caches: dict):
+    B = token.shape[0]
+    pos0 = caches["self"]["pos"][0]
+    x = L.embed(params["embed"], token, cfg.compute_dtype)
+    x = x + _dec_positions(params, cfg, pos0[None]).astype(x.dtype)[None]
+
+    def scan_step(x, inp):
+        lp, sc, ck, cv = inp
+        h = L.layernorm(lp["ln1"], x)
+        a, nsc = L.decode_attention(lp["attn"], cfg.attn_cfg(), h, sc)
+        x = x + a
+        # cross-attention: q for 1 token over fixed enc K/V
+        h = L.layernorm(lp["ln_x"], x)
+        dt = h.dtype
+        hd_, kvh = cfg.d_head, cfg.n_kv_heads
+        q = (h @ lp["xattn"]["wq"].astype(dt)
+             + lp["xattn"]["bq"].astype(dt)).reshape(B, kvh,
+                                                     cfg.n_heads // kvh, hd_)
+        s = jnp.einsum("bngd,btnd->bngt", q.astype(jnp.float32),
+                       ck.astype(jnp.float32)) / math.sqrt(hd_)
+        attn = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bngt,btnd->bngd", attn, cv.astype(jnp.float32))
+        o = o.reshape(B, 1, cfg.n_heads * hd_).astype(dt)
+        a = o @ lp["xattn"]["wo"].astype(dt) + lp["xattn"]["bo"].astype(dt)
+        x = x + a
+        h = L.layernorm(lp["ln2"], x)
+        x = x + L.mlp(lp["mlp"], h)
+        return x, nsc
+
+    x, new_self = jax.lax.scan(
+        scan_step, x,
+        (params["dec"], caches["self"], caches["cross_k"], caches["cross_v"]))
+    h = L.layernorm(params["dec_norm"], x)
+    logits = (h @ params["embed"]["embed"].T.astype(h.dtype))
+    return logits.astype(jnp.float32)[:, 0], {
+        "self": new_self, "cross_k": caches["cross_k"],
+        "cross_v": caches["cross_v"]}
+
+
+def prefill(params: dict, cfg: WhisperConfig, frames: jax.Array,
+            tokens: jax.Array):
+    enc_out = encode(params, cfg, frames)
+    h = decode_train(params, cfg, tokens, enc_out)
+    logits = (h[:, -1:] @ params["embed"]["embed"].T.astype(h.dtype))
+    return logits.astype(jnp.float32)[:, 0], enc_out

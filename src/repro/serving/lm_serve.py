@@ -1,0 +1,155 @@
+"""LM serving: batched prefill + decode generation loop, and the
+beyond-paper positional KV pruning (DESIGN.md §5).
+
+``positional_kv_prune`` is the decode-time analogue of the paper's SAT
+neighbor pruning: score every KV-cache entry from POSITION METADATA ONLY
+(a + w * log1p(t_now - t_kv), per kv head), select top-k, and attend over
+just those k entries — the cache gather shrinks from S to k rows exactly as
+the paper's neighbor fetch shrinks from m_r to k. OFF by default; the
+evaluation in EXPERIMENTS.md §Perf treats it as an optional optimization,
+never silently enabled.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.utils import FrozenConfig
+from repro.models import layers as L
+from repro.models import lm_common
+
+
+# ---------------------------------------------------------------------------
+# beyond-paper: SAT-style positional KV pruning
+# ---------------------------------------------------------------------------
+
+
+def init_kv_prune(n_kv_heads: int) -> dict:
+    """Learnable recency scoring per kv head: score = a + w * log1p(age)."""
+    return {"a": jnp.zeros((n_kv_heads,), jnp.float32),
+            "w": jnp.full((n_kv_heads,), -1.0, jnp.float32)}
+
+
+def kv_prune_scores(prune_p: dict, k_pos: jax.Array, now: jax.Array,
+                    n_kv_heads: int) -> jax.Array:
+    """k_pos (S,) absolute positions (-1 invalid) -> scores (kv, S)."""
+    age = jnp.maximum(now - k_pos, 0).astype(jnp.float32)
+    base = prune_p["a"][:, None] + prune_p["w"][:, None] * jnp.log1p(age)
+    return jnp.where(k_pos[None, :] >= 0, base, -jnp.inf)
+
+
+def pruned_decode_attention(p: dict, cfg: L.AttnCfg, x: jax.Array,
+                            cache: dict, prune_p: dict, keep: int):
+    """decode_attention with SAT-style positional top-k cache pruning.
+
+    Identical interface to layers.decode_attention (full cache only).
+    Scores depend only on positions -> the top-k index set is shared across
+    the batch, so the gather is a cheap (k,)-indexed slice of the cache.
+    """
+    B, S, D = x.shape
+    assert S == 1
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    dt = x.dtype
+    pos0 = cache["pos"]
+    Smax = cache["k"].shape[1]
+    k_pos = jnp.arange(Smax, dtype=jnp.int32)
+    k_pos = jnp.where(k_pos <= pos0, k_pos, -1)
+
+    # write this token's kv first (it must be retrievable later)
+    positions = pos0[None, None]
+    q = (x @ p["wq"].astype(dt)).reshape(B, 1, h, hd)
+    knew = (x @ p["wk"].astype(dt)).reshape(B, 1, kv, hd)
+    vnew = (x @ p["wv"].astype(dt)).reshape(B, 1, kv, hd)
+    if cfg.qk_norm:
+        q = L.rmsnorm(p["q_norm"], q)
+        knew = L.rmsnorm(p["k_norm"], knew)
+    if cfg.use_rope:
+        q = L.rope(q, positions, theta=cfg.rope_theta,
+                   scaling=cfg.rope_scaling)
+        knew = L.rope(knew, positions, theta=cfg.rope_theta,
+                      scaling=cfg.rope_scaling)
+    ck = jax.lax.dynamic_update_slice(cache["k"], knew.astype(cache["k"].dtype),
+                                      (0, pos0, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], vnew.astype(cache["v"].dtype),
+                                      (0, pos0, 0, 0))
+    new_cache = {"k": ck, "v": cv, "pos": pos0 + 1}
+
+    # SAT-style: score from positions ONLY, then fetch only the winners.
+    # (head-0 scores pick the shared index set; per-head offsets shift
+    # within the kept set during attention)
+    scores_meta = kv_prune_scores(prune_p, k_pos, pos0, kv)      # (kv, Smax)
+    _, idx = jax.lax.top_k(scores_meta[0], keep)                 # (keep,)
+    k_sel = jnp.take(ck, idx, axis=1).astype(jnp.float32)        # (B,keep,kv,hd)
+    v_sel = jnp.take(cv, idx, axis=1).astype(jnp.float32)
+    pos_sel = jnp.take(k_pos, idx)
+
+    g = h // kv
+    qg = q.reshape(B, kv, g, hd).astype(jnp.float32)
+    s = jnp.einsum("bngd,btnd->bngt", qg, k_sel) / math.sqrt(hd)
+    if cfg.softcap is not None:
+        s = jnp.tanh(s / cfg.softcap) * cfg.softcap
+    valid = (pos_sel >= 0) & (pos_sel <= pos0)
+    s = jnp.where(valid[None, None, None, :], s, L.NEG_INF)
+    attn = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bngt,btnd->bngd", attn, v_sel).reshape(B, 1, h * hd)
+    y = out.astype(dt) @ p["wo"].astype(dt)
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# generation loop
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig(FrozenConfig):
+    max_new_tokens: int = 32
+    temperature: float = 0.0       # 0 = greedy
+    seed: int = 0
+
+
+def generate(params, cfg, prompts: jax.Array, scfg: ServeConfig,
+             max_len: int | None = None) -> dict:
+    """Batched generation for any registered family.
+
+    prompts (B, S_prompt) int32. Returns {"tokens": (B, S_prompt+new),
+    "prefill_s": ..., "decode_s_per_tok": ...}.
+    """
+    fam = lm_common.family_of(cfg)
+    mod = lm_common.FAMILIES[fam]
+    B, Sp = prompts.shape
+    total = Sp + scfg.max_new_tokens if max_len is None else max_len
+
+    caches = mod.init_caches(cfg, B, total, dtype=jnp.float32) \
+        if fam in ("transformer",) else mod.init_caches(cfg, B, total)
+    decode = jax.jit(lambda p, t, c: mod.decode_step(p, cfg, t, c))
+
+    t0 = time.perf_counter()
+    logits = None
+    for t in range(Sp):  # teacher-forced prompt consumption via decode path
+        logits, caches = decode(params, prompts[:, t:t + 1], caches)
+    prefill_s = time.perf_counter() - t0
+
+    key = jax.random.key(scfg.seed)
+    out = [prompts]
+    t0 = time.perf_counter()
+    tok = None
+    for i in range(scfg.max_new_tokens):
+        if scfg.temperature > 0:
+            key, sub = jax.random.split(key)
+            tok = jax.random.categorical(sub, logits / scfg.temperature,
+                                         axis=-1)[:, None]
+        else:
+            tok = jnp.argmax(logits, axis=-1)[:, None]
+        out.append(tok.astype(jnp.int32))
+        logits, caches = decode(params, tok.astype(jnp.int32), caches)
+    decode_s = (time.perf_counter() - t0) / max(scfg.max_new_tokens, 1)
+
+    return {"tokens": jnp.concatenate(out, axis=1),
+            "prefill_s": prefill_s, "decode_s_per_tok": decode_s}

@@ -1,0 +1,33 @@
+"""Learning-rate schedules as pure step -> scale functions (scale multiplies
+OptimConfig.lr)."""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax.numpy as jnp
+
+from repro.utils import FrozenConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleConfig(FrozenConfig):
+    name: str = "warmup_cosine"   # warmup_cosine | warmup_linear | constant
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_ratio: float = 0.1        # floor as a fraction of peak
+
+
+def schedule(cfg: ScheduleConfig, step):
+    s = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(s / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.name == "constant":
+        return warm
+    frac = jnp.clip((s - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    if cfg.name == "warmup_linear":
+        decay = 1.0 - (1.0 - cfg.min_ratio) * frac
+    else:  # warmup_cosine
+        decay = cfg.min_ratio + (1.0 - cfg.min_ratio) * 0.5 * (
+            1.0 + jnp.cos(math.pi * frac))
+    return warm * decay

@@ -1,0 +1,234 @@
+"""TGN training + knowledge distillation (the paper's §III-A/§VI workflow).
+
+Teacher: TGN-attn (vanilla temporal attention, cosine time encoder), trained
+with self-supervised temporal link prediction on the chronological stream.
+
+Students: SAT [+LUT] [+NP(k)], trained with link loss + the Eq.-17 soft
+cross-entropy against the FROZEN teacher's attention logits, replayed over
+the same stream (teacher and student each maintain their own vertex state;
+the neighbor ring-buffer trajectories coincide by construction since buffer
+dynamics are parameter-free).
+
+Gradient flow follows the reference TGN implementation: gradients propagate
+within a batch (through the GRU memory update and the aggregator), and the
+carried vertex state is detached between batches.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.utils import FrozenConfig
+from repro.core import distill, tgn
+from repro.data import stream as stream_mod
+from repro.data.temporal_graph import TemporalGraph
+from repro.training import optim as opt_mod
+
+
+@dataclasses.dataclass(frozen=True)
+class TGNTrainConfig(FrozenConfig):
+    batch_size: int = 100
+    epochs: int = 3
+    lr: float = 1e-3
+    kd_weight: float = 1.0
+    kd_temperature: float = 1.0   # paper sets T=1
+    seed: int = 0
+
+
+def _detach_state(state):
+    return jax.tree.map(jax.lax.stop_gradient, state)
+
+
+def _embed_negatives(params, cfg, state, node_feats, edge_feats, neg_dst,
+                     ts):
+    h, _, _, _ = tgn._embed(params, cfg, state, node_feats, edge_feats,
+                            neg_dst, ts)
+    return h
+
+
+# ---------------------------------------------------------------------------
+# teacher
+# ---------------------------------------------------------------------------
+
+
+def make_teacher_step(cfg: tgn.TGNConfig, ocfg: opt_mod.OptimConfig,
+                      node_feats, edge_feats):
+    def loss_fn(params, state, b):
+        src, dst, eid, ts, valid, neg = b
+        out = tgn.process_batch(params, cfg, state, node_feats, edge_feats,
+                                src, dst, eid, ts, valid)
+        neg_emb = _embed_negatives(params, cfg, out.state, node_feats,
+                                   edge_feats, neg, ts)
+        pos = tgn.link_score(params, out.emb_src, out.emb_dst)
+        negs = tgn.link_score(params, out.emb_src, neg_emb)
+        w = valid.astype(jnp.float32)
+        loss = (jnp.sum(jax.nn.softplus(-pos) * w)
+                + jnp.sum(jax.nn.softplus(negs) * w)) / (2 * jnp.maximum(
+                    jnp.sum(w), 1))
+        return loss, out.state
+
+    @jax.jit
+    def step(params, opt_state, state, b):
+        (loss, new_state), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, state, b)
+        opt_state, params = opt_mod.apply_updates(ocfg, opt_state, grads,
+                                                  params)
+        return params, opt_state, _detach_state(new_state), loss
+
+    return step
+
+
+def train_teacher(g: TemporalGraph, cfg: tgn.TGNConfig,
+                  tcfg: TGNTrainConfig = TGNTrainConfig()):
+    node_feats = (jnp.asarray(g.node_feats)
+                  if g.node_feats is not None else None)
+    edge_feats = jnp.asarray(g.edge_feats) if g.edge_feats.shape[1] else \
+        jnp.zeros((g.n_edges, cfg.f_edge), jnp.float32)
+    params = tgn.init_params(jax.random.key(tcfg.seed), cfg)
+    ocfg = opt_mod.OptimConfig(name="adamw", lr=tcfg.lr, weight_decay=0.0)
+    opt_state = opt_mod.init_state(ocfg, params)
+    step = make_teacher_step(cfg, ocfg, node_feats, edge_feats)
+
+    train_sl, val_sl, _ = stream_mod.chronological_split(g)
+    losses = []
+    for epoch in range(tcfg.epochs):
+        state = tgn.init_state(cfg)
+        for batch in stream_mod.fixed_count(g, tcfg.batch_size,
+                                            window=train_sl,
+                                            seed=tcfg.seed + epoch):
+            b = tuple(jnp.asarray(x) for x in batch)
+            params, opt_state, state, loss = step(params, opt_state, state,
+                                                  b)
+            losses.append(float(loss))
+    return params, losses
+
+
+# ---------------------------------------------------------------------------
+# student distillation
+# ---------------------------------------------------------------------------
+
+
+def make_distill_step(s_cfg: tgn.TGNConfig, t_cfg: tgn.TGNConfig,
+                      ocfg: opt_mod.OptimConfig, tcfg: TGNTrainConfig,
+                      node_feats, edge_feats):
+    def loss_fn(s_params, t_params, s_state, t_state, b):
+        src, dst, eid, ts, valid, neg = b
+        t_out = tgn.process_batch(t_params, t_cfg, t_state, node_feats,
+                                  edge_feats, src, dst, eid, ts, valid)
+        s_out = tgn.process_batch(s_params, s_cfg, s_state, node_feats,
+                                  edge_feats, src, dst, eid, ts, valid)
+        neg_emb = _embed_negatives(s_params, s_cfg, s_out.state, node_feats,
+                                   edge_feats, neg, ts)
+        pos = tgn.link_score(s_params, s_out.emb_src, s_out.emb_dst)
+        negs = tgn.link_score(s_params, s_out.emb_src, neg_emb)
+        total, parts = distill.distill_loss(
+            s_out.attn_logits, t_out.attn_logits,
+            s_out.nbr_valid & t_out.nbr_valid, pos, negs,
+            temperature=tcfg.kd_temperature, kd_weight=tcfg.kd_weight)
+        return total, (s_out.state, t_out.state, parts)
+
+    @jax.jit
+    def step(s_params, t_params, opt_state, s_state, t_state, b):
+        (loss, (s_new, t_new, parts)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(s_params, t_params, s_state, t_state, b)
+        opt_state, s_params = opt_mod.apply_updates(ocfg, opt_state, grads,
+                                                    s_params)
+        return s_params, opt_state, _detach_state(s_new), \
+            _detach_state(t_new), parts
+
+    return step
+
+
+def distill_student(g: TemporalGraph, teacher_params: dict,
+                    t_cfg: tgn.TGNConfig, s_cfg: tgn.TGNConfig,
+                    tcfg: TGNTrainConfig = TGNTrainConfig()):
+    node_feats = (jnp.asarray(g.node_feats)
+                  if g.node_feats is not None else None)
+    edge_feats = jnp.asarray(g.edge_feats) if g.edge_feats.shape[1] else \
+        jnp.zeros((g.n_edges, s_cfg.f_edge), jnp.float32)
+    # LUT boundaries fitted on the empirical train dt distribution (§III-C)
+    train_sl, _, _ = stream_mod.chronological_split(g)
+    dt_samples = _dt_samples(g, train_sl)
+    s_params = tgn.init_params(jax.random.key(tcfg.seed + 7), s_cfg,
+                               dt_samples=dt_samples)
+    ocfg = opt_mod.OptimConfig(name="adamw", lr=tcfg.lr, weight_decay=0.0)
+    opt_state = opt_mod.init_state(ocfg, s_params)
+    step = make_distill_step(s_cfg, t_cfg, ocfg, tcfg, node_feats,
+                             edge_feats)
+
+    kd_losses = []
+    for epoch in range(tcfg.epochs):
+        s_state = tgn.init_state(s_cfg)
+        t_state = tgn.init_state(t_cfg)
+        for batch in stream_mod.fixed_count(g, tcfg.batch_size,
+                                            window=train_sl,
+                                            seed=tcfg.seed + 31 + epoch):
+            b = tuple(jnp.asarray(x) for x in batch)
+            s_params, opt_state, s_state, t_state, parts = step(
+                s_params, teacher_params, opt_state, s_state, t_state, b)
+            kd_losses.append({k: float(v) for k, v in parts.items()})
+    return s_params, kd_losses
+
+
+def _dt_samples(g: TemporalGraph, sl: slice) -> np.ndarray:
+    """Empirical inter-event time deltas per node over the train window —
+    the LUT bucketing distribution (paper Fig. 1)."""
+    last = {}
+    out = []
+    for i in range(sl.start or 0, sl.stop):
+        for v in (int(g.src[i]), int(g.dst[i])):
+            t = float(g.ts[i])
+            if v in last:
+                out.append(t - last[v])
+            last[v] = t
+    return np.asarray(out if out else [1.0], np.float64)
+
+
+# ---------------------------------------------------------------------------
+# evaluation
+# ---------------------------------------------------------------------------
+
+
+def evaluate_ap(params: dict, cfg: tgn.TGNConfig, g: TemporalGraph,
+                window: slice, batch_size: int = 100,
+                warm_window: slice | None = None, seed: int = 123) -> float:
+    """Chronological replay AP over ``window`` (state warmed over
+    ``warm_window`` first, as in transductive TGN evaluation)."""
+    node_feats = (jnp.asarray(g.node_feats)
+                  if g.node_feats is not None else None)
+    edge_feats = jnp.asarray(g.edge_feats) if g.edge_feats.shape[1] else \
+        jnp.zeros((g.n_edges, cfg.f_edge), jnp.float32)
+
+    @jax.jit
+    def run(state, b):
+        src, dst, eid, ts, valid, neg = b
+        out = tgn.process_batch(params, cfg, state, node_feats, edge_feats,
+                                src, dst, eid, ts, valid)
+        neg_emb = _embed_negatives(params, cfg, out.state, node_feats,
+                                   edge_feats, neg, ts)
+        pos = tgn.link_score(params, out.emb_src, out.emb_dst)
+        negs = tgn.link_score(params, out.emb_src, neg_emb)
+        return out.state, pos, negs
+
+    state = tgn.init_state(cfg)
+    if warm_window is not None:
+        for batch in stream_mod.fixed_count(g, batch_size, window=warm_window,
+                                            seed=seed):
+            b = tuple(jnp.asarray(x) for x in batch)
+            state, _, _ = run(state, b)
+
+    pos_all, neg_all = [], []
+    for batch in stream_mod.fixed_count(g, batch_size, window=window,
+                                        seed=seed):
+        b = tuple(jnp.asarray(x) for x in batch)
+        state, pos, negs = run(state, b)
+        m = batch.valid
+        pos_all.append(np.asarray(pos)[m])
+        neg_all.append(np.asarray(negs)[m])
+
+    ap = distill.average_precision(jnp.asarray(np.concatenate(pos_all)),
+                                   jnp.asarray(np.concatenate(neg_all)))
+    return float(ap)

@@ -1,0 +1,108 @@
+"""Per-architecture smoke tests: every assigned arch instantiates a reduced
+config, runs one train step (finite loss + grads, correct shapes) and one
+decode step on CPU. The FULL configs are exercised only via the dry-run."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import lm_common
+
+ARCHS = configs.all_archs()
+
+
+def _batch_for(cfg, B=2, S=32):
+    rng = np.random.RandomState(0)
+    batch = {
+        "tokens": jnp.asarray(rng.randint(0, cfg.vocab, (B, S)), jnp.int32),
+        "targets": jnp.asarray(rng.randint(0, cfg.vocab, (B, S)), jnp.int32),
+    }
+    fam = lm_common.family_of(cfg)
+    if fam == "whisper":
+        batch["frames"] = jnp.asarray(
+            rng.randn(B, cfg.n_frames, cfg.d_model), jnp.float32)
+    if fam == "vision_lm":
+        batch["vision"] = jnp.asarray(
+            rng.randn(B, cfg.n_patches, cfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step(arch):
+    spec = configs.get(arch)
+    cfg = spec.smoke_config()
+    params = lm_common.init_params(jax.random.key(0), cfg)
+    batch = _batch_for(cfg)
+    loss, grads = jax.value_and_grad(
+        lambda p: lm_common.loss_fn(p, cfg, batch))(params)
+    assert np.isfinite(float(loss))
+    # loss near ln(vocab) at init (random tokens)
+    assert abs(float(loss) - np.log(cfg.vocab)) < 2.0
+    gsq = sum(float(jnp.sum(g * g)) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gsq) and gsq > 0
+    # grads congruent to params
+    assert jax.tree.structure(grads) == jax.tree.structure(params)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_decode_step(arch):
+    spec = configs.get(arch)
+    cfg = spec.smoke_config()
+    params = lm_common.init_params(jax.random.key(0), cfg)
+    B, S = 2, 16
+    fam = lm_common.family_of(cfg)
+    mod = lm_common.FAMILIES[fam]
+    caches = mod.init_caches(cfg, B, S, dtype=jnp.float32)
+    tok = jnp.zeros((B, 1), jnp.int32)
+    logits, new_caches = lm_common.decode_fn(
+        params, cfg, {"token": tok, "caches": caches})
+    assert logits.shape == (B, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert jax.tree.structure(new_caches) == jax.tree.structure(caches)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_matches_assignment(arch):
+    """The full config carries the exact assigned dimensions."""
+    cfg = configs.get(arch).config()
+    expected = {
+        "gemma3_12b": (48, 3840, 16, 8, 15360, 262144),
+        "mistral_nemo_12b": (40, 5120, 32, 8, 14336, 131072),
+        "granite_3_8b": (40, 4096, 32, 8, 12800, 49155),
+        "qwen3_8b": (36, 4096, 32, 8, 12288, 151936),
+        "dbrx_132b": (40, 6144, 48, 8, 10752, 100352),
+        "grok_1_314b": (64, 6144, 48, 8, 32768, 131072),
+        "mamba2_130m": (24, 768, None, None, 0, 50280),
+        "whisper_tiny": (4, 384, 6, 6, 1536, 51865),
+        "recurrentgemma_9b": (38, 4096, 16, 1, 12288, 256000),
+        "llama32_vision_11b": (40, 4096, 32, 8, 14336, 128256),
+    }[arch]
+    nl, d, h, kv, ff, vocab = expected
+    assert cfg.n_layers == nl and cfg.d_model == d and cfg.vocab == vocab
+    if h is not None:
+        assert cfg.n_heads == h and cfg.n_kv_heads == kv
+    if ff:
+        assert cfg.d_ff == ff
+
+
+@pytest.mark.parametrize("arch,lo,hi", [
+    ("gemma3_12b", 11e9, 14e9), ("mistral_nemo_12b", 11e9, 13.5e9),
+    ("granite_3_8b", 7.5e9, 9e9), ("qwen3_8b", 7.5e9, 9e9),
+    ("dbrx_132b", 125e9, 140e9), ("grok_1_314b", 300e9, 330e9),
+    ("mamba2_130m", 0.1e9, 0.2e9), ("whisper_tiny", 25e6, 60e6),
+    ("recurrentgemma_9b", 8e9, 11e9), ("llama32_vision_11b", 9e9, 12e9),
+])
+def test_param_counts_match_nameplate(arch, lo, hi):
+    cfg = configs.get(arch).config()
+    assert lo <= cfg.n_params <= hi, f"{arch}: {cfg.n_params/1e9:.2f}B"
+
+
+def test_long_context_support_flags():
+    assert lm_common.supports_long_context(configs.get("mamba2_130m").config())
+    assert lm_common.supports_long_context(
+        configs.get("recurrentgemma_9b").config())
+    assert lm_common.supports_long_context(configs.get("gemma3_12b").config())
+    for a in ("mistral_nemo_12b", "granite_3_8b", "qwen3_8b", "dbrx_132b",
+              "grok_1_314b", "whisper_tiny", "llama32_vision_11b"):
+        assert not lm_common.supports_long_context(configs.get(a).config())

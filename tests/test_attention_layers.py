@@ -1,0 +1,124 @@
+"""Shared LM layers: chunked/windowed/decode/ring attention equivalences."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import layers as L
+
+
+def _mk(cfg, seed=0):
+    return L.init_attention(jax.random.key(seed), cfg)
+
+
+@pytest.mark.parametrize("qk_norm", [False, True])
+@pytest.mark.parametrize("kv", [1, 2, 4])
+def test_chunked_equals_full(kv, qk_norm):
+    cfg = L.AttnCfg(d_model=64, n_heads=4, n_kv_heads=kv, d_head=16,
+                    qk_norm=qk_norm)
+    p = _mk(cfg)
+    x = jax.random.normal(jax.random.key(1), (2, 64, 64), jnp.float32)
+    pos = jnp.arange(64, dtype=jnp.int32)
+    want, _ = L.attention(p, cfg, x, pos)
+    got = L.chunked_attention(p, cfg, x, pos, q_block=16, k_block=16)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("window", [8, 24, 200])
+def test_windowed_chunked_equals_full(window):
+    cfg = L.AttnCfg(d_model=32, n_heads=2, n_kv_heads=2, d_head=16,
+                    window=window)
+    p = _mk(cfg, 2)
+    x = jax.random.normal(jax.random.key(3), (1, 64, 32), jnp.float32)
+    pos = jnp.arange(64, dtype=jnp.int32)
+    want, _ = L.attention(p, cfg, x, pos)
+    got = L.chunked_attention(p, cfg, x, pos, q_block=16)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_softcap_applied():
+    cfg = L.AttnCfg(d_model=32, n_heads=2, n_kv_heads=2, d_head=16,
+                    softcap=5.0)
+    p = _mk(cfg, 4)
+    x = 10.0 * jax.random.normal(jax.random.key(5), (1, 32, 32), jnp.float32)
+    pos = jnp.arange(32, dtype=jnp.int32)
+    want, _ = L.attention(p, cfg, x, pos)
+    got = L.chunked_attention(p, cfg, x, pos, q_block=8, k_block=8)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_decode_matches_full_attention():
+    cfg = L.AttnCfg(d_model=32, n_heads=4, n_kv_heads=2, d_head=8)
+    p = _mk(cfg, 6)
+    B, S = 2, 40
+    x = jax.random.normal(jax.random.key(7), (B, S, 32), jnp.float32)
+    cache = L.init_kv_cache(B, S, cfg, dtype=jnp.float32)
+    outs = []
+    for t in range(S):
+        o, cache = L.decode_attention(p, cfg, x[:, t:t + 1], cache)
+        outs.append(o)
+    got = jnp.concatenate(outs, axis=1)
+    want, _ = L.attention(p, cfg, x, jnp.arange(S, dtype=jnp.int32))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_ring_cache_decode_matches_windowed():
+    cfg = L.AttnCfg(d_model=32, n_heads=2, n_kv_heads=1, d_head=16,
+                    window=12)
+    p = _mk(cfg, 8)
+    B, S = 2, 48
+    x = jax.random.normal(jax.random.key(9), (B, S, 32), jnp.float32)
+    cache = L.init_ring_cache(B, 12, cfg, dtype=jnp.float32)
+    outs = []
+    for t in range(S):
+        o, cache = L.decode_attention(p, cfg, x[:, t:t + 1], cache)
+        outs.append(o)
+    got = jnp.concatenate(outs, axis=1)
+    want, _ = L.attention(p, cfg, x, jnp.arange(S, dtype=jnp.int32))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+    # ring cache memory is O(window), not O(S)
+    assert cache["k"].shape[1] == 12
+
+
+def test_cross_attention_chunked():
+    cfg = L.AttnCfg(d_model=32, n_heads=2, n_kv_heads=2, d_head=16,
+                    use_rope=False)
+    p = _mk(cfg, 10)
+    x = jax.random.normal(jax.random.key(11), (2, 32, 32), jnp.float32)
+    kvx = jax.random.normal(jax.random.key(12), (2, 16, 32), jnp.float32)
+    pos = jnp.arange(32, dtype=jnp.int32)
+    kpos = jnp.arange(16, dtype=jnp.int32)
+    want, _ = L.attention(p, cfg, x, pos, kv_x=kvx, kv_positions=kpos,
+                          causal=False)
+    got = L.chunked_attention(p, cfg, x, pos, kv_x=kvx, kv_positions=kpos,
+                              causal=False, q_block=8, k_block=8)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_rope_rotation_preserves_norm():
+    x = jax.random.normal(jax.random.key(13), (2, 8, 4, 16), jnp.float32)
+    pos = jnp.arange(8, dtype=jnp.int32)
+    y = L.rope(x, pos)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1), rtol=1e-5)
+
+
+def test_rope_relative_property():
+    """<rope(q,m), rope(k,n)> depends only on m-n."""
+    q = jax.random.normal(jax.random.key(14), (1, 1, 1, 16), jnp.float32)
+    k = jax.random.normal(jax.random.key(15), (1, 1, 1, 16), jnp.float32)
+
+    def score(m, n):
+        qm = L.rope(q, jnp.asarray([m], jnp.int32))
+        kn = L.rope(k, jnp.asarray([n], jnp.int32))
+        return float(jnp.sum(qm * kn))
+
+    assert abs(score(5, 3) - score(10, 8)) < 1e-4
+    assert abs(score(7, 7) - score(0, 0)) < 1e-4

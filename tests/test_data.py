@@ -1,0 +1,69 @@
+"""Data pipeline: chronology, batching, splits, generator properties."""
+import numpy as np
+
+from repro.data import stream as S
+from repro.data import temporal_graph as tgd
+
+
+def test_timestamps_strictly_increasing():
+    g = tgd.wikipedia_like(n_edges=2000)
+    assert np.all(np.diff(g.ts) > 0)
+
+
+def test_bipartite_id_ranges():
+    g = tgd.wikipedia_like(n_edges=1000)
+    assert g.src.max() < g.cfg.n_users
+    assert g.dst.min() >= g.cfg.n_users and g.dst.max() < g.cfg.n_nodes
+
+
+def test_zipf_popularity_skew():
+    g = tgd.wikipedia_like(n_edges=5000)
+    counts = np.bincount(g.src, minlength=g.cfg.n_users)
+    top10 = np.sort(counts)[::-1][:10].sum()
+    assert top10 > 0.2 * g.n_edges  # heavy head
+
+
+def test_power_law_dt():
+    g = tgd.wikipedia_like(n_edges=5000)
+    gaps = np.diff(g.ts)
+    assert np.median(gaps) < np.mean(gaps) * 0.6  # heavy tail
+
+
+def test_gdelt_has_node_features():
+    g = tgd.gdelt_like(n_edges=500)
+    assert g.node_feats is not None and g.node_feats.shape[1] == 200
+    assert g.edge_feats.shape[1] == 0
+
+
+def test_fixed_count_batches_cover_stream():
+    g = tgd.wikipedia_like(n_edges=505)
+    seen = 0
+    for b in S.fixed_count(g, 100):
+        seen += int(b.valid.sum())
+        assert np.all(np.diff(b.ts[b.valid]) >= 0)
+    assert seen == 505
+
+
+def test_time_window_batches():
+    g = tgd.wikipedia_like(n_edges=500)
+    total = 0
+    for b in S.time_window(g, 3600.0, 128):
+        n = int(b.valid.sum())
+        total += n
+        valid_ts = b.ts[b.valid]
+        if n > 1:
+            assert valid_ts[-1] - valid_ts[0] < 3600.0
+    assert total == 500
+
+
+def test_chronological_split_disjoint():
+    g = tgd.wikipedia_like(n_edges=1000)
+    tr, va, te = S.chronological_split(g)
+    assert tr.stop == va.start and va.stop == te.start and te.stop == 1000
+
+
+def test_negatives_in_item_range():
+    g = tgd.wikipedia_like(n_edges=300)
+    for b in S.fixed_count(g, 50):
+        assert np.all(b.neg_dst >= g.cfg.n_users)
+        assert np.all(b.neg_dst < g.cfg.n_nodes)

@@ -1,0 +1,101 @@
+"""KD loss properties, AP metric, LM generation, positional KV pruning."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import distill
+from repro.models import layers as L
+from repro.serving import lm_serve
+
+
+def test_kd_loss_zero_when_matched():
+    logits = jnp.asarray([[1.0, 2.0, 3.0], [0.0, -1.0, 2.0]])
+    valid = jnp.ones((2, 3), bool)
+    l_same = distill.attn_distill_loss(logits, logits, valid)
+    # CE(p, p) = H(p) > 0; but the GRADIENT wrt student at match is zero
+    g = jax.grad(lambda s: distill.attn_distill_loss(s, logits, valid))(
+        logits)
+    np.testing.assert_allclose(np.asarray(g), 0.0, atol=1e-6)
+    # moving the student away increases the loss
+    l_off = distill.attn_distill_loss(logits + jnp.asarray([[1., 0., -1.]]),
+                                      logits, valid)
+    assert float(l_off) > float(l_same)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 1000))
+def test_kd_loss_masks_invalid(seed):
+    rng = np.random.RandomState(seed)
+    s = jnp.asarray(rng.randn(4, 6), jnp.float32)
+    t = jnp.asarray(rng.randn(4, 6), jnp.float32)
+    valid = jnp.asarray(rng.rand(4, 6) > 0.4)
+    base = distill.attn_distill_loss(s, t, valid)
+    # perturbing INVALID slots changes nothing
+    noise = jnp.where(valid, 0.0, 100.0 * rng.randn(4, 6).astype(np.float32))
+    pert = distill.attn_distill_loss(s + noise, t + noise, valid)
+    np.testing.assert_allclose(float(base), float(pert), rtol=1e-5)
+
+
+def test_average_precision_perfect_and_random():
+    pos = jnp.asarray([3.0, 2.5, 2.0])
+    neg = jnp.asarray([-1.0, -2.0, 0.0])
+    assert float(distill.average_precision(pos, neg)) == 1.0
+    # fully inverted ordering gives low AP
+    ap_bad = float(distill.average_precision(neg, pos))
+    assert ap_bad < 0.7
+
+
+def test_generate_greedy_deterministic():
+    from repro import configs
+    from repro.models import lm_common
+    cfg = configs.get("granite_3_8b").smoke_config()
+    params = lm_common.init_params(jax.random.key(0), cfg)
+    prompts = jnp.asarray([[1, 2, 3, 4]], jnp.int32)
+    out1 = lm_serve.generate(params, cfg, prompts,
+                             lm_serve.ServeConfig(max_new_tokens=4))
+    out2 = lm_serve.generate(params, cfg, prompts,
+                             lm_serve.ServeConfig(max_new_tokens=4))
+    np.testing.assert_array_equal(np.asarray(out1["tokens"]),
+                                  np.asarray(out2["tokens"]))
+    assert out1["tokens"].shape == (1, 8)
+
+
+def test_positional_kv_prune_full_keep_matches_exact():
+    """keep == cache length -> identical to unpruned decode attention."""
+    cfg = L.AttnCfg(d_model=32, n_heads=4, n_kv_heads=2, d_head=8)
+    p = L.init_attention(jax.random.key(0), cfg)
+    prune_p = lm_serve.init_kv_prune(cfg.n_kv_heads)
+    B, S = 2, 24
+    x = jax.random.normal(jax.random.key(1), (B, S, 32), jnp.float32)
+    c1 = L.init_kv_cache(B, S, cfg, dtype=jnp.float32)
+    c2 = L.init_kv_cache(B, S, cfg, dtype=jnp.float32)
+    for t in range(S):
+        o1, c1 = L.decode_attention(p, cfg, x[:, t:t + 1], c1)
+        o2, c2 = lm_serve.pruned_decode_attention(p, cfg, x[:, t:t + 1], c2,
+                                                  prune_p, keep=S)
+        np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_positional_kv_prune_selects_recent():
+    """With the default decreasing-in-age scores, kept set = most recent k —
+    the SAT prune-before-fetch dataflow at decode."""
+    prune_p = lm_serve.init_kv_prune(2)
+    k_pos = jnp.asarray([0, 1, 2, 3, 4, -1, -1, -1], jnp.int32)
+    now = jnp.asarray(4)
+    scores = lm_serve.kv_prune_scores(prune_p, k_pos, now, 2)
+    _, idx = jax.lax.top_k(scores[0], 3)
+    assert set(np.asarray(idx).tolist()) == {2, 3, 4}
+
+
+def test_compression_ef_residual_property():
+    """error feedback: g_hat + r_new == g + r_old exactly."""
+    from repro.distributed import compression as CP
+    rng = np.random.RandomState(0)
+    g = {"w": jnp.asarray(rng.randn(40, 7), jnp.float32)}
+    r = {"w": jnp.asarray(rng.randn(40, 7), jnp.float32) * 0.1}
+    g_hat, r_new = CP.ef_int8_roundtrip(g, r)
+    lhs = np.asarray(g_hat["w"]) + np.asarray(r_new["w"])
+    rhs = np.asarray(g["w"]) + np.asarray(r["w"])
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-5, atol=1e-6)

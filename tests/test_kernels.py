@@ -1,0 +1,108 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import memory as mem_mod, time_encode as te
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("B", [1, 5, 128, 200])
+@pytest.mark.parametrize("f_mem,f_edge", [(100, 172), (32, 16), (128, 0)])
+def test_gru_kernel_matches_core(B, f_mem, f_edge):
+    cfg = mem_mod.GRUConfig(f_mem=f_mem, f_edge=f_edge, f_time=f_mem)
+    params = mem_mod.init_gru(jax.random.key(0), cfg)
+    rng = np.random.RandomState(B + f_mem)
+    mail = jnp.asarray(rng.randn(B, cfg.f_mail), jnp.float32)
+    s = jnp.asarray(rng.randn(B, f_mem), jnp.float32)
+    want = mem_mod.gru_cell(params, mail, s)
+    packed = ops.pad_gru_params(params, cfg.f_mail, f_mem)
+    got = ops.gru_cell(mail, s, packed)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_gru_kernel_extra_rows_equal_lut_path():
+    cfg = mem_mod.GRUConfig(f_mem=48, f_edge=24, f_time=16)
+    params = mem_mod.init_gru(jax.random.key(1), cfg)
+    rng = np.random.RandomState(7)
+    B = 33
+    mail_raw = jnp.asarray(rng.randn(B, cfg.f_mail_raw), jnp.float32)
+    time_rows = jnp.asarray(rng.randn(B, 3 * cfg.f_mem), jnp.float32)
+    s = jnp.asarray(rng.randn(B, cfg.f_mem), jnp.float32)
+    want = mem_mod.gru_cell_lut(params, mail_raw, time_rows, s)
+    packed = ops.pad_gru_params(
+        {"w_i": params["w_i"][:cfg.f_mail_raw], "w_h": params["w_h"],
+         "b_i": params["b_i"], "b_h": params["b_h"]},
+        cfg.f_mail_raw, cfg.f_mem)
+    got = ops.gru_cell(mail_raw, s, packed, extra=time_rows)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("B", [1, 7, 300])
+@pytest.mark.parametrize("dim", [100, 64])
+def test_lut_kernel_matches_core(B, dim):
+    tcfg = te.TimeEncoderConfig(dim=dim, n_entries=128)
+    lut = te.init_lut(jax.random.key(2), tcfg)
+    rng = np.random.RandomState(B)
+    dt = jnp.asarray(10 ** rng.uniform(0, 7, (B,)), jnp.float32)
+    want = te.lut_encode(lut, dt)
+    packed = ops.pad_lut_params(lut["boundaries"], lut["table"])
+    got = ops.lut_encode(dt, packed)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_lut_kernel_boundary_values_exact():
+    """dt exactly at a boundary must land in the upper bucket (>= compare),
+    in both kernel and core paths."""
+    tcfg = te.TimeEncoderConfig(dim=8, n_entries=16)
+    lut = te.init_lut(jax.random.key(3), tcfg,
+                      dt_samples=np.linspace(1, 1000, 500))
+    bounds = np.asarray(lut["boundaries"])
+    dt = jnp.asarray(np.concatenate([bounds, bounds - 1e-3, [0.0, 1e9]]),
+                     jnp.float32)
+    want = te.lut_encode(lut, dt)
+    packed = ops.pad_lut_params(lut["boundaries"], lut["table"])
+    got = ops.lut_encode(dt, packed)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("B,k", [(1, 2), (37, 4), (128, 10)])
+@pytest.mark.parametrize("dkv,d", [(272, 100), (48, 32)])
+def test_sat_kernel_matches_ref(B, k, dkv, d):
+    rng = np.random.RandomState(B * k)
+    E = 128
+    kv = jnp.asarray(rng.randn(B, k, dkv), jnp.float32)
+    dt = jnp.asarray(10 ** rng.uniform(0, 6, (B, k)), jnp.float32)
+    logits = jnp.asarray(rng.randn(B, k), jnp.float32)
+    valid = jnp.asarray(rng.rand(B, k) > 0.3)
+    w_v = jnp.asarray(rng.randn(dkv, d) * 0.05, jnp.float32)
+    b_v = jnp.asarray(rng.randn(d) * 0.1, jnp.float32)
+    folded = jnp.asarray(rng.randn(E, d) * 0.05, jnp.float32)
+    bounds = jnp.sort(jnp.asarray(10 ** rng.uniform(0, 6, (E - 1,)),
+                                  jnp.float32))
+    packed = ops.pad_sat_params(w_v, b_v, bounds, folded)
+    got = ops.sat_aggregate(kv, dt, logits, valid, packed)
+    want = ref.sat_aggregate_ref(kv, dt, logits, valid.astype(jnp.float32),
+                                 w_v, b_v, bounds[None, :], folded)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_sat_kernel_all_invalid_row_is_zero():
+    rng = np.random.RandomState(0)
+    B, k, dkv, d, E = 4, 3, 48, 32, 128
+    kv = jnp.asarray(rng.randn(B, k, dkv), jnp.float32)
+    dt = jnp.ones((B, k), jnp.float32)
+    logits = jnp.zeros((B, k), jnp.float32)
+    valid = jnp.zeros((B, k), bool)
+    packed = ops.pad_sat_params(
+        jnp.asarray(rng.randn(dkv, d), jnp.float32),
+        jnp.zeros((d,), jnp.float32),
+        jnp.sort(jnp.asarray(rng.rand(E - 1) * 100, jnp.float32)),
+        jnp.asarray(rng.randn(E, d), jnp.float32))
+    got = ops.sat_aggregate(kv, dt, logits, valid, packed)
+    np.testing.assert_allclose(np.asarray(got), 0.0)

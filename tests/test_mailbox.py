@@ -1,0 +1,59 @@
+"""Neighbor ring buffer (FIFO hardware sampler) == most-recent-k oracle."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import mailbox
+
+edges = st.lists(
+    st.tuples(st.integers(0, 5), st.integers(0, 5)), min_size=1, max_size=60)
+
+
+def _oracle_recent(edge_list, m_r, vid):
+    """Most recent m_r (neighbor, ts, eid) of vid, newest first."""
+    hist = []
+    for eid, (s, d) in enumerate(edge_list):
+        ts = float(eid + 1)
+        if s == vid:
+            hist.append((d, ts, eid))
+        if d == vid:
+            hist.append((s, ts, eid))
+    return list(reversed(hist[-m_r:]))
+
+
+@settings(max_examples=40, deadline=None)
+@given(edges, st.integers(1, 2))
+def test_ring_buffer_equals_recent_oracle(edge_list, chunk):
+    cfg = mailbox.TableConfig(n_nodes=6, f_mem=4, f_edge=4, m_r=3)
+    state = mailbox.init_state(cfg)
+    # insert in chunks (tests intra-batch multi-occurrence handling)
+    for i in range(0, len(edge_list), chunk):
+        part = edge_list[i:i + chunk]
+        src = jnp.asarray([e[0] for e in part], jnp.int32)
+        dst = jnp.asarray([e[1] for e in part], jnp.int32)
+        eid = jnp.asarray(list(range(i, i + len(part))), jnp.int32)
+        ts = jnp.asarray([float(j + 1) for j in range(i, i + len(part))])
+        state = mailbox.insert_neighbors(state, src, dst, eid, ts)
+
+    ids, ts, eid, valid = mailbox.gather_neighbors(
+        state, jnp.arange(6, dtype=jnp.int32))
+    for v in range(6):
+        want = _oracle_recent(edge_list, 3, v)
+        got = [(int(ids[v, j]), float(ts[v, j]), int(eid[v, j]))
+               for j in range(3) if bool(valid[v, j])]
+        assert got == want, (v, got, want)
+
+
+def test_insert_respects_valid_mask():
+    cfg = mailbox.TableConfig(n_nodes=4, f_mem=2, f_edge=2, m_r=2)
+    state = mailbox.init_state(cfg)
+    src = jnp.asarray([0, 1], jnp.int32)
+    dst = jnp.asarray([2, 3], jnp.int32)
+    eid = jnp.asarray([0, 1], jnp.int32)
+    ts = jnp.asarray([1.0, 2.0])
+    valid = jnp.asarray([True, False])
+    state = mailbox.insert_neighbors(state, src, dst, eid, ts, valid)
+    _, ts0, _, v = mailbox.gather_neighbors(state,
+                                            jnp.arange(4, dtype=jnp.int32))
+    assert bool(v[0, 0]) and bool(v[2, 0])       # valid edge inserted
+    assert not bool(v[1].any()) and not bool(v[3].any())  # masked edge NOT

@@ -1,0 +1,92 @@
+"""§Perf optimization flags preserve semantics (H1/O2/O4/O5)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models import transformer as T
+
+
+def _cfg(**kw):
+    base = dict(arch="t", n_layers=4, d_model=32, n_heads=2, n_kv_heads=2,
+                d_head=16, d_ff=64, vocab=64, pattern=("local", "global"),
+                window=8, dtype="float32", q_block=16, k_block=16,
+                loss_chunk=16)
+    base.update(kw)
+    return T.LMConfig(**base)
+
+
+def test_h1_attn_remat_bit_exact():
+    cfg = _cfg()
+    p = T.init(jax.random.key(0), cfg)
+    toks = jax.random.randint(jax.random.key(1), (2, 32), 0, 64)
+    l0, g0 = jax.value_and_grad(lambda pp: T.loss_fn(pp, cfg, toks, toks))(p)
+    cfg1 = cfg.replace(attn_remat=True)
+    l1, g1 = jax.value_and_grad(lambda pp: T.loss_fn(pp, cfg1, toks, toks))(p)
+    assert float(l0) == float(l1)
+    for a, b in zip(jax.tree.leaves(g0), jax.tree.leaves(g1)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def _decode_all(cfg, p, toks, steps=16):
+    caches = T.init_caches(cfg, 2, steps, dtype=jnp.float32)
+    lg = None
+    for t in range(steps):
+        lg, caches = T.decode_step(p, cfg, toks[:, t:t + 1], caches)
+    return lg
+
+
+def test_o5_decode_unroll_matches_scan():
+    cfg = _cfg()
+    p = T.init(jax.random.key(2), cfg)
+    toks = jax.random.randint(jax.random.key(3), (2, 16), 0, 64)
+    l0 = _decode_all(cfg, p, toks)
+    l1 = _decode_all(cfg.replace(decode_unroll=True), p, toks)
+    np.testing.assert_allclose(np.asarray(l0), np.asarray(l1), rtol=1e-4,
+                               atol=1e-5)
+
+
+def test_o4_no_upcast_fp32_caches_exact():
+    # with fp32 caches the no-upcast path is numerically identical
+    cfg = _cfg()
+    p = T.init(jax.random.key(4), cfg)
+    toks = jax.random.randint(jax.random.key(5), (2, 16), 0, 64)
+    l0 = _decode_all(cfg, p, toks)
+    l1 = _decode_all(cfg.replace(decode_upcast=False), p, toks)
+    np.testing.assert_allclose(np.asarray(l0), np.asarray(l1), rtol=1e-5,
+                               atol=1e-6)
+
+
+def test_o2_layers_prune_full_keep_exact():
+    cfg = L.AttnCfg(d_model=32, n_heads=4, n_kv_heads=2, d_head=8)
+    p = L.init_attention(jax.random.key(6), cfg)
+    B, S = 2, 20
+    x = jax.random.normal(jax.random.key(7), (B, S, 32), jnp.float32)
+    c1 = L.init_kv_cache(B, S, cfg, dtype=jnp.float32)
+    c2 = L.init_kv_cache(B, S, cfg, dtype=jnp.float32)
+    for t in range(S):
+        o1, c1 = L.decode_attention(p, cfg, x[:, t:t + 1], c1)
+        o2, c2 = L.pruned_decode_attention(p, cfg, x[:, t:t + 1], c2,
+                                           keep=S)
+        np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_o2_prune_keeps_most_recent():
+    """With the default decaying score, pruning keeps the most recent keep
+    positions -> for a recency-only query the output matches a window."""
+    cfg_w = L.AttnCfg(d_model=16, n_heads=2, n_kv_heads=2, d_head=8,
+                      use_rope=False, window=4)
+    cfg_p = L.AttnCfg(d_model=16, n_heads=2, n_kv_heads=2, d_head=8,
+                      use_rope=False)
+    p = L.init_attention(jax.random.key(8), cfg_p)
+    B, S = 1, 12
+    x = jax.random.normal(jax.random.key(9), (B, S, 16), jnp.float32)
+    cw = L.init_kv_cache(B, S, cfg_w, dtype=jnp.float32)
+    cp = L.init_kv_cache(B, S, cfg_p, dtype=jnp.float32)
+    for t in range(S):
+        ow, cw = L.decode_attention(p, cfg_w, x[:, t:t + 1], cw)
+        op, cp = L.pruned_decode_attention(p, cfg_p, x[:, t:t + 1], cp,
+                                           keep=4)
+        np.testing.assert_allclose(np.asarray(ow), np.asarray(op),
+                                   rtol=1e-4, atol=1e-5)

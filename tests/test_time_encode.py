@@ -1,0 +1,66 @@
+"""LUT time encoder properties (§III-C)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import time_encode as te
+
+
+def test_boundaries_equal_frequency():
+    rng = np.random.RandomState(0)
+    samples = 10 ** rng.uniform(0, 6, 50_000)  # power-law-ish
+    bounds = te.fit_boundaries(samples, 128)
+    assert len(bounds) == 127
+    assert np.all(np.diff(bounds) > 0)
+    counts, _ = np.histogram(samples, bins=np.concatenate(
+        [[-np.inf], bounds, [np.inf]]))
+    # equal-frequency: every bucket within 3x of the mean occupancy
+    assert counts.min() > 0 and counts.max() < 3 * counts.mean()
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.floats(0, 1e8, allow_nan=False), min_size=1,
+                max_size=50))
+def test_bucket_monotonic_in_dt(dts):
+    tcfg = te.TimeEncoderConfig(dim=4, n_entries=16)
+    lut = te.init_lut(jax.random.key(0), tcfg,
+                      dt_samples=np.logspace(0, 6, 1000))
+    dt = jnp.asarray(sorted(dts), jnp.float32)
+    b = te.lut_bucket(lut["boundaries"], dt)
+    assert np.all(np.diff(np.asarray(b)) >= 0)
+    assert int(b.min()) >= 0 and int(b.max()) < 16
+
+
+def test_fold_projection_equals_encode_then_project():
+    tcfg = te.TimeEncoderConfig(dim=12, n_entries=32)
+    lut = te.init_lut(jax.random.key(1), tcfg,
+                      dt_samples=np.logspace(0, 5, 500))
+    rng = np.random.RandomState(2)
+    w = jnp.asarray(rng.randn(12, 20), jnp.float32)
+    dt = jnp.asarray(10 ** rng.uniform(0, 5, (64,)), jnp.float32)
+    want = te.lut_encode(lut, dt) @ w
+    folded = te.fold_projection(lut, w)
+    got = te.lut_encode(folded, dt)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_lut_one_hot_path_matches_gather():
+    tcfg = te.TimeEncoderConfig(dim=8, n_entries=16)
+    lut = te.init_lut(jax.random.key(3), tcfg,
+                      dt_samples=np.logspace(0, 4, 300))
+    dt = jnp.asarray(10 ** np.random.RandomState(4).uniform(0, 4, 40),
+                     jnp.float32)
+    a = te.lut_encode(lut, dt, one_hot=False)
+    b = te.lut_encode(lut, dt, one_hot=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_lut_init_from_teacher_is_piecewise_cosine():
+    tcfg = te.TimeEncoderConfig(dim=6, n_entries=8)
+    cos = te.init_cosine(jax.random.key(5), tcfg)
+    lut = te.init_lut(jax.random.key(6), tcfg, cosine_params=cos,
+                      dt_samples=np.logspace(0, 3, 200))
+    # each table row equals the cosine encoding of some dt in the bucket
+    assert np.all(np.abs(np.asarray(lut["table"])) <= 1.0 + 1e-6)
