@@ -1,0 +1,28 @@
+# Uniform verify targets for the builder and future PRs.
+#
+#   make test         tier-1 suite (the ROADMAP verify command)
+#   make bench-smoke  one tiny fig5 sweep through the streaming engine
+#   make lint         pyflakes over src/ tests/ benchmarks/ examples/
+#                     (falls back to a bytecode-compile check when
+#                      pyflakes is not installed; see requirements-dev.txt)
+
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
+
+.PHONY: test bench-smoke lint
+
+test:
+	$(PY) -m pytest -x -q
+
+bench-smoke:
+	$(PY) -c "from benchmarks.fig5_latency_throughput import sweep; \
+	          rows = sweep(batch_sizes=(25,), n_edges=600, f_mem=16); \
+	          [print(r) for r in rows]"
+
+lint:
+	@if $(PY) -c "import pyflakes" 2>/dev/null; then \
+	    $(PY) -m pyflakes src benchmarks examples tests/*.py; \
+	else \
+	    echo 'pyflakes not installed; falling back to compileall'; \
+	    $(PY) -m compileall -q src benchmarks examples tests; \
+	fi

@@ -44,19 +44,16 @@ def load_json(name: str):
 
 def paper_tgn_config(variant: str, n_nodes: int, n_edges: int,
                      f_feat: int = 0, f_edge: int = 172, f_mem: int = 100):
-    """TGNConfig for a Table-II ladder variant at PAPER dims."""
-    from repro.core.tgn import TGNConfig
-    kw = dict(n_nodes=n_nodes, n_edges=n_edges, f_feat=f_feat,
-              f_edge=f_edge, f_mem=f_mem, f_time=f_mem, f_emb=f_mem, m_r=10)
-    ladder = {
-        "Baseline": dict(attention="vanilla", encoder="cosine"),
-        "+SAT": dict(attention="sat", encoder="cosine"),
-        "+LUT": dict(attention="sat", encoder="lut"),
-        "+NP(L)": dict(attention="sat", encoder="lut", prune_k=6),
-        "+NP(M)": dict(attention="sat", encoder="lut", prune_k=4),
-        "+NP(S)": dict(attention="sat", encoder="lut", prune_k=2),
-    }
-    return TGNConfig(**kw, **ladder[variant])
+    """TGNConfig for a Table-II ladder variant at PAPER dims.
+
+    ``variant`` is any core.pipeline registry spec — a Table-II row name
+    ("Baseline", "+NP(M)", ...) or a canonical string ("sat+lut+np4").
+    """
+    from repro.core.pipeline import variant_config
+    return variant_config(variant, n_nodes=n_nodes, n_edges=n_edges,
+                          f_feat=f_feat, f_edge=f_edge, f_mem=f_mem,
+                          f_time=f_mem, f_emb=f_mem, m_r=10)
 
 
+# Table-II row labels in ladder order (aliases of the pipeline registry).
 VARIANTS = ("Baseline", "+SAT", "+LUT", "+NP(L)", "+NP(M)", "+NP(S)")

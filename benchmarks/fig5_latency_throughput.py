@@ -1,11 +1,16 @@
 """Fig. 5 — latency & throughput vs batch size: baseline (vanilla TGN) vs
-the optimized StreamingEngine with NP(L/M/S), plus the real-time
-time-window replay (the paper's "every 15 minutes" experiment)."""
+the optimized NP(L/M/S) students, plus the real-time time-window replay
+(the paper's "every 15 minutes" experiment).
+
+Every row — the vanilla/cosine baseline included — runs through the SAME
+variant-agnostic StreamingEngine session; the pipeline registry resolves
+each Table-II name to its stage stack (Pallas kernel backends where they
+exist, jnp references elsewhere).
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import save_json, timeit, paper_tgn_config
 from repro.core import tgn
@@ -15,39 +20,25 @@ from repro.serving.engine import EngineConfig, StreamingEngine
 
 
 def sweep(batch_sizes=(25, 50, 100, 200, 400), n_edges: int = 3000,
-          f_mem: int = 100):
+          f_mem: int = 100,
+          variants=("Baseline", "+NP(L)", "+NP(M)", "+NP(S)")):
     g = tgd.wikipedia_like(n_edges=n_edges)
     ef = jnp.asarray(g.edge_feats)
+    lo = min(1000, n_edges // 3)
     rows = []
-
-    # baseline: vanilla TGN-attn through process_batch
-    cfg_b = paper_tgn_config("Baseline", g.cfg.n_nodes, g.n_edges,
-                             f_mem=f_mem)
-    params_b = tgn.init_params(jax.random.key(0), cfg_b)
 
     for bs in batch_sizes:
         batch = next(iter(stream_mod.fixed_count(
-            g, bs, window=slice(1000, 3000))))
-        b = tuple(jnp.asarray(x) for x in (batch.src, batch.dst, batch.eid,
-                                           batch.ts, batch.valid))
-        state = tgn.init_state(cfg_b)
-        fn = jax.jit(lambda p, s, bb: tgn.process_batch(
-            p, cfg_b, s, None, ef, *bb).emb_src)
-        t = timeit(fn, params_b, state, b, iters=5)
-        rows.append({"model": "Baseline", "batch": bs,
-                     "latency_ms": round(t * 1e3, 3),
-                     "throughput_eps": round(bs / t)})
-
-        for name, k in (("NP(L)", 6), ("NP(M)", 4), ("NP(S)", 2)):
-            cfg_s = paper_tgn_config(f"+{name}", g.cfg.n_nodes, g.n_edges,
-                                     f_mem=f_mem)
-            params_s = tgn.init_params(jax.random.key(1), cfg_s)
-            eng = StreamingEngine(EngineConfig(model=cfg_s), params_s, ef)
+            g, bs, window=slice(lo, n_edges))))
+        for name in variants:
+            cfg = paper_tgn_config(name, g.cfg.n_nodes, g.n_edges,
+                                   f_mem=f_mem)
+            params = tgn.init_params(jax.random.key(0), cfg)
+            eng = StreamingEngine(EngineConfig(model=cfg), params, ef)
             dev = tuple(jnp.asarray(x) for x in
                         (batch.src, batch.dst, batch.eid, batch.ts,
                          batch.valid))
-            t = timeit(lambda *a: eng._step(eng.params, eng.state, dev),
-                       iters=5)
+            t = timeit(lambda: eng.step_on_device(dev).emb_src, iters=5)
             rows.append({"model": name, "batch": bs,
                          "latency_ms": round(t * 1e3, 3),
                          "throughput_eps": round(bs / t)})

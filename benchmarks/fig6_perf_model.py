@@ -65,8 +65,7 @@ def host_model_vs_measured(n_edges: int = 3000, f_mem: int = 100):
         cfg = paper_tgn_config(name, g.cfg.n_nodes, g.n_edges, f_mem=f_mem)
         params = tgn.init_params(jax.random.key(0), cfg)
         eng = StreamingEngine(EngineConfig(model=cfg), params, ef)
-        t_meas = timeit(lambda: eng._step(eng.params, eng.state, dev),
-                        iters=5)
+        t_meas = timeit(lambda: eng.step_on_device(dev), iters=5)
         ccfg = cx.ComplexityConfig(f_edge=172, f_mem=f_mem, f_time=f_mem,
                                    f_emb=f_mem, attention="sat",
                                    encoder="lut", prune_k=k)

@@ -1,5 +1,6 @@
 """Fig. 7 — accuracy/latency frontier: AP (from the table2 --ap ladder, or
-a quick re-train) against measured per-batch latency of each variant."""
+a quick re-train) against measured per-batch latency of each variant, every
+one served by the variant-agnostic StreamingEngine."""
 from __future__ import annotations
 
 import jax
@@ -24,15 +25,8 @@ def latencies(n_edges: int = 2000, batch: int = 200, f_mem: int = 100):
     for name in VARIANTS:
         cfg = paper_tgn_config(name, g.cfg.n_nodes, g.n_edges, f_mem=f_mem)
         params = tgn.init_params(jax.random.key(0), cfg)
-        if cfg.attention == "sat" and cfg.encoder == "lut":
-            eng = StreamingEngine(EngineConfig(model=cfg), params, ef)
-            t = timeit(lambda: eng._step(eng.params, eng.state, dev),
-                       iters=5)
-        else:
-            state = tgn.init_state(cfg)
-            fn = jax.jit(lambda p, s, bb: tgn.process_batch(
-                p, cfg, s, None, ef, *bb).emb_src)
-            t = timeit(fn, params, state, dev, iters=5)
+        eng = StreamingEngine(EngineConfig(model=cfg), params, ef)
+        t = timeit(lambda: eng.step_on_device(dev).emb_src, iters=5)
         out[name] = round(t * 1e3, 3)
     return out
 

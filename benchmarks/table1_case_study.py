@@ -3,8 +3,9 @@ per-stage execution time of OUR implementation on this host.
 
 The paper profiles sample/memory/GNN/update on CPU/GPU; we reproduce the
 complexity accounting exactly (core/complexity.py) and measure the same
-four stages of our JAX implementation by timing separately-jitted stage
-functions over a warmed vertex state.
+four stages by timing the registered pipeline stages (core/stages.py) —
+sampler, memory-updater, sampler+aggregator, committer+ring-insert —
+separately jitted over a warmed vertex state.
 """
 from __future__ import annotations
 
@@ -13,7 +14,8 @@ import jax.numpy as jnp
 
 from benchmarks.common import timeit, save_json
 from repro.core import complexity as cx
-from repro.core import mailbox, memory, tgn, updater
+from repro.core import mailbox, tgn
+from repro.core.pipeline import build_pipeline
 from repro.data import stream as stream_mod
 from repro.data import temporal_graph as tgd
 
@@ -59,31 +61,31 @@ def measured_stage_times(batch_size: int = 200, f_mem: int = 100):
     vids = jnp.concatenate([src, dst])
     t_inst = jnp.concatenate([ts, ts])
 
+    pipe = build_pipeline(cfg)            # reference stage backends
+    aux = pipe.prepare(params)
+    stg = pipe.stages
+
     @jax.jit
     def stage_sample(state):
-        return mailbox.gather_neighbors(state, vids)
+        return stg.sampler(params, aux, state, ef, vids, t_inst)
 
     @jax.jit
     def stage_memory(state):
-        return memory.update_memory(
-            params["gru"], params["time"], cfg.gru, state.mail[vids],
-            state.mail_ts[vids], state.mail_valid[vids],
-            state.memory[vids], state.last_update[vids])
+        return stg.memory_updater(params, aux, state, vids)
 
     @jax.jit
     def stage_gnn(state):
-        h, _, _, _ = tgn._embed(params, cfg, state, None, ef, vids, t_inst)
+        h, _, _, _ = pipe.embed(params, aux, state, ef, None, vids, t_inst)
         return h
 
     @jax.jit
     def stage_update(state):
         s_upd = state.memory[vids]  # value content irrelevant for timing
-        w = updater.last_write_wins(vids,
-                                    order=updater.interleave_order(
-                                        src.shape[0]))
-        mem_t = updater.commit(state.memory, vids, s_upd, w)
-        return mailbox.insert_neighbors(
-            state._replace(memory=mem_t), src, dst, eid, ts)
+        lu_upd = state.last_update[vids]
+        w = stg.committer.winners(vids, jnp.ones(vids.shape, bool),
+                                  src.shape[0])
+        state = stg.committer.commit_memory(state, vids, w, s_upd, lu_upd)
+        return mailbox.insert_neighbors(state, src, dst, eid, ts)
 
     n_emb = 2 * batch_size
     out = {}

@@ -15,7 +15,6 @@ import jax.numpy as jnp
 from benchmarks.common import (VARIANTS, load_json, paper_tgn_config,
                                save_json, timeit)
 from repro.core import complexity as cx
-from repro.core import tgn
 from repro.data import stream as stream_mod
 from repro.data import temporal_graph as tgd
 
@@ -36,32 +35,35 @@ def analytic_ladder(dataset: str):
 def measured_throughput(dataset_fn=tgd.wikipedia_like, n_edges: int = 2000,
                         batch_size: int = 200, f_mem: int = 100):
     """Edges/s of each ladder variant on this host (single CPU)."""
+    from repro.core.pipeline import build_pipeline
     g = dataset_fn(n_edges=n_edges)
     ef = (jnp.asarray(g.edge_feats) if g.edge_feats.shape[1] else
           jnp.zeros((g.n_edges, 172), jnp.float32))
     nf = jnp.asarray(g.node_feats) if g.node_feats is not None else None
+    warm_hi = n_edges // 2
     batch = next(iter(stream_mod.fixed_count(g, batch_size,
-                                             window=slice(1000, 2000))))
+                                             window=slice(warm_hi,
+                                                          n_edges))))
     rows = {}
     base = None
     for name in VARIANTS:
         cfg = paper_tgn_config(name, g.cfg.n_nodes, g.n_edges,
-                               f_feat=g.cfg.f_feat,
-                               f_edge=172 if g.cfg.f_edge else 172,
+                               f_feat=g.cfg.f_feat, f_edge=172,
                                f_mem=f_mem)
-        params = tgn.init_params(jax.random.key(0), cfg)
-        state = tgn.init_state(cfg)
+        pipe = build_pipeline(cfg)
+        params = pipe.init_params(jax.random.key(0))
+        state = pipe.init_state()
+        step = jax.jit(pipe.step_fn)
         # warm state so neighbor buffers are populated
         for wb in stream_mod.fixed_count(g, batch_size,
-                                         window=slice(0, 1000)):
+                                         window=slice(0, warm_hi)):
             b = tuple(jnp.asarray(x) for x in (wb.src, wb.dst, wb.eid,
                                                wb.ts, wb.valid))
-            state = tgn.process_batch(params, cfg, state, nf, ef, *b).state
+            state = step(params, state, b, ef, nf).state
 
         b = tuple(jnp.asarray(x) for x in (batch.src, batch.dst, batch.eid,
                                            batch.ts, batch.valid))
-        fn = jax.jit(lambda p, s, bb: tgn.process_batch(
-            p, cfg, s, nf, ef, *bb).emb_src)
+        fn = jax.jit(lambda p, s, bb: pipe.step_fn(p, s, bb, ef, nf).emb_src)
         t = timeit(fn, params, state, b)
         thpt = batch_size / t
         if base is None:
@@ -73,24 +75,20 @@ def measured_throughput(dataset_fn=tgd.wikipedia_like, n_edges: int = 2000,
 
 def ap_ladder(n_edges: int = 4000, f_mem: int = 32, epochs: int = 2):
     """Full distillation ladder AP (slow: trains teacher + 5 students)."""
+    from repro.core.pipeline import variant_config
     from repro.training import tgn_trainer as TT
     g = tgd.wikipedia_like(n_edges=n_edges)
     base = dict(n_nodes=g.cfg.n_nodes, n_edges=g.n_edges, f_edge=172,
                 f_mem=f_mem, f_time=f_mem, f_emb=f_mem, m_r=10)
     tcfg = TT.TGNTrainConfig(batch_size=100, epochs=epochs)
     tr, va, te_sl = stream_mod.chronological_split(g)
-    t_cfg = tgn.TGNConfig(**base)
+    t_cfg = variant_config("Baseline", **base)
     t_params, _ = TT.train_teacher(g, t_cfg, tcfg)
     warm = slice(0, va.stop)
     out = {"Baseline": TT.evaluate_ap(t_params, t_cfg, g, te_sl,
                                       warm_window=warm)}
-    ladder = {"+SAT": dict(attention="sat", encoder="cosine"),
-              "+LUT": dict(attention="sat", encoder="lut"),
-              "+NP(L)": dict(attention="sat", encoder="lut", prune_k=6),
-              "+NP(M)": dict(attention="sat", encoder="lut", prune_k=4),
-              "+NP(S)": dict(attention="sat", encoder="lut", prune_k=2)}
-    for name, kw in ladder.items():
-        s_cfg = tgn.TGNConfig(**base, **kw)
+    for name in VARIANTS[1:]:
+        s_cfg = variant_config(name, **base)
         s_params, _ = TT.distill_student(g, t_params, t_cfg, s_cfg, tcfg)
         out[name] = TT.evaluate_ap(s_params, s_cfg, g, te_sl,
                                    warm_window=warm)

@@ -2,13 +2,14 @@
 
 Builds a synthetic temporal graph, trains the TGN-attn teacher for one
 epoch, distills the SAT+LUT+NP(4) student, and streams inference through
-the optimized engine (Pallas kernels, prune-then-fetch, LUT time encoder).
+the variant-agnostic engine (Pallas kernels, prune-then-fetch, LUT time
+encoder). Model variants come from the core.pipeline registry.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import jax
 
-from repro.core import tgn
+from repro.core.pipeline import variant_config
 from repro.data import stream, temporal_graph as tgd
 from repro.serving.engine import EngineConfig, StreamingEngine
 from repro.training import tgn_trainer as TT
@@ -19,7 +20,7 @@ base = dict(n_nodes=g.cfg.n_nodes, n_edges=g.n_edges, f_edge=172,
             f_mem=32, f_time=32, f_emb=32, m_r=10)
 
 # 2. teacher: vanilla temporal attention + cosine time encoder
-teacher_cfg = tgn.TGNConfig(**base)
+teacher_cfg = variant_config("teacher", **base)
 tcfg = TT.TGNTrainConfig(batch_size=100, epochs=1)
 teacher, _ = TT.train_teacher(g, teacher_cfg, tcfg)
 tr, va, te = stream.chronological_split(g)
@@ -27,15 +28,16 @@ ap_t = TT.evaluate_ap(teacher, teacher_cfg, g, va, warm_window=tr)
 print(f"teacher AP: {ap_t:.4f}")
 
 # 3. student: SAT + LUT + neighbor pruning (k=4), distilled (Eq. 17)
-student_cfg = tgn.TGNConfig(**base, attention="sat", encoder="lut",
-                            prune_k=4)
+student_cfg = variant_config("sat+lut+np4", **base)
 student, _ = TT.distill_student(g, teacher, teacher_cfg, student_cfg, tcfg)
 ap_s = TT.evaluate_ap(student, student_cfg, g, va, warm_window=tr)
 print(f"student AP: {ap_s:.4f} (diff {ap_s - ap_t:+.4f})")
 
-# 4. optimized streaming inference (the paper's accelerator dataflow)
+# 4. optimized streaming inference (the paper's accelerator dataflow);
+#    the SAME engine serves the teacher: EngineConfig(model=teacher_cfg)
 engine = StreamingEngine(EngineConfig(model=student_cfg), student,
                          jax.numpy.asarray(g.edge_feats))
+print("engine stages:", engine.describe())
 for _batch, _embs in engine.run(stream.fixed_count(g, 200)):
     pass
 print("engine:", engine.summary())

@@ -1,8 +1,10 @@
 """Real-time streaming inference: the paper's Fig.-5-right experiment.
 
 Processes a temporal-graph stream in wall-clock windows through the
-optimized engine and reports per-window latency — the production deployment
-scenario (fraud screening on incoming transactions etc.).
+streaming engine and reports per-window latency — the production deployment
+scenario (fraud screening on incoming transactions etc.). The engine is a
+thin session over a pipeline-registry variant; swap the variant string to
+serve any Table-II row (including the "teacher" baseline).
 
     PYTHONPATH=src python examples/streaming_inference.py
 """
@@ -10,16 +12,19 @@ import jax
 import numpy as np
 
 from repro.core import tgn
+from repro.core.pipeline import variant_config
 from repro.data import stream, temporal_graph as tgd
-from repro.serving.engine import EngineConfig, StreamingEngine
+from repro.serving.engine import StreamingEngine
 
 g = tgd.reddit_like(n_edges=4000)
-cfg = tgn.TGNConfig(n_nodes=g.cfg.n_nodes, n_edges=g.n_edges, f_edge=172,
-                    f_mem=32, f_time=32, f_emb=32, m_r=10,
-                    attention="sat", encoder="lut", prune_k=4)
+dims = dict(n_nodes=g.cfg.n_nodes, n_edges=g.n_edges, f_edge=172,
+            f_mem=32, f_time=32, f_emb=32, m_r=10)
+cfg = variant_config("sat+lut+np4", **dims)
 params = tgn.init_params(jax.random.key(0), cfg)
-engine = StreamingEngine(EngineConfig(model=cfg), params,
-                         jax.numpy.asarray(g.edge_feats))
+engine = StreamingEngine.from_variant("sat+lut+np4", params,
+                                      jax.numpy.asarray(g.edge_feats),
+                                      **dims)
+print("stages:", engine.describe())
 
 # 15-minute windows, capped at 256 edges per window
 for batch, (h_src, h_dst) in engine.run(stream.time_window(g, 900.0, 256)):
@@ -29,6 +34,7 @@ s = engine.summary()
 print(f"windows processed : {s['batches']}")
 print(f"mean latency      : {s['mean_latency_ms']:.2f} ms")
 print(f"p99 latency       : {s['p99_latency_ms']:.2f} ms")
+print(f"mean H2D transfer : {s['mean_h2d_ms']:.3f} ms")
 print(f"throughput        : {s['throughput_eps']:.0f} edges/s")
 
 lat = np.array([m["latency_s"] for m in engine.metrics[1:]]) * 1e3

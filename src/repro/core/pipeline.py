@@ -1,0 +1,271 @@
+"""The pluggable TGN pipeline: one Algorithm-1 composition for every variant.
+
+The paper's co-design is a ladder of variants (Table II):
+
+    vanilla+cosine  ->  sat+cosine  ->  sat+lut  ->  sat+lut+np{6,4,2}
+
+Historically the repo implemented Algorithm 1 twice — a reference path in
+``tgn.process_batch`` and a hand-fused copy inside the streaming engine that
+only ran the SAT+LUT student. This module replaces both with ONE composition
+of the stage interfaces in ``core/stages.py``:
+
+    pipe = build_pipeline("sat+lut+np4", n_nodes=..., n_edges=...)
+    aux  = pipe.prepare(params)                  # folded/packed tables
+    out  = pipe.step(params, aux, state, batch, edge_feats)   # BatchOut
+
+``tgn.process_batch`` is now the registry's reference composition and
+``serving.StreamingEngine`` is a thin stateful session over any built
+pipeline (kernel or reference backend, any variant, teacher included).
+
+Variant registry: canonical specs are ``"<attention>+<encoder>[+np<k>]"``;
+Table-II row names and a few shorthands are registered as aliases. New
+variants (samplers, aggregators, encoders) plug in via
+``register_variant`` without forking the step function.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mailbox, memory, stages, tgn
+
+
+class VariantSpec(NamedTuple):
+    """The three model axes of the paper's ablation ladder."""
+    attention: str          # "vanilla" | "sat"
+    encoder: str            # "cosine" | "lut"
+    prune_k: int | None     # None | 6 | 4 | 2
+
+
+_REGISTRY: dict[str, VariantSpec] = {}
+_ALIASES: dict[str, str] = {}
+
+
+def register_variant(name: str, spec: VariantSpec,
+                     aliases: tuple[str, ...] = ()) -> None:
+    """Register a canonical variant name (and optional aliases)."""
+    _REGISTRY[name] = spec
+    for a in aliases:
+        _ALIASES[a] = name
+
+
+register_variant("vanilla+cosine", VariantSpec("vanilla", "cosine", None),
+                 aliases=("teacher", "baseline", "Baseline", "vanilla"))
+register_variant("sat+cosine", VariantSpec("sat", "cosine", None),
+                 aliases=("+SAT", "sat"))
+register_variant("sat+lut", VariantSpec("sat", "lut", None),
+                 aliases=("+LUT",))
+register_variant("sat+lut+np6", VariantSpec("sat", "lut", 6),
+                 aliases=("+NP(L)", "np6"))
+register_variant("sat+lut+np4", VariantSpec("sat", "lut", 4),
+                 aliases=("+NP(M)", "np4", "student"))
+register_variant("sat+lut+np2", VariantSpec("sat", "lut", 2),
+                 aliases=("+NP(S)", "np2"))
+
+#: Canonical registry names in ladder order (Table II rows).
+VARIANTS = ("vanilla+cosine", "sat+cosine", "sat+lut",
+            "sat+lut+np6", "sat+lut+np4", "sat+lut+np2")
+
+
+def resolve_variant(spec) -> VariantSpec:
+    """Accepts a canonical name, an alias, a generic ``attn+enc[+npK]``
+    string, a VariantSpec, or a TGNConfig."""
+    if isinstance(spec, VariantSpec):
+        return spec
+    if isinstance(spec, tgn.TGNConfig):
+        return VariantSpec(spec.attention, spec.encoder, spec.prune_k)
+    if not isinstance(spec, str):
+        raise TypeError(f"cannot resolve variant from {type(spec)!r}")
+    name = _ALIASES.get(spec, spec)
+    if name in _REGISTRY:
+        return _REGISTRY[name]
+    return _parse_spec(spec)
+
+
+def _parse_spec(spec: str) -> VariantSpec:
+    """Grammar fallback: ``<attention>+<encoder>[+np<k>]``."""
+    parts = spec.split("+")
+    if len(parts) not in (2, 3):
+        raise ValueError(
+            f"unknown variant {spec!r}; registered: {sorted(_REGISTRY)} "
+            f"(aliases: {sorted(_ALIASES)})")
+    attention, encoder = parts[0], parts[1]
+    if attention not in ("vanilla", "sat"):
+        raise ValueError(f"unknown attention {attention!r} in {spec!r}")
+    if encoder not in ("cosine", "lut"):
+        raise ValueError(f"unknown encoder {encoder!r} in {spec!r}")
+    if attention == "vanilla" and encoder != "cosine":
+        raise ValueError("vanilla attention requires the cosine encoder "
+                         f"(its K/Q/V inputs consume the cosine encoding "
+                         f"directly; LUT is a SAT-path optimization) — "
+                         f"got {spec!r}")
+    prune_k = None
+    if len(parts) == 3:
+        if not parts[2].startswith("np"):
+            raise ValueError(f"bad prune clause {parts[2]!r} in {spec!r}")
+        prune_k = int(parts[2][2:])
+        if attention != "sat":
+            raise ValueError("neighbor pruning requires SAT "
+                             f"(prune-then-fetch) — got {spec!r}")
+    return VariantSpec(attention, encoder, prune_k)
+
+
+def variant_name(spec) -> str:
+    """Canonical registry string for a spec/config (synthesized via the
+    grammar when not pre-registered)."""
+    v = resolve_variant(spec)
+    for name, s in _REGISTRY.items():
+        if s == v:
+            return name
+    base = f"{v.attention}+{v.encoder}"
+    return base if v.prune_k is None else f"{base}+np{v.prune_k}"
+
+
+def variant_config(spec, **dims) -> tgn.TGNConfig:
+    """TGNConfig for a variant at the given table/feature dims.
+
+    ``dims`` are TGNConfig fields (n_nodes, n_edges, f_edge, f_mem, ...);
+    the three variant axes come from ``spec``.
+    """
+    v = resolve_variant(spec)
+    return tgn.TGNConfig(**dims, attention=v.attention, encoder=v.encoder,
+                         prune_k=v.prune_k)
+
+
+# ---------------------------------------------------------------------------
+# The composed pipeline
+# ---------------------------------------------------------------------------
+
+
+class TGNPipeline:
+    """Algorithm 1 as a composition of registered stages.
+
+    Pure-function API (jit/grad friendly):
+      prepare(params) -> aux                       derived tables
+      step(params, aux, state, batch, edge_feats, node_feats) -> BatchOut
+      embed(params, aux, state, edge_feats, node_feats, vids, t) -> (h, ...)
+
+    ``batch`` is ``(src, dst, eid, ts, valid)`` with ``valid`` optionally
+    None. Convenience wrappers ``init_params``/``init_state``/``step_fn``
+    cover the common cases.
+    """
+
+    def __init__(self, cfg: tgn.TGNConfig, use_kernels: bool = False):
+        self.cfg = cfg
+        self.use_kernels = use_kernels
+        self.variant = variant_name(cfg)
+        self.stages = stages.build_stages(cfg, use_kernels)
+        self.prepare = stages.make_prepare(cfg, use_kernels)
+
+    # -- construction helpers ------------------------------------------
+    def init_params(self, key: jax.Array, dt_samples=None) -> dict:
+        return tgn.init_params(key, self.cfg, dt_samples=dt_samples)
+
+    def init_state(self) -> mailbox.VertexState:
+        return tgn.init_state(self.cfg)
+
+    # -- Algorithm 1 ---------------------------------------------------
+    def step(self, params: dict, aux: dict, state: mailbox.VertexState,
+             batch, edge_feats: jax.Array,
+             node_feats: jax.Array | None = None) -> tgn.BatchOut:
+        """Process one chronological batch of edges (B,).
+
+        Intra-batch temporal dependencies between vertices are ignored
+        (paper's general setup) but commits are chronological with
+        last-write-wins per vertex. ``valid`` masks padding rows: their
+        state writes are dropped entirely (their embeddings are still
+        computed but are garbage the caller must mask).
+        """
+        src, dst, eid, ts, valid = batch
+        B = src.shape[0]
+        vids = jnp.concatenate([src, dst])          # (2B,) involved instances
+        t_inst = jnp.concatenate([ts, ts])
+        vvalid = (jnp.concatenate([valid, valid]) if valid is not None
+                  else jnp.ones((2 * B,), bool))
+        st = self.stages
+
+        # --- 1. UPDT: consume cached mail for involved vertices ----------
+        s_upd, lu_upd = st.memory_updater(params, aux, state, vids)
+
+        # --- 2. chronological commit of memory (winners computed ONCE) ---
+        # duplicates of a vertex consume the SAME cached mail -> identical
+        # values; last-write-wins picks one winner so the scatter is
+        # collision-free. The same winner mask serves the mail commit below.
+        winners = st.committer.winners(vids, vvalid, B)
+        state = st.committer.commit_memory(state, vids, winners, s_upd,
+                                           lu_upd)
+
+        # --- 3. GNN embeddings (sampler + aggregator on updated memory) --
+        nb = st.sampler(params, aux, state, edge_feats, vids, t_inst)
+        s_self = state.memory[vids]
+        f_self = node_feats[vids] if node_feats is not None else None
+        h, logits = st.aggregator(params, aux, nb, s_self, f_self)
+
+        # --- 4. cache new messages (Most-Recent aggregator == LWW commit) -
+        mem_t = state.memory
+        fe = edge_feats[eid]
+        mail_src = memory.build_mail_raw(mem_t[src], mem_t[dst], fe)
+        mail_dst = memory.build_mail_raw(mem_t[dst], mem_t[src], fe)
+        new_mail = jnp.concatenate([mail_src, mail_dst], axis=0)
+        state = st.committer.commit_mail(state, vids, winners, new_mail,
+                                         t_inst)
+
+        # --- 5. neighbor ring-buffer insertion (FIFO sampler) -------------
+        state = mailbox.insert_neighbors(state, src, dst, eid, ts, valid)
+
+        return tgn.BatchOut(state=state, emb_src=h[:B], emb_dst=h[B:],
+                            attn_logits=logits, nbr_valid=nb.full_valid,
+                            nbr_dt=nb.full_dt)
+
+    def embed(self, params: dict, aux: dict, state: mailbox.VertexState,
+              edge_feats: jax.Array, node_feats: jax.Array | None,
+              vids: jax.Array, t_query: jax.Array):
+        """Dynamic embeddings for vertex instances without a state update
+        (negative-destination scoring, ad-hoc queries).
+
+        Returns ``(h, logits, valid, dt)`` like the GNN stage of ``step``.
+        """
+        nb = self.stages.sampler(params, aux, state, edge_feats, vids,
+                                 t_query)
+        s_self = state.memory[vids]
+        f_self = node_feats[vids] if node_feats is not None else None
+        h, logits = self.stages.aggregator(params, aux, nb, s_self, f_self)
+        return h, logits, nb.full_valid, nb.full_dt
+
+    def step_fn(self, params: dict, state: mailbox.VertexState, batch,
+                edge_feats: jax.Array,
+                node_feats: jax.Array | None = None) -> tgn.BatchOut:
+        """``step`` with aux derived in-trace (training/reference paths:
+        gradients flow through the LUT folds)."""
+        return self.step(params, self.prepare(params), state, batch,
+                         edge_feats, node_feats)
+
+    def describe(self) -> dict:
+        """Variant + resolved stage backends (introspection/logging)."""
+        return {"variant": self.variant, "use_kernels": self.use_kernels,
+                **self.stages.names}
+
+
+@functools.lru_cache(maxsize=64)
+def _cached_pipeline(cfg: tgn.TGNConfig, use_kernels: bool) -> TGNPipeline:
+    return TGNPipeline(cfg, use_kernels)
+
+
+def build_pipeline(spec, use_kernels: bool = False, **dims) -> TGNPipeline:
+    """Build (or fetch the cached) pipeline for a variant.
+
+    ``spec`` may be a TGNConfig (used as-is; ``dims`` must be empty) or any
+    string/VariantSpec accepted by ``resolve_variant`` — then ``dims``
+    supplies the TGNConfig table/feature fields.
+    """
+    if isinstance(spec, tgn.TGNConfig):
+        if dims:
+            raise TypeError("dims are only valid with a variant spec, "
+                            "not a full TGNConfig")
+        cfg = spec
+    else:
+        cfg = variant_config(spec, **dims)
+    return _cached_pipeline(cfg, use_kernels)

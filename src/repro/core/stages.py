@@ -1,0 +1,347 @@
+"""Algorithm 1 decomposed into pluggable stage interfaces.
+
+Every Table-II variant (teacher included) is one composition of five stages;
+``core/pipeline.py`` holds the registry and the composing ``TGNPipeline``:
+
+  MemoryUpdater  (MUU)    consume cached mail -> updated memory rows.
+                          cosine | LUT-reference | LUT-Pallas backends.
+  NeighborSampler         read the ring buffer and produce the Neighborhood
+                          the aggregator consumes. Two dataflows:
+                            * fetch-all        (vanilla attention needs the
+                              full m_r rows of memory/edge features)
+                            * prune-then-fetch (SAT logits from timestamps
+                              ONLY -> top-k -> gather just k rows; the HBM
+                              saving the paper measures, §III-B)
+  Aggregator     (EU)     vanilla attention | SAT reference | SAT-Pallas.
+  Committer               chronological last-write-wins commit of memory and
+                          cached mail (§IV-B). Winners are computed ONCE per
+                          batch and shared by both commits.
+  (insert)                neighbor ring-buffer FIFO insertion stays in
+                          core/mailbox.py — it is parameter-free and common
+                          to every variant.
+
+Stages are pure closures built from a frozen ``TGNConfig``; per-call inputs
+are ``(params, aux, ...)`` where ``aux = prepare(params)`` carries every
+derived table (folded LUT rows, lane-packed Pallas parameters). Training
+paths recompute ``aux`` inside the traced step so gradients flow through the
+folds; the serving engine computes it once at session construction.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import attention as attn_mod
+from repro.core import mailbox, memory, pruning, time_encode as te
+from repro.core import updater
+
+
+class Neighborhood(NamedTuple):
+    """What a sampler hands the aggregator.
+
+    ``s_nbr``/``e_nbr``/``dt``/``valid`` cover the FETCHED slots (k of them
+    under prune-then-fetch, m_r otherwise). ``logits`` are the SAT scores of
+    the fetched slots (None for the vanilla sampler, which scores inside the
+    aggregator). ``full_*`` always span all m_r ring-buffer slots — the
+    distillation views (Eq. 17 masking) regardless of pruning.
+    """
+    s_nbr: jax.Array            # (2B, k, f_mem) masked neighbor memory
+    e_nbr: jax.Array            # (2B, k, f_edge) masked edge features
+    dt: jax.Array               # (2B, k) time deltas of fetched slots
+    valid: jax.Array            # (2B, k) fetched-slot validity
+    logits: jax.Array | None    # (2B, k) SAT logits of fetched slots
+    full_logits: jax.Array      # (2B, m_r) pre-softmax scores (distill)
+    full_valid: jax.Array       # (2B, m_r) ring-buffer validity
+    full_dt: jax.Array          # (2B, m_r) time deltas of every slot
+
+
+class StageBundle(NamedTuple):
+    """The resolved stage stack for one variant (+ backend choice)."""
+    memory_updater: object      # (params, aux, state, vids) -> (s_upd, lu_upd)
+    sampler: object             # (params, aux, state, ef, vids, t) -> Neighborhood
+    aggregator: object          # (params, aux, nb, s_self, f_self) -> (h, logits)
+    committer: object           # LastWriteWinsCommitter
+    names: dict                 # stage-name -> backend label (introspection)
+
+
+# ---------------------------------------------------------------------------
+# aux preparation: folded LUT rows + lane-packed kernel parameters (§III-C)
+# ---------------------------------------------------------------------------
+
+
+def make_prepare(cfg, use_kernels: bool = False):
+    """Build ``prepare(params) -> aux`` for ``cfg`` (a TGNConfig).
+
+    aux carries every parameter-derived table the resolved stage backends
+    need:
+      folded_gru / folded_attn   LUT tables pre-multiplied through the time
+                                 rows of W_i / W_v (te.fold_projection)
+      packed_gru / packed_lut_gru / packed_sat
+                                 lane-aligned Pallas parameter layouts
+                                 (kernels/ops.py pad_* helpers) — only when
+                                 ``use_kernels`` selects Pallas backends
+    Cheap jnp ops — safe to trace inside a training step (gradients flow
+    through the folds) or run once at engine construction.
+    """
+    def prepare(params: dict) -> dict:
+        aux = {}
+        if cfg.encoder != "lut":
+            return aux
+        gcfg = cfg.gru
+        gru_p = params["gru"]
+        folded_gru = te.fold_projection(params["time"],
+                                        gru_p["w_i"][gcfg.f_mail_raw:])
+        aux["folded_gru"] = folded_gru
+        folded_attn = None
+        if cfg.attention == "sat":
+            attn_p = params["attn"]
+            dkv = cfg.f_mem + cfg.f_edge
+            folded_attn = te.fold_projection(params["time"],
+                                             attn_p["w_v"][dkv:])
+            aux["folded_attn"] = folded_attn
+        if not use_kernels:
+            return aux
+        from repro.kernels import ops as kops  # local: keep core importable
+        aux["packed_gru"] = kops.pad_gru_params(
+            {"w_i": gru_p["w_i"][:gcfg.f_mail_raw], "w_h": gru_p["w_h"],
+             "b_i": gru_p["b_i"], "b_h": gru_p["b_h"]},
+            gcfg.f_mail_raw, cfg.f_mem)
+        aux["packed_lut_gru"] = kops.pad_lut_params(
+            folded_gru["boundaries"], folded_gru["table"])
+        if folded_attn is not None:
+            aux["packed_sat"] = kops.pad_sat_params(
+                attn_p["w_v"][:dkv], attn_p["b_v"],
+                folded_attn["boundaries"], folded_attn["table"])
+        return aux
+
+    return prepare
+
+
+# ---------------------------------------------------------------------------
+# MemoryUpdater (MUU)
+# ---------------------------------------------------------------------------
+
+
+def make_memory_updater(cfg, use_kernels: bool):
+    """UPDT: consume cached messages for the involved vertex instances.
+
+    Returns ``(muu, backend_name)``; ``muu(params, aux, state, vids)`` maps
+    the cached mail of ``vids`` to updated (memory, last_update) rows.
+    Vertices without valid mail keep their previous rows. The Pallas backend
+    exists for the LUT encoder only; other combinations fall back to the
+    jnp reference.
+    """
+    gcfg = cfg.gru
+
+    if cfg.encoder == "lut" and use_kernels:
+        from repro.kernels import ops as kops
+
+        def muu(params, aux, state, vids):
+            mail_raw = state.mail[vids]
+            mail_ts = state.mail_ts[vids]
+            mail_valid = state.mail_valid[vids]
+            s_prev = state.memory[vids]
+            lu_prev = state.last_update[vids]
+            # LUT row fetch (Pallas) -> fused GRU (Pallas): the folded time
+            # rows enter the kernel as an additive input-gate term.
+            dt_mail = mail_ts - lu_prev
+            time_rows = kops.lut_encode(dt_mail, aux["packed_lut_gru"])
+            s_new = kops.gru_cell(mail_raw, s_prev, aux["packed_gru"],
+                                  extra=time_rows)
+            s_upd = jnp.where(mail_valid[:, None], s_new, s_prev)
+            lu_upd = jnp.where(mail_valid, mail_ts, lu_prev)
+            return s_upd, lu_upd
+
+        return muu, "gru:lut-pallas"
+
+    def muu(params, aux, state, vids):
+        return memory.update_memory(
+            params["gru"], params["time"], gcfg,
+            state.mail[vids], state.mail_ts[vids], state.mail_valid[vids],
+            state.memory[vids], state.last_update[vids],
+            encoder=cfg.encoder, lut_folded=aux.get("folded_gru"))
+
+    return muu, f"gru:{cfg.encoder}-ref"
+
+
+# ---------------------------------------------------------------------------
+# NeighborSampler / Pruner
+# ---------------------------------------------------------------------------
+
+
+def make_sampler(cfg):
+    """Returns ``(sampler, backend_name)``.
+
+    ``sampler(params, aux, state, edge_feats, vids, t_query) -> Neighborhood``
+    reads the ring buffer for ``vids`` at query times ``t_query``.
+    """
+    if cfg.attention == "vanilla":
+        # fetch-all: vanilla attention scores depend on neighbor memory, so
+        # every m_r row must be gathered before scoring.
+        def sampler(params, aux, state, edge_feats, vids, t_query):
+            nbr_ids, nbr_ts, nbr_eid, valid = mailbox.gather_neighbors(
+                state, vids)
+            dt = jnp.maximum(t_query[:, None] - nbr_ts, 0.0) * valid
+            s_nbr = state.memory[nbr_ids] * valid[..., None]
+            e_nbr = edge_feats[nbr_eid] * valid[..., None]
+            return Neighborhood(s_nbr=s_nbr, e_nbr=e_nbr, dt=dt, valid=valid,
+                                logits=None, full_logits=dt * 0.0,
+                                full_valid=valid, full_dt=dt)
+
+        return sampler, "sampler:fetch-all"
+
+    k = cfg.prune_k if cfg.prune_k is not None else cfg.m_r
+    k = min(k, cfg.m_r)
+
+    # prune-then-fetch: SAT logits come from the ring buffer's timestamps
+    # ONLY, so top-k selection runs BEFORE any memory/edge-feature gather and
+    # HBM traffic scales with k, not m_r (the paper's 67% MEM saving).
+    def sampler(params, aux, state, edge_feats, vids, t_query):
+        nbr_ids, nbr_ts, nbr_eid, valid = mailbox.gather_neighbors(
+            state, vids)
+        dt = jnp.maximum(t_query[:, None] - nbr_ts, 0.0) * valid
+        logits = attn_mod.sat_logits(params["attn"], dt)      # ts ONLY
+        if k < cfg.m_r:
+            idx, sel_logits, sel_valid = pruning.topk_select(logits, valid, k)
+            sel_ids = jnp.take_along_axis(nbr_ids, idx, axis=1)
+            sel_eid = jnp.take_along_axis(nbr_eid, idx, axis=1)
+            sel_dt = jnp.take_along_axis(dt, idx, axis=1)
+        else:
+            sel_ids, sel_eid, sel_dt = nbr_ids, nbr_eid, dt
+            sel_logits, sel_valid = logits, valid
+        # fetch ONLY the winners' rows (the point of the co-design)
+        s_nbr = state.memory[sel_ids] * sel_valid[..., None]
+        e_nbr = edge_feats[sel_eid] * sel_valid[..., None]
+        return Neighborhood(s_nbr=s_nbr, e_nbr=e_nbr, dt=sel_dt,
+                            valid=sel_valid, logits=sel_logits,
+                            full_logits=logits, full_valid=valid,
+                            full_dt=dt)
+
+    name = (f"sampler:prune-then-fetch(k={k})" if k < cfg.m_r
+            else "sampler:score-all")
+    return sampler, name
+
+
+# ---------------------------------------------------------------------------
+# Aggregator (EU)
+# ---------------------------------------------------------------------------
+
+
+def make_aggregator(cfg, use_kernels: bool):
+    """Returns ``(aggregator, backend_name)``.
+
+    ``aggregator(params, aux, nb, s_self, f_self) -> (h, distill_logits)``
+    consumes a Neighborhood and the self rows. The Pallas backend covers the
+    SAT+LUT student tail; everything else runs the jnp reference.
+    """
+    acfg = cfg.attn
+
+    if cfg.attention == "vanilla":
+        def aggregator(params, aux, nb, s_self, f_self):
+            return attn_mod.vanilla_attention(
+                params["attn"], acfg, params["time"],
+                s_self, f_self, nb.s_nbr, nb.e_nbr, nb.dt, nb.valid)
+
+        return aggregator, "attn:vanilla-ref"
+
+    dkv = cfg.f_mem + cfg.f_edge
+
+    if cfg.encoder == "lut" and use_kernels:
+        from repro.kernels import ops as kops
+
+        def aggregator(params, aux, nb, s_self, f_self):
+            # fused: logits -> masked softmax -> V-projection+LUT -> sum
+            kv = jnp.concatenate([nb.s_nbr, nb.e_nbr], axis=-1)
+            agg = kops.sat_aggregate(kv, nb.dt, nb.logits, nb.valid,
+                                     aux["packed_sat"])
+            fp = attn_mod.feat_proj(params["attn"]["feat"], s_self, f_self)
+            h = (jnp.concatenate([fp, agg], axis=-1)
+                 @ params["attn"]["w_out"] + params["attn"]["b_out"])
+            return h, nb.full_logits
+
+        return aggregator, "attn:sat-lut-pallas"
+
+    def aggregator(params, aux, nb, s_self, f_self):
+        attn_p = params["attn"]
+        attnw = pruning.masked_softmax(nb.logits, nb.valid)
+        if cfg.encoder == "lut":
+            folded = aux.get("folded_attn")
+            if folded is None:
+                folded = te.fold_projection(params["time"],
+                                            attn_p["w_v"][dkv:])
+            v = (jnp.concatenate([nb.s_nbr, nb.e_nbr], axis=-1)
+                 @ attn_p["w_v"][:dkv]
+                 + te.lut_encode(folded, nb.dt) + attn_p["b_v"])
+        else:
+            phi = te.cosine_encode(params["time"], nb.dt)
+            kv_in = jnp.concatenate([nb.s_nbr, nb.e_nbr, phi], axis=-1)
+            v = kv_in @ attn_p["w_v"] + attn_p["b_v"]
+        agg = jnp.einsum("bn,bnd->bd", attnw, v)
+        fp = attn_mod.feat_proj(attn_p["feat"], s_self, f_self)
+        h = (jnp.concatenate([fp, agg], axis=-1)
+             @ attn_p["w_out"] + attn_p["b_out"])
+        return h, nb.full_logits
+
+    return aggregator, f"attn:sat-{cfg.encoder}-ref"
+
+
+# ---------------------------------------------------------------------------
+# Committer — chronological last-write-wins (§IV-B)
+# ---------------------------------------------------------------------------
+
+
+class LastWriteWinsCommitter:
+    """Chronological Updater semantics on SIMD: per batch, exactly the
+    chronologically-last valid update of each vertex survives. The winner
+    mask is computed ONCE per batch and shared by the memory commit and the
+    mail commit (both race over the same (vids, vvalid) layout).
+    """
+
+    def winners(self, vids: jax.Array, vvalid: jax.Array,
+                B: int) -> jax.Array:
+        return updater.last_write_wins(vids, vvalid,
+                                       updater.interleave_order(B))
+
+    def commit_memory(self, state, vids, winners, s_upd, lu_upd):
+        """Commit updated memory rows; consuming mail invalidates it."""
+        mem_t = updater.commit(state.memory, vids, s_upd, winners)
+        lu_t = updater.commit_scalar(state.last_update, vids, lu_upd,
+                                     winners)
+        mv_t = updater.commit_scalar(
+            state.mail_valid, vids,
+            jnp.zeros(vids.shape, state.mail_valid.dtype), winners)
+        return state._replace(memory=mem_t, last_update=lu_t,
+                              mail_valid=mv_t)
+
+    def commit_mail(self, state, vids, winners, new_mail, t_inst):
+        """Cache new messages (Most-Recent aggregator == LWW commit)."""
+        mail_t = updater.commit(state.mail, vids, new_mail, winners)
+        mts_t = updater.commit_scalar(state.mail_ts, vids, t_inst, winners)
+        mvv_t = updater.commit_scalar(
+            state.mail_valid, vids,
+            jnp.ones(vids.shape, state.mail_valid.dtype), winners)
+        return state._replace(mail=mail_t, mail_ts=mts_t, mail_valid=mvv_t)
+
+
+def build_stages(cfg, use_kernels: bool = False) -> StageBundle:
+    """Resolve the stage stack for ``cfg`` (a TGNConfig).
+
+    Pallas kernel backends exist for the LUT encoder paths (MUU) and the
+    SAT+LUT aggregation tail; with ``use_kernels=True`` any stage without a
+    kernel backend silently uses its jnp reference, so every variant —
+    teacher included — builds and runs.
+    """
+    if cfg.attention == "vanilla" and cfg.encoder != "cosine":
+        raise ValueError("vanilla attention requires the cosine encoder "
+                         "(its K/Q/V inputs consume the cosine encoding "
+                         "directly; LUT is a SAT-path optimization)")
+    muu, muu_name = make_memory_updater(cfg, use_kernels)
+    sampler, sampler_name = make_sampler(cfg)
+    aggregator, agg_name = make_aggregator(cfg, use_kernels)
+    return StageBundle(
+        memory_updater=muu, sampler=sampler, aggregator=aggregator,
+        committer=LastWriteWinsCommitter(),
+        names={"memory_updater": muu_name, "sampler": sampler_name,
+               "aggregator": agg_name, "committer": "lww-chronological"})

@@ -13,6 +13,14 @@ Variant axes (the paper's ablation rows in Table II):
   attention: "vanilla" (teacher/baseline) | "sat" (+SAT)
   encoder:   "cosine" | "lut"             (+LUT)
   prune_k:   None | 6 | 4 | 2             (+NP(L/M/S))
+
+Since the TGNPipeline redesign the Algorithm-1 body lives in
+``core/pipeline.py`` as a composition of the stage interfaces in
+``core/stages.py``; ``process_batch`` here is exactly the registry's
+reference composition (``build_pipeline(cfg, use_kernels=False)``), kept as
+the stable entry point for training, evaluation, and tests. The streaming
+engine (``serving/engine.py``) runs the SAME composition, optionally with
+Pallas kernel stage backends.
 """
 from __future__ import annotations
 
@@ -24,8 +32,7 @@ import jax.numpy as jnp
 
 from repro.utils import FrozenConfig, fold_path
 from repro.core import attention as attn_mod
-from repro.core import mailbox, memory, pruning, time_encode as te
-from repro.core import updater
+from repro.core import mailbox, memory, time_encode as te
 
 
 @dataclasses.dataclass(frozen=True)
@@ -105,32 +112,23 @@ def init_state(cfg: TGNConfig) -> mailbox.VertexState:
 # ---------------------------------------------------------------------------
 
 
+def _reference_pipeline(cfg: TGNConfig):
+    # local import: pipeline imports this module for TGNConfig/BatchOut
+    from repro.core import pipeline as pl
+    return pl.build_pipeline(cfg, use_kernels=False)
+
+
 def _embed(params: dict, cfg: TGNConfig, state: mailbox.VertexState,
            node_feats: jax.Array | None, edge_feats: jax.Array,
            vids: jax.Array, t_query: jax.Array):
     """Dynamic embeddings for vertex instances ``vids`` at times ``t_query``.
 
-    Gathers ring-buffer neighbors and their state, then applies the configured
-    aggregator. Returns (h, logits, valid, dt).
+    Sampler + aggregator stages of the reference pipeline (pruning included
+    for SAT variants). Returns (h, logits, valid, dt).
     """
-    nbr_ids, nbr_ts, nbr_eid, valid = mailbox.gather_neighbors(state, vids)
-    dt = jnp.maximum(t_query[:, None] - nbr_ts, 0.0) * valid
-
-    s_self = state.memory[vids]
-    f_self = node_feats[vids] if node_feats is not None else None
-    s_nbr = state.memory[nbr_ids] * valid[..., None]
-    e_nbr = edge_feats[nbr_eid] * valid[..., None]
-
-    if cfg.attention == "vanilla":
-        h, logits = attn_mod.vanilla_attention(
-            params["attn"], cfg.attn, params["time"],
-            s_self, f_self, s_nbr, e_nbr, dt, valid)
-    else:
-        h, logits = attn_mod.sat_attention(
-            params["attn"], cfg.attn, params["time"],
-            s_self, f_self, s_nbr, e_nbr, dt, valid,
-            encoder=cfg.encoder)
-    return h, logits, valid, dt
+    pipe = _reference_pipeline(cfg)
+    return pipe.embed(params, pipe.prepare(params), state, edge_feats,
+                      node_feats, vids, t_query)
 
 
 # ---------------------------------------------------------------------------
@@ -144,65 +142,15 @@ def process_batch(params: dict, cfg: TGNConfig, state: mailbox.VertexState,
                   ts: jax.Array, valid: jax.Array | None = None) -> BatchOut:
     """Process one batch of chronologically-sorted edges (B,).
 
-    Follows Algorithm 1; intra-batch temporal dependencies between vertices
-    are ignored (paper's general setup) but commits are chronological with
-    last-write-wins per vertex (Updater). ``valid`` masks padding rows:
-    their state writes are dropped entirely (their embeddings are still
-    computed but are garbage the caller must mask).
+    The reference (pure-jnp) composition of the registered Algorithm-1
+    stages — see core/pipeline.py for the step body and core/stages.py for
+    the stage implementations. ``valid`` masks padding rows: their state
+    writes are dropped entirely (their embeddings are still computed but are
+    garbage the caller must mask).
     """
-    B = src.shape[0]
-    vids = jnp.concatenate([src, dst])              # (2B,) involved instances
-    t_inst = jnp.concatenate([ts, ts])
-    vvalid = (jnp.concatenate([valid, valid]) if valid is not None
-              else jnp.ones((2 * B,), bool))
-
-    # --- 1. UPDT: consume cached mail for involved vertices ---------------
-    mail_raw = state.mail[vids]
-    mail_ts = state.mail_ts[vids]
-    mail_valid = state.mail_valid[vids]
-    s_prev = state.memory[vids]
-    lu_prev = state.last_update[vids]
-    s_upd, lu_upd = memory.update_memory(
-        params["gru"], params["time"], cfg.gru,
-        mail_raw, mail_ts, mail_valid, s_prev, lu_prev, encoder=cfg.encoder)
-
-    # --- 2. chronological commit of memory (Updater semantics) ------------
-    # duplicates of a vertex consume the SAME cached mail -> identical values;
-    # last-write-wins picks one winner so the scatter is collision-free.
-    chron = updater.interleave_order(B)
-    winners = updater.last_write_wins(vids, vvalid, chron)
-    mem_table = updater.commit(state.memory, vids, s_upd, winners)
-    lu_table = updater.commit_scalar(state.last_update, vids, lu_upd, winners)
-    # consuming mail invalidates it
-    mv_table = updater.commit_scalar(
-        state.mail_valid, vids, jnp.zeros_like(mail_valid), winners)
-    state = state._replace(memory=mem_table, last_update=lu_table,
-                           mail_valid=mv_table)
-
-    # --- 3. GNN embeddings (uses updated memory; neighbors read the table) -
-    h, logits, nbr_valid, dt = _embed(params, cfg, state, node_feats,
-                                      edge_feats, vids, t_inst)
-
-    # --- 4. cache new messages (Most-Recent aggregator == LWW commit) ------
-    s_src_new = mem_table[src]
-    s_dst_new = mem_table[dst]
-    fe = edge_feats[eid]
-    mail_src = memory.build_mail_raw(s_src_new, s_dst_new, fe)
-    mail_dst = memory.build_mail_raw(s_dst_new, s_src_new, fe)
-    new_mail = jnp.concatenate([mail_src, mail_dst], axis=0)
-    mail_winners = updater.last_write_wins(vids, vvalid, chron)
-    mail_table = updater.commit(state.mail, vids, new_mail, mail_winners)
-    mts_table = updater.commit_scalar(state.mail_ts, vids, t_inst, mail_winners)
-    mvv_table = updater.commit_scalar(
-        state.mail_valid, vids, jnp.ones((2 * B,), bool), mail_winners)
-    state = state._replace(mail=mail_table, mail_ts=mts_table,
-                           mail_valid=mvv_table)
-
-    # --- 5. neighbor ring-buffer insertion (FIFO sampler) ------------------
-    state = mailbox.insert_neighbors(state, src, dst, eid, ts, valid)
-
-    return BatchOut(state=state, emb_src=h[:B], emb_dst=h[B:],
-                    attn_logits=logits, nbr_valid=nbr_valid, nbr_dt=dt)
+    pipe = _reference_pipeline(cfg)
+    return pipe.step_fn(params, state, (src, dst, eid, ts, valid),
+                        edge_feats, node_feats)
 
 
 # ---------------------------------------------------------------------------

@@ -21,15 +21,16 @@ import numpy as np
 
 def run_tgn(args):
     from repro.core import tgn
+    from repro.core.pipeline import variant_config
     from repro.data import temporal_graph as tgd, stream
     from repro.serving.engine import EngineConfig, StreamingEngine
 
     g = tgd.DATASETS[args.dataset](n_edges=args.edges)
-    cfg = tgn.TGNConfig(
+    cfg = variant_config(
+        args.variant,
         n_nodes=g.cfg.n_nodes, n_edges=g.n_edges, f_edge=g.cfg.f_edge,
         f_feat=g.cfg.f_feat, f_mem=args.f_mem, f_time=args.f_mem,
-        f_emb=args.f_mem, m_r=10, attention="sat", encoder="lut",
-        prune_k=args.prune_k)
+        f_emb=args.f_mem, m_r=10)
     params = tgn.init_params(jax.random.key(0), cfg)
     node_feats = g.node_feats
     engine = StreamingEngine(EngineConfig(model=cfg), params,
@@ -37,6 +38,7 @@ def run_tgn(args):
                              if g.edge_feats.shape[1] else
                              jnp.zeros((g.n_edges, cfg.f_edge), jnp.float32),
                              node_feats)
+    print("engine stages:", engine.describe())
     if args.window_s:
         batches = stream.time_window(g, args.window_s, args.batch)
     else:
@@ -72,7 +74,9 @@ def main():
                     choices=("wikipedia", "reddit", "gdelt"))
     ap.add_argument("--edges", type=int, default=4000)
     ap.add_argument("--f-mem", type=int, default=32)
-    ap.add_argument("--prune-k", type=int, default=4)
+    ap.add_argument("--variant", default="sat+lut+np4",
+                    help="pipeline-registry variant spec (e.g. teacher, "
+                         "+NP(M), sat+lut+np2)")
     ap.add_argument("--batch", type=int, default=200)
     ap.add_argument("--window-s", type=float, default=0.0)
     ap.add_argument("--arch", default="qwen3_8b")

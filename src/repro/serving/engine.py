@@ -1,42 +1,44 @@
 """Streaming TGNN inference engine — the paper's accelerator, end to end.
 
-This is the production path that realizes the co-design (Fig. 2 + Alg. 1):
+This is the production path that realizes the co-design (Fig. 2 + Alg. 1),
+now a thin STATEFUL SESSION over any built ``core.pipeline.TGNPipeline``:
 
   Edge Parser   -> stream.EdgeBatch (chronological, padded, masked)
-  Data Loader   -> PRUNE-THEN-FETCH: SAT logits from the neighbor ring
-                   buffer's timestamps ONLY; top-k; gather just k rows of
-                   vertex memory / edge features from the tables (the HBM
-                   saving the paper measures as 67% fewer MEMs)
-  MUU           -> fused Pallas GRU kernel (kernels/gru_cell.py) with the
-                   LUT time rows pre-folded through W_i (kernels/ops.py)
-  EU            -> fused Pallas SAT-aggregate kernel (logits -> masked
-                   softmax -> V-projection+LUT -> weighted sum)
-  Updater       -> vectorized last-write-wins chronological commit
-                   (core/updater.py)
+  Data Loader   -> sampler stage: PRUNE-THEN-FETCH for SAT variants (top-k
+                   from the ring buffer's timestamps ONLY, then gather just
+                   k rows — the HBM saving the paper measures as 67% fewer
+                   MEMs); fetch-all for the vanilla teacher
+  MUU           -> memory-updater stage (fused Pallas GRU with LUT rows
+                   pre-folded through W_i, or the jnp reference)
+  EU            -> aggregator stage (fused Pallas SAT-aggregate kernel,
+                   jnp SAT reference, or vanilla attention)
+  Updater       -> committer stage: vectorized last-write-wins chronological
+                   commit, winners computed once per batch
   prefetch      -> double-buffered host->device input pipeline
-                   (distributed/overlap.py)
+                   (distributed/overlap.py) with real ``device_put`` and
+                   per-batch transfer-time metrics
 
-``use_kernels=False`` swaps in the pure-jnp reference path (identical
-semantics; used by tests to pin kernel == engine behaviour). The teacher /
-unoptimized baseline runs through core.tgn.process_batch instead.
+Every Table-II variant — the vanilla/cosine teacher included — runs through
+the same session; ``use_kernels`` selects the Pallas stage backends where
+they exist (SAT+LUT paths) and the identical-semantics jnp references
+elsewhere. Folded/packed kernel parameters are prepared by the pipeline's
+``prepare`` at session construction, not per step.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Iterable
+from typing import Iterable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.utils import FrozenConfig
-from repro.core import attention as attn_mod
-from repro.core import mailbox, memory, pruning, time_encode as te
-from repro.core import tgn, updater
+from repro.core import pipeline as pl
+from repro.core import tgn
 from repro.data.stream import EdgeBatch
 from repro.distributed import overlap
-from repro.kernels import ops as kops
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,167 +49,119 @@ class EngineConfig(FrozenConfig):
     prefetch: int = 2
 
 
+class _DeviceBatch(NamedTuple):
+    """A batch whose host->device transfer has been dispatched (async)."""
+    host: EdgeBatch
+    dev: tuple
+    enq_s: float            # host time spent enqueueing the transfer
+
+
 class StreamingEngine:
-    """Stateful streaming inference over a chronological edge stream."""
+    """Stateful streaming inference over a chronological edge stream.
+
+    A session wraps one pipeline (any registry variant, kernel or reference
+    backends) plus the mutable vertex state and metrics. Construct from an
+    ``EngineConfig`` or via :meth:`from_variant` with a registry string.
+    """
 
     def __init__(self, cfg: EngineConfig, params: dict,
                  edge_feats: jax.Array, node_feats: jax.Array | None = None):
-        m = cfg.model
-        assert m.attention == "sat" and m.encoder == "lut", \
-            "the engine is the optimized student path; run baselines via tgn"
         self.cfg = cfg
+        self.pipeline = pl.build_pipeline(cfg.model,
+                                          use_kernels=cfg.use_kernels)
         self.params = params
         self.edge_feats = jnp.asarray(edge_feats)
         self.node_feats = (jnp.asarray(node_feats)
                            if node_feats is not None else None)
-        self.state = tgn.init_state(m)
-
-        # ---- precompute folded tables / packed kernel params (§III-C) ----
-        gcfg = m.gru
-        gru_p = params["gru"]
-        lut_gru = te.fold_projection(params["time"],
-                                     gru_p["w_i"][gcfg.f_mail_raw:])
-        attn_p = params["attn"]
-        dkv = m.f_mem + m.f_edge
-        lut_attn = te.fold_projection(params["time"], attn_p["w_v"][dkv:])
-        self._folded = {"gru": lut_gru, "attn": lut_attn}
-        self._packed_gru = kops.pad_gru_params(
-            {"w_i": gru_p["w_i"][:gcfg.f_mail_raw],
-             "w_h": gru_p["w_h"], "b_i": gru_p["b_i"], "b_h": gru_p["b_h"]},
-            gcfg.f_mail_raw, m.f_mem)
-        self._packed_sat = kops.pad_sat_params(
-            attn_p["w_v"][:dkv], attn_p["b_v"],
-            lut_attn["boundaries"], lut_attn["table"])
-        self._packed_lut_gru = kops.pad_lut_params(
-            lut_gru["boundaries"], lut_gru["table"])
-
-        self._step = jax.jit(self._make_step())
+        self.state = self.pipeline.init_state()
+        # folded LUT tables / lane-packed kernel params, prepared once per
+        # session (§III-C); training paths re-derive them in-trace instead.
+        # aux is closed over (not a jit argument): its packed layouts carry
+        # static int metadata that must not be traced.
+        self.aux = self.pipeline.prepare(params)
+        step, aux = self.pipeline.step, self.aux
+        self._step = jax.jit(lambda params, state, batch, ef, nf:
+                             step(params, aux, state, batch, ef, nf))
         self.metrics: list[dict] = []
 
-    # ------------------------------------------------------------------
-    def _make_step(self):
-        cfg = self.cfg
-        m = cfg.model
-        k = m.prune_k if m.prune_k is not None else m.m_r
-
-        def step(params, state, batch):
-            src, dst, eid, ts, valid = batch
-            B = src.shape[0]
-            vids = jnp.concatenate([src, dst])
-            t_inst = jnp.concatenate([ts, ts])
-            vvalid = jnp.concatenate([valid, valid])
-
-            # ---- MUU: consume cached mail (LUT path) --------------------
-            mail_raw = state.mail[vids]
-            mail_ts = state.mail_ts[vids]
-            mail_valid = state.mail_valid[vids]
-            s_prev = state.memory[vids]
-            lu_prev = state.last_update[vids]
-            dt_mail = mail_ts - lu_prev
-            if cfg.use_kernels:
-                # LUT row fetch (Pallas) -> fused GRU (Pallas): the folded
-                # time rows enter the kernel as an additive input-gate term
-                time_rows = kops.lut_encode(dt_mail, self._packed_lut_gru)
-                s_upd = kops.gru_cell(mail_raw, s_prev, self._packed_gru,
-                                      extra=time_rows)
-            else:
-                time_rows = te.lut_encode(self._folded["gru"], dt_mail)
-                s_upd = memory.gru_cell_lut(params["gru"], mail_raw,
-                                            time_rows, s_prev)
-            ok = mail_valid & vvalid
-            s_upd = jnp.where(ok[:, None], s_upd, s_prev)
-            lu_upd = jnp.where(ok, mail_ts, lu_prev)
-
-            chron = updater.interleave_order(B)
-            winners = updater.last_write_wins(vids, vvalid, chron)
-            mem_t = updater.commit(state.memory, vids, s_upd, winners)
-            lu_t = updater.commit_scalar(state.last_update, vids, lu_upd,
-                                         winners)
-            mv_t = updater.commit_scalar(state.mail_valid, vids,
-                                         jnp.zeros_like(mail_valid), winners)
-            state = state._replace(memory=mem_t, last_update=lu_t,
-                                   mail_valid=mv_t)
-
-            # ---- EU: prune-then-fetch + fused aggregate -----------------
-            nbr_ids, nbr_ts, nbr_eid, nvalid = mailbox.gather_neighbors(
-                state, vids)
-            dt_n = jnp.maximum(t_inst[:, None] - nbr_ts, 0.0) * nvalid
-            logits = attn_mod.sat_logits(params["attn"], dt_n)  # ts ONLY
-            idx, sel_logits, sel_valid = pruning.topk_select(logits, nvalid,
-                                                             k)
-            # fetch ONLY the k winners' state (the point of the co-design)
-            sel_ids = jnp.take_along_axis(nbr_ids, idx, axis=1)
-            sel_eid = jnp.take_along_axis(nbr_eid, idx, axis=1)
-            sel_dt = jnp.take_along_axis(dt_n, idx, axis=1)
-            s_nbr = mem_t[sel_ids] * sel_valid[..., None]
-            e_nbr = self.edge_feats[sel_eid] * sel_valid[..., None]
-            kv = jnp.concatenate([s_nbr, e_nbr], axis=-1)
-
-            if cfg.use_kernels:
-                agg = kops.sat_aggregate(kv, sel_dt, sel_logits,
-                                         sel_valid, self._packed_sat)
-            else:
-                attnw = pruning.masked_softmax(sel_logits, sel_valid)
-                v = (kv @ params["attn"]["w_v"][:kv.shape[-1]]
-                     + te.lut_encode(self._folded["attn"], sel_dt)
-                     + params["attn"]["b_v"])
-                agg = jnp.einsum("bn,bnd->bd", attnw, v)
-
-            s_self = mem_t[vids]
-            f_self = (self.node_feats[vids]
-                      if self.node_feats is not None else None)
-            fp = attn_mod.feat_proj(params["attn"]["feat"], s_self, f_self)
-            h = jnp.concatenate([fp, agg], axis=-1) \
-                @ params["attn"]["w_out"] + params["attn"]["b_out"]
-
-            # ---- Updater: cache new mail + ring-buffer insert -----------
-            fe = self.edge_feats[eid]
-            mail_src = memory.build_mail_raw(mem_t[src], mem_t[dst], fe)
-            mail_dst = memory.build_mail_raw(mem_t[dst], mem_t[src], fe)
-            new_mail = jnp.concatenate([mail_src, mail_dst], axis=0)
-            w2 = updater.last_write_wins(vids, vvalid, chron)
-            mail_t = updater.commit(state.mail, vids, new_mail, w2)
-            mts_t = updater.commit_scalar(state.mail_ts, vids, t_inst, w2)
-            mvv_t = updater.commit_scalar(
-                state.mail_valid, vids, jnp.ones_like(vvalid), w2)
-            state = state._replace(mail=mail_t, mail_ts=mts_t,
-                                   mail_valid=mvv_t)
-            state = mailbox.insert_neighbors(state, src, dst, eid, ts, valid)
-            return state, h[:B], h[B:]
-
-        return step
+    @classmethod
+    def from_variant(cls, variant: str, params: dict, edge_feats: jax.Array,
+                     node_feats: jax.Array | None = None,
+                     use_kernels: bool = True, prefetch: int = 2,
+                     **dims) -> "StreamingEngine":
+        """Session over a registry variant (``"sat+lut+np4"``, ``"teacher"``,
+        Table-II row names, ...). ``dims`` are TGNConfig table/feature
+        fields (n_nodes, n_edges, f_mem, ...)."""
+        model = pl.variant_config(variant, **dims)
+        return cls(EngineConfig(model=model, use_kernels=use_kernels,
+                                prefetch=prefetch), params, edge_feats,
+                   node_feats)
 
     # ------------------------------------------------------------------
-    def process(self, batch: EdgeBatch):
-        """Process one batch; returns (emb_src, emb_dst) and records
-        latency/throughput metrics."""
-        dev = tuple(jnp.asarray(x) for x in
-                    (batch.src, batch.dst, batch.eid, batch.ts, batch.valid))
+    def describe(self) -> dict:
+        """Variant and resolved stage backends of this session."""
+        return self.pipeline.describe()
+
+    def step_on_device(self, dev: tuple) -> tgn.BatchOut:
+        """One jitted pipeline step over already-on-device batch arrays
+        (no metrics; benchmarking hook)."""
+        return self._step(self.params, self.state, dev,
+                          self.edge_feats, self.node_feats)
+
+    # ------------------------------------------------------------------
+    def _to_device(self, batch: EdgeBatch) -> _DeviceBatch:
+        """Dispatch one batch's host->device transfer WITHOUT blocking —
+        transfers issued by the prefetcher overlap the in-flight step."""
         t0 = time.perf_counter()
-        self.state, h_src, h_dst = self._step(self.params, self.state, dev)
-        h_src.block_until_ready()
-        dt = time.perf_counter() - t0
-        n = int(batch.valid.sum())
+        dev = jax.device_put((np.asarray(batch.src), np.asarray(batch.dst),
+                              np.asarray(batch.eid), np.asarray(batch.ts),
+                              np.asarray(batch.valid)))
+        return _DeviceBatch(host=batch, dev=dev,
+                            enq_s=time.perf_counter() - t0)
+
+    def process(self, batch: EdgeBatch | _DeviceBatch):
+        """Process one batch; returns (emb_src, emb_dst) and records
+        latency/throughput/transfer metrics. ``h2d_s`` is the EXPOSED
+        transfer cost: enqueue time plus whatever wait the step actually
+        incurred (≈0 when the prefetcher staged the batch early enough)."""
+        if not isinstance(batch, _DeviceBatch):
+            batch = self._to_device(batch)
+        t0 = time.perf_counter()
+        jax.block_until_ready(batch.dev)
+        h2d = batch.enq_s + (time.perf_counter() - t0)
+        t1 = time.perf_counter()
+        out = self.step_on_device(batch.dev)
+        out.emb_src.block_until_ready()
+        dt = time.perf_counter() - t1
+        self.state = out.state
+        n = int(batch.host.valid.sum())
         self.metrics.append({"latency_s": dt, "edges": n,
+                             "h2d_s": h2d,
                              "throughput_eps": n / dt if dt > 0 else 0.0})
-        return h_src, h_dst
+        return out.emb_src, out.emb_dst
 
     def run(self, stream: Iterable[EdgeBatch]):
-        """Drive the engine over a stream with input prefetching."""
-        for batch in overlap.prefetch(iter(stream), self.cfg.prefetch,
-                                      device_put=lambda b: b):
-            yield batch, self.process(batch)
+        """Drive the engine over a stream. The prefetcher dispatches the
+        next batches' H2D transfers (async device_put) before each step, so
+        host batch formation and transfers overlap the in-flight step;
+        ``metrics[i]["h2d_s"]`` records the transfer cost the step could
+        not hide."""
+        for db in overlap.prefetch(iter(stream), self.cfg.prefetch,
+                                   device_put=self._to_device):
+            yield db.host, self.process(db)
 
     # ------------------------------------------------------------------
     def summary(self) -> dict:
         if not self.metrics:
             return {}
         lat = np.array([m["latency_s"] for m in self.metrics[1:]])  # skip jit
+        h2d = np.array([m["h2d_s"] for m in self.metrics[1:]])
         edges = sum(m["edges"] for m in self.metrics[1:])
         return {
             "batches": len(self.metrics) - 1,
             "mean_latency_ms": float(lat.mean() * 1e3) if len(lat) else 0.0,
             "p99_latency_ms": float(np.percentile(lat, 99) * 1e3)
             if len(lat) else 0.0,
+            "mean_h2d_ms": float(h2d.mean() * 1e3) if len(h2d) else 0.0,
             "throughput_eps": float(edges / lat.sum()) if len(lat) else 0.0,
         }

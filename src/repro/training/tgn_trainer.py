@@ -23,6 +23,7 @@ import numpy as np
 
 from repro.utils import FrozenConfig
 from repro.core import distill, tgn
+from repro.core.pipeline import build_pipeline
 from repro.data import stream as stream_mod
 from repro.data.temporal_graph import TemporalGraph
 from repro.training import optim as opt_mod
@@ -42,9 +43,9 @@ def _detach_state(state):
     return jax.tree.map(jax.lax.stop_gradient, state)
 
 
-def _embed_negatives(params, cfg, state, node_feats, edge_feats, neg_dst,
-                     ts):
-    h, _, _, _ = tgn._embed(params, cfg, state, node_feats, edge_feats,
+def _embed_negatives(pipe, params, aux, state, node_feats, edge_feats,
+                     neg_dst, ts):
+    h, _, _, _ = pipe.embed(params, aux, state, edge_feats, node_feats,
                             neg_dst, ts)
     return h
 
@@ -56,11 +57,14 @@ def _embed_negatives(params, cfg, state, node_feats, edge_feats, neg_dst,
 
 def make_teacher_step(cfg: tgn.TGNConfig, ocfg: opt_mod.OptimConfig,
                       node_feats, edge_feats):
+    pipe = build_pipeline(cfg)   # reference stage backends (differentiable)
+
     def loss_fn(params, state, b):
         src, dst, eid, ts, valid, neg = b
-        out = tgn.process_batch(params, cfg, state, node_feats, edge_feats,
-                                src, dst, eid, ts, valid)
-        neg_emb = _embed_negatives(params, cfg, out.state, node_feats,
+        aux = pipe.prepare(params)   # in-trace: gradients flow through folds
+        out = pipe.step(params, aux, state, (src, dst, eid, ts, valid),
+                        edge_feats, node_feats)
+        neg_emb = _embed_negatives(pipe, params, aux, out.state, node_feats,
                                    edge_feats, neg, ts)
         pos = tgn.link_score(params, out.emb_src, out.emb_dst)
         negs = tgn.link_score(params, out.emb_src, neg_emb)
@@ -114,14 +118,21 @@ def train_teacher(g: TemporalGraph, cfg: tgn.TGNConfig,
 def make_distill_step(s_cfg: tgn.TGNConfig, t_cfg: tgn.TGNConfig,
                       ocfg: opt_mod.OptimConfig, tcfg: TGNTrainConfig,
                       node_feats, edge_feats):
+    # teacher and student are two compositions of the same stage registry —
+    # the teacher replays frozen through its own pipeline.
+    t_pipe = build_pipeline(t_cfg)
+    s_pipe = build_pipeline(s_cfg)
+
     def loss_fn(s_params, t_params, s_state, t_state, b):
         src, dst, eid, ts, valid, neg = b
-        t_out = tgn.process_batch(t_params, t_cfg, t_state, node_feats,
-                                  edge_feats, src, dst, eid, ts, valid)
-        s_out = tgn.process_batch(s_params, s_cfg, s_state, node_feats,
-                                  edge_feats, src, dst, eid, ts, valid)
-        neg_emb = _embed_negatives(s_params, s_cfg, s_out.state, node_feats,
-                                   edge_feats, neg, ts)
+        batch = (src, dst, eid, ts, valid)
+        t_out = t_pipe.step(t_params, t_pipe.prepare(t_params), t_state,
+                            batch, edge_feats, node_feats)
+        s_aux = s_pipe.prepare(s_params)
+        s_out = s_pipe.step(s_params, s_aux, s_state, batch, edge_feats,
+                            node_feats)
+        neg_emb = _embed_negatives(s_pipe, s_params, s_aux, s_out.state,
+                                   node_feats, edge_feats, neg, ts)
         pos = tgn.link_score(s_params, s_out.emb_src, s_out.emb_dst)
         negs = tgn.link_score(s_params, s_out.emb_src, neg_emb)
         total, parts = distill.distill_loss(
@@ -201,13 +212,15 @@ def evaluate_ap(params: dict, cfg: tgn.TGNConfig, g: TemporalGraph,
                   if g.node_feats is not None else None)
     edge_feats = jnp.asarray(g.edge_feats) if g.edge_feats.shape[1] else \
         jnp.zeros((g.n_edges, cfg.f_edge), jnp.float32)
+    pipe = build_pipeline(cfg)
 
     @jax.jit
     def run(state, b):
         src, dst, eid, ts, valid, neg = b
-        out = tgn.process_batch(params, cfg, state, node_feats, edge_feats,
-                                src, dst, eid, ts, valid)
-        neg_emb = _embed_negatives(params, cfg, out.state, node_feats,
+        aux = pipe.prepare(params)
+        out = pipe.step(params, aux, state, (src, dst, eid, ts, valid),
+                        edge_feats, node_feats)
+        neg_emb = _embed_negatives(pipe, params, aux, out.state, node_feats,
                                    edge_feats, neg, ts)
         pos = tgn.link_score(params, out.emb_src, out.emb_dst)
         negs = tgn.link_score(params, out.emb_src, neg_emb)

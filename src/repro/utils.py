@@ -9,6 +9,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import zlib
 from typing import Any, Callable, Iterable, Mapping, Sequence
 
 import jax
@@ -30,8 +31,9 @@ def rng_seq(key: jax.Array):
 
 
 def fold_path(key: jax.Array, path: str) -> jax.Array:
-    """Deterministic per-path key derivation (stable across refactors)."""
-    h = np.uint32(abs(hash(path)) % (2**32 - 1))
+    """Deterministic per-path key derivation (stable across refactors AND
+    processes — crc32, not the per-process-salted builtin hash)."""
+    h = np.uint32(zlib.crc32(path.encode()) % (2**32 - 1))
     return jax.random.fold_in(key, h)
 
 

@@ -1,0 +1,133 @@
+"""Minimal deterministic fallback for the ``hypothesis`` API surface the
+test suite uses, activated by tests/conftest.py only when the real
+hypothesis package is not installed (the CI image may lack it).
+
+Semantics: ``@given(...)`` replays ``max_examples`` pseudo-random examples
+drawn from a RandomState seeded by the test name — deterministic across
+runs, no shrinking, no database. Install real hypothesis
+(requirements-dev.txt) for proper property-based testing.
+"""
+from __future__ import annotations
+
+import zlib
+
+import numpy as np
+
+__version__ = "0.0-repro-fallback"
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def flatmap(self, f):
+        return _Strategy(lambda rng: f(self._draw(rng))._draw(rng))
+
+    def map(self, f):
+        return _Strategy(lambda rng: f(self._draw(rng)))
+
+    def filter(self, pred, _tries: int = 1000):
+        def draw(rng):
+            for _ in range(_tries):
+                v = self._draw(rng)
+                if pred(v):
+                    return v
+            raise ValueError("filter predicate never satisfied")
+        return _Strategy(draw)
+
+
+class _Strategies:
+    """Stand-in for ``hypothesis.strategies``."""
+
+    @staticmethod
+    def integers(min_value=0, max_value=2 ** 31 - 1):
+        return _Strategy(
+            lambda rng: int(rng.randint(min_value, max_value + 1)))
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rng: bool(rng.rand() < 0.5))
+
+    @staticmethod
+    def floats(min_value=0.0, max_value=1.0, allow_nan=True,
+               allow_infinity=None, width=64):
+        lo, hi = float(min_value), float(max_value)
+
+        def draw(rng):
+            # mix uniform draws with boundary values so edge cases appear
+            u = rng.rand()
+            if u < 0.05:
+                return lo
+            if u < 0.10:
+                return hi
+            return float(lo + (hi - lo) * rng.rand())
+        return _Strategy(draw)
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=10):
+        def draw(rng):
+            n = int(rng.randint(min_size, max_size + 1))
+            return [elements._draw(rng) for _ in range(n)]
+        return _Strategy(draw)
+
+    @staticmethod
+    def tuples(*elems):
+        return _Strategy(lambda rng: tuple(e._draw(rng) for e in elems))
+
+    @staticmethod
+    def sampled_from(seq):
+        seq = list(seq)
+        return _Strategy(lambda rng: seq[int(rng.randint(len(seq)))])
+
+    @staticmethod
+    def just(value):
+        return _Strategy(lambda rng: value)
+
+
+strategies = _Strategies()
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+    def deco(f):
+        f._shim_max_examples = max_examples
+        return f
+    return deco
+
+
+def given(*strats, **kw_strats):
+    def deco(f):
+        # Deliberately a ZERO-arg wrapper (no functools.wraps): pytest must
+        # not mistake the strategy-supplied parameters for fixtures.
+        def wrapper():
+            n = getattr(wrapper, "_shim_max_examples",
+                        getattr(f, "_shim_max_examples",
+                                _DEFAULT_MAX_EXAMPLES))
+            rng = np.random.RandomState(
+                zlib.crc32(f.__qualname__.encode()) % (2 ** 31))
+            for _ in range(n):
+                args = tuple(s._draw(rng) for s in strats)
+                kwargs = {k: s._draw(rng) for k, s in kw_strats.items()}
+                f(*args, **kwargs)
+        wrapper.__name__ = f.__name__
+        wrapper.__qualname__ = f.__qualname__
+        wrapper.__doc__ = f.__doc__
+        wrapper.__module__ = f.__module__
+        wrapper._shim_max_examples = getattr(f, "_shim_max_examples",
+                                             _DEFAULT_MAX_EXAMPLES)
+        return wrapper
+    return deco
+
+
+def assume(condition) -> bool:
+    if not condition:
+        raise ValueError("assume() failed (fallback shim cannot retry)")
+    return True
+
+
+class example:  # @example decorator: ignored by the fallback
+    def __init__(self, *a, **kw):
+        pass
+
+    def __call__(self, f):
+        return f

@@ -1,0 +1,261 @@
+"""TGNPipeline API: registry resolution, stage-composition equivalence with
+a straight-line Algorithm-1 transcription (the seed implementation), and the
+variant-agnostic streaming engine."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import attention as attn_mod
+from repro.core import mailbox, memory, pipeline as pl, tgn, updater
+from repro.data import stream as stream_mod
+from repro.data import temporal_graph as tgd
+from repro.serving.engine import EngineConfig, StreamingEngine
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+
+def test_registry_aliases_resolve_to_table2_rows():
+    assert pl.resolve_variant("teacher") == pl.VariantSpec("vanilla",
+                                                           "cosine", None)
+    assert pl.resolve_variant("Baseline") == pl.resolve_variant("teacher")
+    assert pl.resolve_variant("+SAT") == pl.VariantSpec("sat", "cosine",
+                                                        None)
+    assert pl.resolve_variant("+NP(M)") == pl.VariantSpec("sat", "lut", 4)
+    assert pl.resolve_variant("sat+lut+np2").prune_k == 2
+
+
+def test_registry_grammar_fallback_and_errors():
+    # not pre-registered, parsed via the grammar
+    assert pl.resolve_variant("sat+cosine+np3") == pl.VariantSpec(
+        "sat", "cosine", 3)
+    with pytest.raises(ValueError):
+        pl.resolve_variant("nope+cosine")
+    with pytest.raises(ValueError):
+        pl.resolve_variant("sat+fft")
+    with pytest.raises(ValueError):
+        pl.resolve_variant("vanilla+cosine+np4")  # pruning needs SAT
+    with pytest.raises(ValueError):
+        pl.resolve_variant("vanilla+lut")  # LUT fold targets SAT's W_v
+
+
+def test_variant_name_round_trip():
+    for name in pl.VARIANTS:
+        cfg = pl.variant_config(name, n_nodes=50, n_edges=50)
+        assert pl.variant_name(cfg) == name
+    # synthesized canonical string for unregistered specs
+    assert pl.variant_name(pl.VariantSpec("sat", "lut", 3)) == "sat+lut+np3"
+
+
+def test_build_pipeline_describe_backends():
+    dims = dict(n_nodes=50, n_edges=50, f_mem=8, f_time=8, f_emb=8)
+    d = pl.build_pipeline("sat+lut+np4", use_kernels=True, **dims).describe()
+    assert d["memory_updater"] == "gru:lut-pallas"
+    assert "prune-then-fetch" in d["sampler"]
+    d = pl.build_pipeline("teacher", use_kernels=True, **dims).describe()
+    # no kernel backend for the teacher stages: reference fallback
+    assert d["memory_updater"] == "gru:cosine-ref"
+    assert d["aggregator"] == "attn:vanilla-ref"
+
+
+# ---------------------------------------------------------------------------
+# equivalence with the seed straight-line Algorithm 1
+# ---------------------------------------------------------------------------
+
+
+def _seed_process_batch(params, cfg, state, node_feats, edge_feats,
+                        src, dst, eid, ts, valid=None):
+    """Straight-line transcription of the pre-pipeline (seed)
+    ``tgn.process_batch`` — the oracle the stage composition must match."""
+    B = src.shape[0]
+    vids = jnp.concatenate([src, dst])
+    t_inst = jnp.concatenate([ts, ts])
+    vvalid = (jnp.concatenate([valid, valid]) if valid is not None
+              else jnp.ones((2 * B,), bool))
+
+    mail_valid = state.mail_valid[vids]
+    s_upd, lu_upd = memory.update_memory(
+        params["gru"], params["time"], cfg.gru,
+        state.mail[vids], state.mail_ts[vids], mail_valid,
+        state.memory[vids], state.last_update[vids], encoder=cfg.encoder)
+
+    chron = updater.interleave_order(B)
+    winners = updater.last_write_wins(vids, vvalid, chron)
+    mem_table = updater.commit(state.memory, vids, s_upd, winners)
+    lu_table = updater.commit_scalar(state.last_update, vids, lu_upd,
+                                     winners)
+    mv_table = updater.commit_scalar(
+        state.mail_valid, vids, jnp.zeros_like(mail_valid), winners)
+    state = state._replace(memory=mem_table, last_update=lu_table,
+                           mail_valid=mv_table)
+
+    nbr_ids, nbr_ts, nbr_eid, nvalid = mailbox.gather_neighbors(state, vids)
+    dt = jnp.maximum(t_inst[:, None] - nbr_ts, 0.0) * nvalid
+    s_self = state.memory[vids]
+    f_self = node_feats[vids] if node_feats is not None else None
+    s_nbr = state.memory[nbr_ids] * nvalid[..., None]
+    e_nbr = edge_feats[nbr_eid] * nvalid[..., None]
+    if cfg.attention == "vanilla":
+        h, logits = attn_mod.vanilla_attention(
+            params["attn"], cfg.attn, params["time"],
+            s_self, f_self, s_nbr, e_nbr, dt, nvalid)
+    else:
+        h, logits = attn_mod.sat_attention(
+            params["attn"], cfg.attn, params["time"],
+            s_self, f_self, s_nbr, e_nbr, dt, nvalid, encoder=cfg.encoder)
+
+    fe = edge_feats[eid]
+    mail_src = memory.build_mail_raw(mem_table[src], mem_table[dst], fe)
+    mail_dst = memory.build_mail_raw(mem_table[dst], mem_table[src], fe)
+    new_mail = jnp.concatenate([mail_src, mail_dst], axis=0)
+    mail_winners = updater.last_write_wins(vids, vvalid, chron)
+    state = state._replace(
+        mail=updater.commit(state.mail, vids, new_mail, mail_winners),
+        mail_ts=updater.commit_scalar(state.mail_ts, vids, t_inst,
+                                      mail_winners),
+        mail_valid=updater.commit_scalar(
+            state.mail_valid, vids, jnp.ones((2 * B,), bool),
+            mail_winners))
+    state = mailbox.insert_neighbors(state, src, dst, eid, ts, valid)
+    return tgn.BatchOut(state=state, emb_src=h[:B], emb_dst=h[B:],
+                        attn_logits=logits, nbr_valid=nvalid, nbr_dt=dt)
+
+
+@pytest.fixture(scope="module")
+def small_graph():
+    return tgd.wikipedia_like(n_edges=400)
+
+
+@pytest.mark.parametrize("variant", ["sat+lut+np4", "vanilla+cosine",
+                                     "sat+cosine", "sat+lut+np2"])
+def test_pipeline_matches_seed_reference_trajectory(small_graph, variant):
+    """build_pipeline(v, use_kernels=False) step == the seed straight-line
+    Algorithm 1, bitwise-close, over a multi-batch stream (state AND
+    embeddings AND distillation views)."""
+    g = small_graph
+    cfg = pl.variant_config(variant, n_nodes=g.cfg.n_nodes,
+                            n_edges=g.n_edges, f_edge=172, f_mem=16,
+                            f_time=16, f_emb=16, m_r=10)
+    pipe = pl.build_pipeline(cfg, use_kernels=False)
+    params = pipe.init_params(jax.random.key(0))
+    s_pipe, s_seed = pipe.init_state(), tgn.init_state(cfg)
+    ef = jnp.asarray(g.edge_feats)
+    for batch in stream_mod.fixed_count(g, 50, window=slice(0, 250)):
+        b = tuple(jnp.asarray(x) for x in
+                  (batch.src, batch.dst, batch.eid, batch.ts, batch.valid))
+        out_p = pipe.step_fn(params, s_pipe, b, ef)
+        out_s = _seed_process_batch(params, cfg, s_seed, None, ef, *b)
+        s_pipe, s_seed = out_p.state, out_s.state
+        np.testing.assert_allclose(np.asarray(out_p.emb_src),
+                                   np.asarray(out_s.emb_src), atol=1e-6)
+        np.testing.assert_allclose(np.asarray(out_p.attn_logits),
+                                   np.asarray(out_s.attn_logits), atol=1e-6)
+        np.testing.assert_array_equal(np.asarray(out_p.nbr_valid),
+                                      np.asarray(out_s.nbr_valid))
+        for field in ("memory", "last_update", "mail", "mail_ts",
+                      "mail_valid", "nbr_ids", "nbr_ts", "nbr_cursor"):
+            np.testing.assert_allclose(
+                np.asarray(getattr(s_pipe, field)),
+                np.asarray(getattr(s_seed, field)), atol=1e-6,
+                err_msg=f"{variant}:{field}")
+
+
+def test_process_batch_is_the_reference_composition(small_graph):
+    """tgn.process_batch and the pipeline step are the same composition."""
+    g = small_graph
+    cfg = pl.variant_config("sat+lut+np4", n_nodes=g.cfg.n_nodes,
+                            n_edges=g.n_edges, f_edge=172, f_mem=16,
+                            f_time=16, f_emb=16, m_r=10)
+    pipe = pl.build_pipeline(cfg)
+    params = pipe.init_params(jax.random.key(1))
+    state = pipe.init_state()
+    ef = jnp.asarray(g.edge_feats)
+    b = next(iter(stream_mod.fixed_count(g, 40)))
+    bt = tuple(jnp.asarray(x) for x in (b.src, b.dst, b.eid, b.ts, b.valid))
+    out_a = tgn.process_batch(params, cfg, state, None, ef, *bt)
+    out_b = pipe.step_fn(params, state, bt, ef)
+    np.testing.assert_array_equal(np.asarray(out_a.emb_src),
+                                  np.asarray(out_b.emb_src))
+    np.testing.assert_array_equal(np.asarray(out_a.state.memory),
+                                  np.asarray(out_b.state.memory))
+
+
+def test_engine_reference_backend_matches_process_batch(small_graph):
+    """The session with jnp reference backends reproduces the
+    process_batch trajectory exactly (fixed stream, sat+lut+np4)."""
+    g = small_graph
+    cfg = pl.variant_config("sat+lut+np4", n_nodes=g.cfg.n_nodes,
+                            n_edges=g.n_edges, f_edge=172, f_mem=16,
+                            f_time=16, f_emb=16, m_r=10)
+    params = tgn.init_params(jax.random.key(0), cfg)
+    ef = jnp.asarray(g.edge_feats)
+    eng = StreamingEngine(EngineConfig(model=cfg, use_kernels=False),
+                          params, ef)
+    state = tgn.init_state(cfg)
+    for batch in stream_mod.fixed_count(g, 50, window=slice(0, 250)):
+        hs, hd = eng.process(batch)
+        b = tuple(jnp.asarray(x) for x in
+                  (batch.src, batch.dst, batch.eid, batch.ts, batch.valid))
+        out = tgn.process_batch(params, cfg, state, None, ef, *b)
+        state = out.state
+        m = jnp.asarray(batch.valid)[:, None]
+        np.testing.assert_allclose(np.asarray((hs - out.emb_src) * m), 0.0,
+                                   atol=1e-5)
+        np.testing.assert_allclose(np.asarray((hd - out.emb_dst) * m), 0.0,
+                                   atol=1e-5)
+    np.testing.assert_allclose(np.asarray(eng.state.memory),
+                               np.asarray(state.memory), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# variant-agnostic engine
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("variant", pl.VARIANTS)
+def test_engine_serves_every_registry_variant(small_graph, variant):
+    """Smoke: the one engine session runs every Table-II variant —
+    the vanilla/cosine teacher included — with kernel backends where they
+    exist, recording latency AND device-transfer metrics."""
+    g = small_graph
+    dims = dict(n_nodes=g.cfg.n_nodes, n_edges=g.n_edges, f_edge=172,
+                f_mem=8, f_time=8, f_emb=8, m_r=10)
+    cfg = pl.variant_config(variant, **dims)
+    params = tgn.init_params(jax.random.key(0), cfg)
+    eng = StreamingEngine.from_variant(variant, params,
+                                       jnp.asarray(g.edge_feats), **dims)
+    n = 0
+    for batch, (hs, hd) in eng.run(
+            stream_mod.fixed_count(g, 64, window=slice(0, 192))):
+        assert bool(jnp.all(jnp.isfinite(hs))) and hs.shape == (64, 8)
+        n += 1
+    assert n == 3
+    assert len(eng.metrics) == 3
+    for m in eng.metrics:
+        assert m["h2d_s"] >= 0.0 and m["latency_s"] > 0.0
+    s = eng.summary()
+    assert s["batches"] == 2 and "mean_h2d_ms" in s
+
+
+def test_engine_kernel_and_reference_backends_agree(small_graph):
+    g = small_graph
+    dims = dict(n_nodes=g.cfg.n_nodes, n_edges=g.n_edges, f_edge=172,
+                f_mem=16, f_time=16, f_emb=16, m_r=10)
+    cfg = pl.variant_config("sat+lut+np4", **dims)
+    params = tgn.init_params(jax.random.key(3), cfg)
+    ef = jnp.asarray(g.edge_feats)
+    eng_k = StreamingEngine(EngineConfig(model=cfg, use_kernels=True),
+                            params, ef)
+    eng_r = StreamingEngine(EngineConfig(model=cfg, use_kernels=False),
+                            params, ef)
+    for batch in stream_mod.fixed_count(g, 50, window=slice(0, 150)):
+        hk, _ = eng_k.process(batch)
+        hr, _ = eng_r.process(batch)
+        m = jnp.asarray(batch.valid)[:, None]
+        np.testing.assert_allclose(np.asarray((hk - hr) * m), 0.0,
+                                   atol=2e-5)
+    np.testing.assert_allclose(np.asarray(eng_k.state.memory),
+                               np.asarray(eng_r.state.memory), atol=2e-5)
