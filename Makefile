@@ -2,14 +2,17 @@
 #
 #   make test         tier-1 suite (the ROADMAP verify command)
 #   make bench-smoke  one tiny fig5 sweep through the streaming engine
+#   make docs-check   intra-repo doc links resolve + every variant spec in
+#                     docs exists in the pipeline registry
 #   make lint         pyflakes over src/ tests/ benchmarks/ examples/
 #                     (falls back to a bytecode-compile check when
 #                      pyflakes is not installed; see requirements-dev.txt)
+#                     + docs-check
 
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test bench-smoke lint
+.PHONY: test bench-smoke lint docs-check
 
 test:
 	$(PY) -m pytest -x -q
@@ -19,7 +22,10 @@ bench-smoke:
 	          rows = sweep(batch_sizes=(25,), n_edges=600, f_mem=16); \
 	          [print(r) for r in rows]"
 
-lint:
+docs-check:
+	$(PY) tools/docs_check.py
+
+lint: docs-check
 	@if $(PY) -c "import pyflakes" 2>/dev/null; then \
 	    $(PY) -m pyflakes src benchmarks examples tests/*.py; \
 	else \

@@ -1,0 +1,119 @@
+"""Multi-tenant throughput scaling: one vmapped launch vs tenant count.
+
+The SessionManager advances every same-variant tenant stream in ONE device
+launch (stacked VertexState + ``jax.vmap``); the alternative is stepping N
+StreamingEngine sessions back-to-back (N launches). This sweep measures
+aggregate edges/s of both dispatch modes as the tenant fleet grows, plus a
+mixed-sampler fleet (one cohort per sampler backend).
+
+    PYTHONPATH=src python -m benchmarks.multitenant
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import save_json
+from repro.core import pipeline as pl, tgn
+from repro.data import stream as stream_mod
+from repro.data import temporal_graph as tgd
+from repro.serving.engine import StreamingEngine
+from repro.serving.session import SessionManager
+
+
+def _dims(g, f_mem):
+    return dict(n_nodes=g.cfg.n_nodes, n_edges=g.n_edges, f_edge=172,
+                f_mem=f_mem, f_time=f_mem, f_emb=f_mem, m_r=10)
+
+
+def _tenant_batches(g, i, batch, rounds):
+    lo = (37 * i) % max(1, g.n_edges - batch * rounds)
+    return list(stream_mod.fixed_count(
+        g, batch, window=slice(lo, lo + batch * rounds), seed=i))
+
+
+def _time_rounds(step_round, rounds, warmup=1):
+    for r in range(warmup):
+        step_round(r)
+    t0 = time.perf_counter()
+    for r in range(warmup, rounds):
+        step_round(r)
+    return time.perf_counter() - t0
+
+
+def sweep(tenant_counts=(1, 2, 4, 8), batch: int = 100, rounds: int = 6,
+          n_edges: int = 3000, f_mem: int = 32,
+          variant: str = "sat+lut+np4", use_kernels: bool = False):
+    """Batched (one launch) vs sequential (N launches) aggregate edges/s."""
+    g = tgd.wikipedia_like(n_edges=n_edges)
+    dims = _dims(g, f_mem)
+    cfg = pl.variant_config(variant, **dims)
+    params = tgn.init_params(jax.random.key(0), cfg)
+    ef = jnp.asarray(g.edge_feats)
+    rows = []
+    for T in tenant_counts:
+        feeds = [_tenant_batches(g, i, batch, rounds) for i in range(T)]
+
+        mgr = SessionManager(params, ef, model=cfg, use_kernels=use_kernels)
+        tids = [mgr.add_tenant() for _ in range(T)]
+        dt_b = _time_rounds(
+            lambda r: mgr.step({t: feeds[i][r]
+                                for i, t in enumerate(tids)}), rounds)
+
+        engines = [StreamingEngine.from_variant(variant, params, ef,
+                                                use_kernels=use_kernels,
+                                                **dims) for _ in range(T)]
+
+        def seq_round(r):
+            for i, eng in enumerate(engines):
+                eng.process(feeds[i][r])
+
+        dt_s = _time_rounds(seq_round, rounds)
+
+        timed = (rounds - 1) * batch * T
+        rows.append({
+            "tenants": T, "batch": batch, "variant": variant,
+            "batched_eps": round(timed / dt_b),
+            "sequential_eps": round(timed / dt_s),
+            "speedup": round(dt_s / dt_b, 2),
+        })
+    return rows
+
+
+def mixed_fleet(batch: int = 100, rounds: int = 6, n_edges: int = 3000,
+                f_mem: int = 32):
+    """A fleet mixing sampler policies: one launch per cohort per round."""
+    g = tgd.wikipedia_like(n_edges=n_edges)
+    dims = _dims(g, f_mem)
+    cfg = pl.variant_config("sat+lut+np4", **dims)
+    params = tgn.init_params(jax.random.key(0), cfg)
+    mgr = SessionManager(params, jnp.asarray(g.edge_feats), model=cfg)
+    variants = ("sat+lut+np4", "sat+lut+np4", "sat+lut+np4+uniform",
+                "sat+lut+np4+reservoir")
+    tids = [mgr.add_tenant(v) for v in variants]
+    feeds = [_tenant_batches(g, i, batch, rounds) for i in range(len(tids))]
+    for r in range(rounds):
+        mgr.step({t: feeds[i][r] for i, t in enumerate(tids)})
+    return {"cohorts": len(mgr.describe()),
+            "launches_per_round": mgr.metrics[-1]["launches"],
+            **mgr.summary()}
+
+
+def main(full: bool = False):
+    print("== multi-tenant throughput scaling (SessionManager vmap vs "
+          "sequential engines) ==")
+    counts = (1, 2, 4, 8) if not full else (1, 2, 4, 8, 16)
+    rows = sweep(tenant_counts=counts)
+    for r in rows:
+        print(f"  T={r['tenants']:3d} batched={r['batched_eps']:8d} E/s  "
+              f"sequential={r['sequential_eps']:8d} E/s  "
+              f"speedup={r['speedup']:.2f}x")
+    mixed = mixed_fleet()
+    print(f"-- mixed-sampler fleet (np4 x2 / uniform / reservoir): {mixed}")
+    save_json("multitenant.json", {"sweep": rows, "mixed": mixed})
+
+
+if __name__ == "__main__":
+    main()

@@ -14,7 +14,7 @@ import time
 def main() -> None:
     full = "--full" in sys.argv
     from benchmarks import (fig5_latency_throughput, fig6_perf_model,
-                            fig7_accuracy_latency, roofline,
+                            fig7_accuracy_latency, multitenant, roofline,
                             table1_case_study, table2_model_opts)
     benches = [
         ("table1_case_study", table1_case_study),
@@ -22,6 +22,7 @@ def main() -> None:
         ("fig5_latency_throughput", fig5_latency_throughput),
         ("fig6_perf_model", fig6_perf_model),
         ("fig7_accuracy_latency", fig7_accuracy_latency),
+        ("multitenant", multitenant),
         ("roofline", roofline),
     ]
     for name, mod in benches:

@@ -1,0 +1,57 @@
+"""Multi-tenant streaming serving: many edge streams, one parameter set.
+
+Four tenants — think per-region transaction feeds — share one SessionManager.
+Two run the paper's NP(M) student, one samples neighbors uniformly, one with
+a time-decayed reservoir (the sampler-backend axis of the variant registry).
+Same-variant tenants form a cohort advanced by ONE vmapped device launch per
+round; per-tenant trajectories are bitwise-identical to running each stream
+through its own StreamingEngine.
+
+    PYTHONPATH=src python examples/multi_tenant_serving.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import tgn
+from repro.core.pipeline import variant_config
+from repro.data import stream, temporal_graph as tgd
+from repro.serving.session import SessionManager
+
+g = tgd.reddit_like(n_edges=4000)
+dims = dict(n_nodes=g.cfg.n_nodes, n_edges=g.n_edges, f_edge=172,
+            f_mem=32, f_time=32, f_emb=32, m_r=10)
+cfg = variant_config("sat+lut+np4", **dims)
+params = tgn.init_params(jax.random.key(0), cfg)
+
+mgr = SessionManager(params, jnp.asarray(g.edge_feats), model=cfg)
+tenants = {
+    mgr.add_tenant(name="emea"): "sat+lut+np4",
+    mgr.add_tenant(name="amer"): "sat+lut+np4",
+    mgr.add_tenant("sat+lut+np4+uniform", name="apac"): "uniform sampler",
+    mgr.add_tenant("sat+lut+np4+reservoir", name="lab",
+                   reservoir_tau=3600.0): "reservoir sampler",
+}
+print("cohorts:")
+for variant, info in mgr.describe().items():
+    print(f"  {variant:24s} tenants={info['tenants']} "
+          f"sampler={info['sampler']}")
+
+# each tenant replays its own slice of the stream (independent feeds)
+streams = {tid: stream.fixed_count(g, 200, window=slice(800 * i, 800 * (i+1)))
+           for i, tid in enumerate(tenants)}
+edges = {tid: 0 for tid in tenants}
+for batches, outs in mgr.run(streams):
+    for tid, out in outs.items():
+        edges[tid] += int(batches[tid].valid.sum())
+
+s = mgr.summary()
+print(f"\nrounds            : {s['rounds']}")
+print(f"tenants / cohorts : {s['tenants']} / {s['cohorts']}")
+print(f"mean round        : {s['mean_round_ms']:.2f} ms "
+      f"({mgr.metrics[-1]['launches']} launches/round)")
+print(f"aggregate thpt    : {s['throughput_eps']:.0f} edges/s")
+print("\nper-tenant:")
+for tid in tenants:
+    mem = mgr.state_of(tid).memory
+    print(f"  {tid:5s} edges={edges[tid]:5d} "
+          f"touched-vertices={int((jnp.abs(mem).sum(axis=1) > 0).sum()):6d}")

@@ -17,10 +17,13 @@ of the stage interfaces in ``core/stages.py``:
 ``serving.StreamingEngine`` is a thin stateful session over any built
 pipeline (kernel or reference backend, any variant, teacher included).
 
-Variant registry: canonical specs are ``"<attention>+<encoder>[+np<k>]"``;
-Table-II row names and a few shorthands are registered as aliases. New
-variants (samplers, aggregators, encoders) plug in via
-``register_variant`` without forking the step function.
+Variant registry: canonical specs are
+``"<attention>+<encoder>[+np<k>][+<sampler>]"`` (sampler backends:
+``stages.SAMPLERS`` — e.g. ``"sat+lut+np4+reservoir"``); Table-II row names
+and a few shorthands are registered as aliases. New variants (samplers,
+aggregators, encoders) plug in via ``register_variant`` without forking the
+step function. Invalid specs raise with the full token menu
+(``spec_menu()``).
 """
 from __future__ import annotations
 
@@ -34,14 +37,29 @@ from repro.core import mailbox, memory, stages, tgn
 
 
 class VariantSpec(NamedTuple):
-    """The three model axes of the paper's ablation ladder."""
+    """The three model axes of the paper's ablation ladder, plus the
+    serving-layer sampler-backend axis (selection policy of
+    prune-then-fetch; see ``stages.SAMPLERS``)."""
     attention: str          # "vanilla" | "sat"
     encoder: str            # "cosine" | "lut"
     prune_k: int | None     # None | 6 | 4 | 2
+    sampler: str = "recent"  # "recent" | "uniform" | "reservoir"
 
 
 _REGISTRY: dict[str, VariantSpec] = {}
 _ALIASES: dict[str, str] = {}
+
+
+def spec_menu() -> str:
+    """The full menu of valid variant-spec tokens — every spec-parsing
+    error embeds this so an invalid string prints everything legal."""
+    return (
+        "valid spec grammar: '<attention>+<encoder>[+np<k>][+<sampler>]' "
+        "with attention in ('vanilla', 'sat'), encoder in ('cosine', 'lut'), "
+        "np<k> an integer pruning budget (SAT only, e.g. np4), and sampler "
+        f"in {stages.SAMPLERS} (SAT only; default 'recent'); "
+        f"registered variants: {sorted(_REGISTRY)}; "
+        f"aliases: {sorted(_ALIASES)}")
 
 
 def register_variant(name: str, spec: VariantSpec,
@@ -64,10 +82,22 @@ register_variant("sat+lut+np4", VariantSpec("sat", "lut", 4),
                  aliases=("+NP(M)", "np4", "student"))
 register_variant("sat+lut+np2", VariantSpec("sat", "lut", 2),
                  aliases=("+NP(S)", "np2"))
+# sampler-backend variants: the student ladder with the prune-then-fetch
+# selection policy swapped (multi-tenant serving mixes these per tenant)
+register_variant("sat+lut+np4+uniform", VariantSpec("sat", "lut", 4,
+                                                    "uniform"),
+                 aliases=("uniform",))
+register_variant("sat+lut+np4+reservoir", VariantSpec("sat", "lut", 4,
+                                                      "reservoir"),
+                 aliases=("reservoir",))
 
 #: Canonical registry names in ladder order (Table II rows).
 VARIANTS = ("vanilla+cosine", "sat+cosine", "sat+lut",
             "sat+lut+np6", "sat+lut+np4", "sat+lut+np2")
+
+#: Sampler-backend specs of the np4 student (registry names).
+SAMPLER_VARIANTS = ("sat+lut+np4", "sat+lut+np4+uniform",
+                    "sat+lut+np4+reservoir")
 
 
 def resolve_variant(spec) -> VariantSpec:
@@ -76,7 +106,8 @@ def resolve_variant(spec) -> VariantSpec:
     if isinstance(spec, VariantSpec):
         return spec
     if isinstance(spec, tgn.TGNConfig):
-        return VariantSpec(spec.attention, spec.encoder, spec.prune_k)
+        return VariantSpec(spec.attention, spec.encoder, spec.prune_k,
+                           spec.sampler)
     if not isinstance(spec, str):
         raise TypeError(f"cannot resolve variant from {type(spec)!r}")
     name = _ALIASES.get(spec, spec)
@@ -86,31 +117,48 @@ def resolve_variant(spec) -> VariantSpec:
 
 
 def _parse_spec(spec: str) -> VariantSpec:
-    """Grammar fallback: ``<attention>+<encoder>[+np<k>]``."""
+    """Grammar fallback: ``<attention>+<encoder>[+np<k>][+<sampler>]``."""
     parts = spec.split("+")
-    if len(parts) not in (2, 3):
-        raise ValueError(
-            f"unknown variant {spec!r}; registered: {sorted(_REGISTRY)} "
-            f"(aliases: {sorted(_ALIASES)})")
+    if len(parts) not in (2, 3, 4):
+        raise ValueError(f"unknown variant {spec!r}; {spec_menu()}")
     attention, encoder = parts[0], parts[1]
     if attention not in ("vanilla", "sat"):
-        raise ValueError(f"unknown attention {attention!r} in {spec!r}")
+        raise ValueError(f"unknown attention {attention!r} in {spec!r}; "
+                         f"{spec_menu()}")
     if encoder not in ("cosine", "lut"):
-        raise ValueError(f"unknown encoder {encoder!r} in {spec!r}")
+        raise ValueError(f"unknown encoder {encoder!r} in {spec!r}; "
+                         f"{spec_menu()}")
     if attention == "vanilla" and encoder != "cosine":
         raise ValueError("vanilla attention requires the cosine encoder "
                          f"(its K/Q/V inputs consume the cosine encoding "
                          f"directly; LUT is a SAT-path optimization) — "
-                         f"got {spec!r}")
+                         f"got {spec!r}; {spec_menu()}")
     prune_k = None
-    if len(parts) == 3:
-        if not parts[2].startswith("np"):
-            raise ValueError(f"bad prune clause {parts[2]!r} in {spec!r}")
-        prune_k = int(parts[2][2:])
-        if attention != "sat":
-            raise ValueError("neighbor pruning requires SAT "
-                             f"(prune-then-fetch) — got {spec!r}")
-    return VariantSpec(attention, encoder, prune_k)
+    sampler = None
+    for clause in parts[2:]:
+        if clause.startswith("np") and clause[2:].isdigit():
+            if prune_k is not None:
+                raise ValueError(f"duplicate prune clause {clause!r} in "
+                                 f"{spec!r}; {spec_menu()}")
+            prune_k = int(clause[2:])
+            if attention != "sat":
+                raise ValueError("neighbor pruning requires SAT "
+                                 f"(prune-then-fetch) — got {spec!r}; "
+                                 f"{spec_menu()}")
+        elif clause in stages.SAMPLERS:
+            if sampler is not None:
+                raise ValueError(f"duplicate sampler clause {clause!r} in "
+                                 f"{spec!r}; {spec_menu()}")
+            sampler = clause
+            if attention != "sat" and clause != "recent":
+                raise ValueError(
+                    "alternative sampler backends require SAT "
+                    f"(prune-then-fetch) — got {spec!r}; {spec_menu()}")
+        else:
+            raise ValueError(f"bad clause {clause!r} in {spec!r}; "
+                             f"{spec_menu()}")
+    return VariantSpec(attention, encoder, prune_k,
+                       sampler if sampler is not None else "recent")
 
 
 def variant_name(spec) -> str:
@@ -121,7 +169,11 @@ def variant_name(spec) -> str:
         if s == v:
             return name
     base = f"{v.attention}+{v.encoder}"
-    return base if v.prune_k is None else f"{base}+np{v.prune_k}"
+    if v.prune_k is not None:
+        base += f"+np{v.prune_k}"
+    if v.sampler != "recent":
+        base += f"+{v.sampler}"
+    return base
 
 
 def variant_config(spec, **dims) -> tgn.TGNConfig:
@@ -132,7 +184,7 @@ def variant_config(spec, **dims) -> tgn.TGNConfig:
     """
     v = resolve_variant(spec)
     return tgn.TGNConfig(**dims, attention=v.attention, encoder=v.encoder,
-                         prune_k=v.prune_k)
+                         prune_k=v.prune_k, sampler=v.sampler)
 
 
 # ---------------------------------------------------------------------------

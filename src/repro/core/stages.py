@@ -9,9 +9,14 @@ Every Table-II variant (teacher included) is one composition of five stages;
                           the aggregator consumes. Two dataflows:
                             * fetch-all        (vanilla attention needs the
                               full m_r rows of memory/edge features)
-                            * prune-then-fetch (SAT logits from timestamps
+                            * prune-then-fetch (selection from timestamps/ids
                               ONLY -> top-k -> gather just k rows; the HBM
                               saving the paper measures, §III-B)
+                          Prune-then-fetch selection is a pluggable policy
+                          (``SAMPLERS``): "recent" (SAT top-k, the paper),
+                          "uniform", or time-decayed "reservoir" — both
+                          randomized policies use a stateless hash so
+                          serving stays deterministic and vmap-batchable.
   Aggregator     (EU)     vanilla attention | SAT reference | SAT-Pallas.
   Committer               chronological last-write-wins commit of memory and
                           cached mail (§IV-B). Winners are computed ONCE per
@@ -170,14 +175,60 @@ def make_memory_updater(cfg, use_kernels: bool):
 # NeighborSampler / Pruner
 # ---------------------------------------------------------------------------
 
+#: Registered sampler backends (the selection policy of prune-then-fetch).
+#:   recent     paper behavior — SAT top-k over the FIFO ring buffer
+#:   uniform    k valid slots uniformly at random (stateless hash RNG)
+#:   reservoir  time-decayed weighted reservoir (Efraimidis–Spirakis keys
+#:              with weight exp(-dt/tau)) — recency-biased but randomized
+SAMPLERS = ("recent", "uniform", "reservoir")
+
+
+def _stateless_uniform(eid: jax.Array, vids: jax.Array,
+                       t_query: jax.Array) -> jax.Array:
+    """Deterministic pseudo-uniform draws in (0, 1) per (vertex, slot).
+
+    A jit/vmap-safe integer hash of (edge id, queried vertex, query-time
+    bits) — no PRNG key threading, so multi-tenant vmapped serving and a
+    lone engine sample IDENTICAL neighborhoods for identical inputs (the
+    bitwise-equivalence guarantee tests/test_session.py checks).
+
+    eid: (B, m_r) int32; vids: (B,) int; t_query: (B,) float32.
+    """
+    h = eid.astype(jnp.uint32) * jnp.uint32(0x9E3779B1)
+    h = h ^ (vids.astype(jnp.uint32)[:, None] * jnp.uint32(0x85EBCA77))
+    tb = jax.lax.bitcast_convert_type(t_query.astype(jnp.float32),
+                                      jnp.uint32)
+    h = h ^ (tb[:, None] * jnp.uint32(0xC2B2AE3D))
+    h = h ^ (h >> 15)
+    h = h * jnp.uint32(0x2C1B3C6D)
+    h = h ^ (h >> 12)
+    h = h * jnp.uint32(0x297A2D39)
+    h = h ^ (h >> 15)
+    # 24 mantissa-safe bits -> (0, 1); +2^-25 keeps log(u) finite
+    return ((h >> 8).astype(jnp.float32) * (1.0 / (1 << 24))
+            + jnp.float32(2.0 ** -25))
+
 
 def make_sampler(cfg):
     """Returns ``(sampler, backend_name)``.
 
     ``sampler(params, aux, state, edge_feats, vids, t_query) -> Neighborhood``
-    reads the ring buffer for ``vids`` at query times ``t_query``.
+    reads the ring buffer for ``vids`` at query times ``t_query``. The
+    ``cfg.sampler`` backend picks WHICH k slots are fetched (``SAMPLERS``);
+    aggregation weights always come from the SAT logits of the fetched
+    slots, so the prune-then-fetch HBM saving is preserved: every policy
+    decides from timestamps/ids ONLY, before any memory/feature gather.
     """
+    if cfg.sampler not in SAMPLERS:
+        raise ValueError(f"unknown sampler backend {cfg.sampler!r}; "
+                         f"registered backends: {SAMPLERS}")
     if cfg.attention == "vanilla":
+        if cfg.sampler != "recent":
+            raise ValueError(
+                "alternative sampler backends (uniform/reservoir) require "
+                "SAT attention: vanilla fetch-all consumes every ring-buffer "
+                f"slot, so there is no selection to randomize — got "
+                f"sampler={cfg.sampler!r}")
         # fetch-all: vanilla attention scores depend on neighbor memory, so
         # every m_r row must be gathered before scoring.
         def sampler(params, aux, state, edge_feats, vids, t_query):
@@ -194,16 +245,35 @@ def make_sampler(cfg):
 
     k = cfg.prune_k if cfg.prune_k is not None else cfg.m_r
     k = min(k, cfg.m_r)
+    policy = cfg.sampler
+    tau = float(cfg.reservoir_tau)
 
-    # prune-then-fetch: SAT logits come from the ring buffer's timestamps
-    # ONLY, so top-k selection runs BEFORE any memory/edge-feature gather and
-    # HBM traffic scales with k, not m_r (the paper's 67% MEM saving).
+    # prune-then-fetch: the selection priority comes from the ring buffer's
+    # timestamps/ids ONLY, so top-k selection runs BEFORE any memory/edge-
+    # feature gather and HBM traffic scales with k, not m_r (the paper's
+    # 67% MEM saving). "recent" ranks by SAT logit (the paper's pruner);
+    # "uniform"/"reservoir" rank by a stateless-hash priority instead.
     def sampler(params, aux, state, edge_feats, vids, t_query):
         nbr_ids, nbr_ts, nbr_eid, valid = mailbox.gather_neighbors(
             state, vids)
         dt = jnp.maximum(t_query[:, None] - nbr_ts, 0.0) * valid
         logits = attn_mod.sat_logits(params["attn"], dt)      # ts ONLY
-        if k < cfg.m_r:
+        if policy != "recent":
+            u = _stateless_uniform(nbr_eid, vids, t_query)
+            if policy == "uniform":
+                prio = u
+            else:
+                # Efraimidis–Spirakis weighted reservoir: key = u^(1/w) with
+                # w = exp(-dt/tau); rank by log key = log(u) * exp(dt/tau).
+                prio = jnp.log(u) * jnp.exp(jnp.minimum(dt / tau, 50.0))
+            idx, _, sel_valid = pruning.topk_select(prio, valid, k)
+            sel_ids = jnp.take_along_axis(nbr_ids, idx, axis=1)
+            sel_eid = jnp.take_along_axis(nbr_eid, idx, axis=1)
+            sel_dt = jnp.take_along_axis(dt, idx, axis=1)
+            sel_logits = jnp.where(sel_valid,
+                                   jnp.take_along_axis(logits, idx, axis=1),
+                                   pruning.NEG_INF)
+        elif k < cfg.m_r:
             idx, sel_logits, sel_valid = pruning.topk_select(logits, valid, k)
             sel_ids = jnp.take_along_axis(nbr_ids, idx, axis=1)
             sel_eid = jnp.take_along_axis(nbr_eid, idx, axis=1)
@@ -219,8 +289,13 @@ def make_sampler(cfg):
                             full_logits=logits, full_valid=valid,
                             full_dt=dt)
 
-    name = (f"sampler:prune-then-fetch(k={k})" if k < cfg.m_r
-            else "sampler:score-all")
+    if policy == "uniform":
+        name = f"sampler:uniform(k={k})"
+    elif policy == "reservoir":
+        name = f"sampler:reservoir(k={k},tau={tau:g})"
+    else:
+        name = (f"sampler:prune-then-fetch(k={k})" if k < cfg.m_r
+                else "sampler:score-all")
     return sampler, name
 
 

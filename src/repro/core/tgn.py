@@ -9,10 +9,12 @@
   4. cache new messages (Most-Recent aggregator == last-write-wins commit)
   5. insert edges into the neighbor ring buffers
 
-Variant axes (the paper's ablation rows in Table II):
+Variant axes (the paper's ablation rows in Table II, plus the sampler
+backend axis the serving layer exposes):
   attention: "vanilla" (teacher/baseline) | "sat" (+SAT)
   encoder:   "cosine" | "lut"             (+LUT)
   prune_k:   None | 6 | 4 | 2             (+NP(L/M/S))
+  sampler:   "recent" (paper FIFO/SAT top-k) | "uniform" | "reservoir"
 
 Since the TGNPipeline redesign the Algorithm-1 body lives in
 ``core/pipeline.py`` as a composition of the stage interfaces in
@@ -50,6 +52,8 @@ class TGNConfig(FrozenConfig):
     encoder: str = "cosine"      # "cosine" | "lut"
     lut_entries: int = 128
     prune_k: int | None = None
+    sampler: str = "recent"      # "recent" | "uniform" | "reservoir"
+    reservoir_tau: float = 86_400.0  # time-decay scale (s) of the reservoir
 
     @property
     def gru(self) -> memory.GRUConfig:

@@ -3,11 +3,17 @@
 ``--mode tgn``: stream a synthetic temporal graph through the optimized
 StreamingEngine (Pallas kernels, prune-then-fetch, LUT, chronological
 commit) and report latency/throughput — the deployment the paper targets.
+With ``--tenants N`` (or ``--tenant-variants``) the stream is split across
+N concurrent tenants served by the multi-tenant SessionManager: one
+vmapped launch per cohort per round, per-tenant states isolated.
 
 ``--mode lm``: batched prefill+decode generation with a reduced-config LM.
 
 Examples:
     PYTHONPATH=src python -m repro.launch.serve --mode tgn --edges 4000
+    PYTHONPATH=src python -m repro.launch.serve --mode tgn --tenants 4
+    PYTHONPATH=src python -m repro.launch.serve --mode tgn \\
+        --tenant-variants sat+lut+np4,sat+lut+np4+reservoir
     PYTHONPATH=src python -m repro.launch.serve --mode lm --arch qwen3_8b
 """
 from __future__ import annotations
@@ -24,6 +30,7 @@ def run_tgn(args):
     from repro.core.pipeline import variant_config
     from repro.data import temporal_graph as tgd, stream
     from repro.serving.engine import EngineConfig, StreamingEngine
+    from repro.serving.session import SessionManager
 
     g = tgd.DATASETS[args.dataset](n_edges=args.edges)
     cfg = variant_config(
@@ -33,10 +40,30 @@ def run_tgn(args):
         f_emb=args.f_mem, m_r=10)
     params = tgn.init_params(jax.random.key(0), cfg)
     node_feats = g.node_feats
-    engine = StreamingEngine(EngineConfig(model=cfg), params,
-                             jnp.asarray(g.edge_feats)
-                             if g.edge_feats.shape[1] else
-                             jnp.zeros((g.n_edges, cfg.f_edge), jnp.float32),
+    edge_feats = (jnp.asarray(g.edge_feats) if g.edge_feats.shape[1] else
+                  jnp.zeros((g.n_edges, cfg.f_edge), jnp.float32))
+
+    tenant_variants = ([v for v in args.tenant_variants.split(",") if v]
+                       if args.tenant_variants else
+                       [args.variant] * args.tenants)
+    if args.tenant_variants or args.tenants > 1:
+        # multi-tenant: split the stream into one contiguous feed per
+        # tenant; same-variant tenants share one vmapped launch per round.
+        mgr = SessionManager(params, edge_feats, node_feats, model=cfg,
+                             use_kernels=True)
+        tids = [mgr.add_tenant(v) for v in tenant_variants]
+        print("session cohorts:", {v: i["tenants"]
+                                   for v, i in mgr.describe().items()})
+        span = g.n_edges // len(tids)
+        streams = {tid: stream.fixed_count(
+            g, args.batch, window=slice(i * span, (i + 1) * span))
+            for i, tid in enumerate(tids)}
+        for _batches, _outs in mgr.run(streams):
+            pass
+        print("session summary:", mgr.summary())
+        return
+
+    engine = StreamingEngine(EngineConfig(model=cfg), params, edge_feats,
                              node_feats)
     print("engine stages:", engine.describe())
     if args.window_s:
@@ -76,7 +103,15 @@ def main():
     ap.add_argument("--f-mem", type=int, default=32)
     ap.add_argument("--variant", default="sat+lut+np4",
                     help="pipeline-registry variant spec (e.g. teacher, "
-                         "+NP(M), sat+lut+np2)")
+                         "+NP(M), sat+lut+np2, sat+lut+np4+reservoir)")
+    ap.add_argument("--tenants", type=int, default=1,
+                    help="serve N concurrent tenant streams through the "
+                         "multi-tenant SessionManager (each gets 1/N of "
+                         "the edge stream)")
+    ap.add_argument("--tenant-variants", default="",
+                    help="comma-separated per-tenant variant specs "
+                         "(overrides --tenants; attention+encoder must "
+                         "match --variant, sampler/pruning may differ)")
     ap.add_argument("--batch", type=int, default=200)
     ap.add_argument("--window-s", type=float, default=0.0)
     ap.add_argument("--arch", default="qwen3_8b")

@@ -23,6 +23,14 @@ the same session; ``use_kernels`` selects the Pallas stage backends where
 they exist (SAT+LUT paths) and the identical-semantics jnp references
 elsewhere. Folded/packed kernel parameters are prepared by the pipeline's
 ``prepare`` at session construction, not per step.
+
+Since the multi-tenant SessionManager (serving/session.py) the engine is a
+SINGLE-TENANT VIEW of a session: one tenant in a one-member cohort, stepped
+through the same ``jax.jit(jax.vmap(step))`` launch as a full fleet. That
+keeps single-stream and multi-tenant serving bitwise-identical per tenant
+(vmapped numerics are invariant to the mapped batch size), so an engine can
+be consolidated into a shared session — or a tenant split out into its own
+engine — without a replay divergence.
 """
 from __future__ import annotations
 
@@ -39,6 +47,7 @@ from repro.core import pipeline as pl
 from repro.core import tgn
 from repro.data.stream import EdgeBatch
 from repro.distributed import overlap
+from repro.serving.session import SessionManager
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,22 +76,30 @@ class StreamingEngine:
     def __init__(self, cfg: EngineConfig, params: dict,
                  edge_feats: jax.Array, node_feats: jax.Array | None = None):
         self.cfg = cfg
-        self.pipeline = pl.build_pipeline(cfg.model,
-                                          use_kernels=cfg.use_kernels)
+        # A one-tenant session: the same vmapped launch as multi-tenant
+        # serving, so trajectories are bitwise-portable between the two.
+        self.session = SessionManager(params, edge_feats, node_feats,
+                                      model=cfg.model,
+                                      use_kernels=cfg.use_kernels)
+        self.tid = self.session.add_tenant()
+        cohort = self.session.cohort_of(self.tid)
+        self.pipeline = cohort.pipeline
         self.params = params
-        self.edge_feats = jnp.asarray(edge_feats)
-        self.node_feats = (jnp.asarray(node_feats)
-                           if node_feats is not None else None)
-        self.state = self.pipeline.init_state()
+        self.edge_feats = self.session.edge_feats
+        self.node_feats = self.session.node_feats
         # folded LUT tables / lane-packed kernel params, prepared once per
         # session (§III-C); training paths re-derive them in-trace instead.
-        # aux is closed over (not a jit argument): its packed layouts carry
-        # static int metadata that must not be traced.
-        self.aux = self.pipeline.prepare(params)
-        step, aux = self.pipeline.step, self.aux
-        self._step = jax.jit(lambda params, state, batch, ef, nf:
-                             step(params, aux, state, batch, ef, nf))
+        self.aux = cohort.aux
         self.metrics: list[dict] = []
+
+    @property
+    def state(self):
+        """The tenant's VertexState (committed by ``process``)."""
+        return self.session.state_of(self.tid)
+
+    @state.setter
+    def state(self, st):
+        self.session.set_state(self.tid, st)
 
     @classmethod
     def from_variant(cls, variant: str, params: dict, edge_feats: jax.Array,
@@ -104,9 +121,8 @@ class StreamingEngine:
 
     def step_on_device(self, dev: tuple) -> tgn.BatchOut:
         """One jitted pipeline step over already-on-device batch arrays
-        (no metrics; benchmarking hook)."""
-        return self._step(self.params, self.state, dev,
-                          self.edge_feats, self.node_feats)
+        WITHOUT committing state (no metrics; benchmarking hook)."""
+        return self.session.peek(self.tid, dev)
 
     # ------------------------------------------------------------------
     def _to_device(self, batch: EdgeBatch) -> _DeviceBatch:
@@ -130,10 +146,9 @@ class StreamingEngine:
         jax.block_until_ready(batch.dev)
         h2d = batch.enq_s + (time.perf_counter() - t0)
         t1 = time.perf_counter()
-        out = self.step_on_device(batch.dev)
+        out = self.session.step({self.tid: batch.dev})[self.tid]
         out.emb_src.block_until_ready()
         dt = time.perf_counter() - t1
-        self.state = out.state
         n = int(batch.host.valid.sum())
         self.metrics.append({"latency_s": dt, "edges": n,
                              "h2d_s": h2d,

@@ -1,0 +1,368 @@
+"""Multi-tenant streaming sessions: many edge streams, one device launch.
+
+The paper's accelerator serves ONE chronological edge stream. A production
+deployment (ROADMAP north star; StreamTGN's framing in PAPERS.md) serves
+many concurrent, independent streams — per-customer transaction feeds,
+per-region event streams — over one shared parameter set. ``SessionManager``
+hosts those streams as *tenants*:
+
+  * every tenant owns an independent ``VertexState`` pytree (its own memory
+    table, mailbox, and neighbor ring buffer) and picks its own pipeline
+    variant — sampler backends included, e.g. one tenant on
+    ``sat+lut+np4`` and another on ``sat+lut+np4+reservoir``;
+  * tenants with the SAME variant form a *cohort*: their states are stacked
+    along a leading tenant axis and one ``jax.jit(jax.vmap(step))`` launch
+    advances the whole cohort — batched gathers/scatters over the stacked
+    tables, per-tenant chronological last-write-wins commits preserved;
+  * tenants that submit no batch in a round are masked (an all-``valid=False``
+    batch): the launch still has a fixed shape, and the LWW committer plus
+    the OOB-redirected ring-buffer insert make a fully-masked step a bitwise
+    no-op on that tenant's state.
+
+Numerics contract (tests/test_session.py): a cohort of N tenants produces
+BITWISE-identical per-tenant trajectories to N separate single-tenant
+sessions, because every path — ``StreamingEngine`` included, which is now a
+single-tenant view of this class — runs through the same vmapped step and
+vmapped XLA numerics are invariant to the batch size along the mapped axis.
+(The randomized sampler backends keep that guarantee by deriving their draws
+from a stateless hash of the batch contents, not from threaded PRNG keys.)
+
+Cohorts recompile when their tenant count or padded batch size changes;
+steady-state serving (fixed fleet, fixed batch cap) reuses one executable
+per cohort.
+"""
+from __future__ import annotations
+
+import time
+from typing import Iterable, Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mailbox, pipeline as pl, tgn
+from repro.data.stream import EdgeBatch
+
+
+def _as_device_tuple(batch) -> tuple:
+    """Normalize an EdgeBatch / 5-tuple to on-device (src,dst,eid,ts,valid)."""
+    if isinstance(batch, EdgeBatch):
+        batch = (batch.src, batch.dst, batch.eid, batch.ts, batch.valid)
+    src, dst, eid, ts, valid = batch
+    if valid is None:
+        valid = jnp.ones(jnp.asarray(src).shape, bool)
+    return (jnp.asarray(src), jnp.asarray(dst), jnp.asarray(eid),
+            jnp.asarray(ts), jnp.asarray(valid))
+
+
+def _pad_dev(dev: tuple, B: int) -> tuple:
+    """Pad a device tuple to B rows; padding rows are ``valid=False`` (their
+    state writes are dropped, so results on real rows are unchanged)."""
+    b = dev[0].shape[0]
+    if b == B:
+        return dev
+    pad = B - b
+    return (jnp.pad(dev[0], (0, pad)), jnp.pad(dev[1], (0, pad)),
+            jnp.pad(dev[2], (0, pad)), jnp.pad(dev[3], (0, pad)),
+            jnp.pad(dev[4], (0, pad)))  # bool pads with False
+
+
+def _idle_dev(B: int) -> tuple:
+    """An all-masked batch: advances a tenant's slot without changing it."""
+    zi = jnp.zeros((B,), jnp.int32)
+    return (zi, zi, zi, jnp.zeros((B,), jnp.float32), jnp.zeros((B,), bool))
+
+
+class _Cohort:
+    """Tenants sharing one variant: stacked states + one vmapped step."""
+
+    def __init__(self, cfg: tgn.TGNConfig, use_kernels: bool, params: dict):
+        self.cfg = cfg
+        self.pipeline = pl.build_pipeline(cfg, use_kernels=use_kernels)
+        # folded/packed tables prepared once per cohort; closed over (not a
+        # jit argument) because the packed layouts carry static metadata.
+        self.aux = self.pipeline.prepare(params)
+        self.tids: list[str] = []
+        self.state = None           # stacked VertexState, leaves (T, ...)
+        step, aux = self.pipeline.step, self.aux
+
+        def one(params, state, batch, ef, nf):
+            return step(params, aux, state, batch, ef, nf)
+
+        self._vstep = jax.jit(jax.vmap(one,
+                                       in_axes=(None, 0, 0, None, None)))
+
+        # single-tenant peek fast path: the same vmapped computation with
+        # the expand/slice fused into ONE jit, so the hot timing hook
+        # (StreamingEngine.step_on_device -> fig5/6/7 sweeps) pays no
+        # eager re-stacking or out-of-jit vertex-table slicing.
+        def one_t(params, state, batch, ef, nf):
+            out = jax.vmap(one, in_axes=(None, 0, 0, None, None))(
+                params, state, jax.tree.map(lambda x: x[None], batch),
+                ef, nf)
+            return jax.tree.map(lambda x: x[0], out)
+
+        self._vstep1 = jax.jit(one_t)
+
+    @property
+    def size(self) -> int:
+        return len(self.tids)
+
+    def add(self, tid: str) -> None:
+        row = jax.tree.map(lambda x: x[None], self.pipeline.init_state())
+        if self.state is None:
+            self.state = row
+        else:
+            self.state = jax.tree.map(
+                lambda t, r: jnp.concatenate([t, r], axis=0), self.state, row)
+        self.tids.append(tid)
+
+    def remove(self, tid: str) -> None:
+        i = self.tids.index(tid)
+        self.tids.pop(i)
+        if not self.tids:
+            self.state = None
+            return
+        keep = np.array([j for j in range(self.state.memory.shape[0])
+                         if j != i])
+        self.state = jax.tree.map(lambda x: x[keep], self.state)
+
+    def launch(self, params: dict, stacked_batch: tuple, edge_feats,
+               node_feats) -> tgn.BatchOut:
+        """One device launch advancing every tenant slot of this cohort."""
+        return self._vstep(params, self.state, stacked_batch, edge_feats,
+                           node_feats)
+
+
+class SessionManager:
+    """Batched multi-tenant serving over the TGNPipeline registry.
+
+    One parameter set, many independent tenant streams. Tenants are grouped
+    into cohorts by variant; each round, one vmapped launch per cohort
+    advances every tenant (idle tenants masked). See the module docstring
+    for the numerics contract.
+
+    ::
+
+        mgr = SessionManager(params, edge_feats, model=cfg)
+        a = mgr.add_tenant()                        # base variant
+        b = mgr.add_tenant("sat+lut+np4+reservoir")  # same params, new policy
+        outs = mgr.step({a: batch_a, b: batch_b})    # {tid: BatchOut}
+        mgr.state_of(a)                              # tenant's VertexState
+    """
+
+    def __init__(self, params: dict, edge_feats, node_feats=None, *,
+                 model: tgn.TGNConfig | None = None, variant=None,
+                 use_kernels: bool = False, **dims):
+        if model is None:
+            if variant is None:
+                raise TypeError("pass model=TGNConfig or variant= + dims")
+            model = pl.variant_config(variant, **dims)
+        elif variant is not None or dims:
+            raise TypeError("model= is exclusive with variant=/dims")
+        self.base_cfg = model
+        self.use_kernels = use_kernels
+        self.params = params
+        self.edge_feats = jnp.asarray(edge_feats)
+        self.node_feats = (jnp.asarray(node_feats)
+                           if node_feats is not None else None)
+        self._cohorts: dict[tgn.TGNConfig, _Cohort] = {}
+        self._tenant_cohort: dict[str, _Cohort] = {}
+        self._next_id = 0
+        self.metrics: list[dict] = []
+
+    # -- tenant lifecycle ----------------------------------------------
+    def _tenant_cfg(self, variant, reservoir_tau) -> tgn.TGNConfig:
+        base = self.base_cfg
+        if variant is None:
+            cfg = base
+        else:
+            v = pl.resolve_variant(variant)
+            if (v.attention, v.encoder) != (base.attention, base.encoder):
+                raise ValueError(
+                    f"tenant variant {pl.variant_name(v)!r} needs "
+                    f"{v.attention}+{v.encoder} parameters but this session "
+                    f"shares {base.attention}+{base.encoder} parameters; "
+                    "prune_k and sampler may vary per tenant, the "
+                    "parameterized axes may not")
+            cfg = base.replace(prune_k=v.prune_k, sampler=v.sampler)
+        if reservoir_tau is not None:
+            cfg = cfg.replace(reservoir_tau=reservoir_tau)
+        return cfg
+
+    def add_tenant(self, variant=None, *, name: str | None = None,
+                   reservoir_tau: float | None = None) -> str:
+        """Register a tenant stream; returns its id.
+
+        ``variant`` is any registry spec sharing the session's parameterized
+        axes (attention+encoder); ``prune_k`` and the sampler backend may
+        differ per tenant. Adding a tenant grows its cohort's stacked state
+        (next launch recompiles for the new tenant count).
+        """
+        cfg = self._tenant_cfg(variant, reservoir_tau)
+        tid = name if name is not None else f"t{self._next_id}"
+        self._next_id += 1
+        if tid in self._tenant_cohort:
+            raise ValueError(f"tenant {tid!r} already exists")
+        cohort = self._cohorts.get(cfg)
+        if cohort is None:
+            cohort = self._cohorts[cfg] = _Cohort(cfg, self.use_kernels,
+                                                  self.params)
+        cohort.add(tid)
+        self._tenant_cohort[tid] = cohort
+        return tid
+
+    def remove_tenant(self, tid: str) -> None:
+        cohort = self._tenant_cohort.pop(tid)
+        cohort.remove(tid)
+        if not cohort.tids:
+            self._cohorts.pop(cohort.cfg)
+
+    @property
+    def tenants(self) -> tuple:
+        return tuple(self._tenant_cohort)
+
+    def cohort_of(self, tid: str) -> _Cohort:
+        return self._tenant_cohort[tid]
+
+    def state_of(self, tid: str) -> mailbox.VertexState:
+        """The tenant's (unbatched) VertexState view."""
+        cohort = self._tenant_cohort[tid]
+        i = cohort.tids.index(tid)
+        return jax.tree.map(lambda x: x[i], cohort.state)
+
+    def set_state(self, tid: str, st: mailbox.VertexState) -> None:
+        cohort = self._tenant_cohort[tid]
+        i = cohort.tids.index(tid)
+        cohort.state = jax.tree.map(lambda t, r: t.at[i].set(r),
+                                    cohort.state, st)
+
+    def describe(self) -> dict:
+        """Cohort layout: variant -> (tenant ids, resolved stage backends)."""
+        return {c.pipeline.variant: {"tenants": tuple(c.tids),
+                                     **c.pipeline.describe()}
+                for c in self._cohorts.values()}
+
+    # -- the round step ------------------------------------------------
+    def _cohort_round(self, cohort: _Cohort, submitted: dict) -> tgn.BatchOut:
+        B = max(d[0].shape[0] for d in submitted.values())
+        devs = [( _pad_dev(submitted[tid], B) if tid in submitted
+                  else _idle_dev(B)) for tid in cohort.tids]
+        stacked = tuple(jnp.stack([d[j] for d in devs])
+                        for j in range(5))
+        return cohort.launch(self.params, stacked, self.edge_feats,
+                             self.node_feats)
+
+    @staticmethod
+    def _slice_out(out: tgn.BatchOut, i: int, b: int,
+                   with_state: bool = False) -> tgn.BatchOut:
+        """Tenant ``i``'s unbatched BatchOut, cut back to its own ``b`` rows
+        (the 2B-row distill views are concat([src rows, dst rows])).
+
+        ``step`` returns outputs with ``state=None``: per-tenant states are
+        committed inside the session (read them via ``state_of``), and
+        slicing full vertex tables out of the stacked pytree per tenant per
+        round would dwarf the step itself. ``peek`` keeps the state leaf.
+        """
+        st = (jax.tree.map(lambda x: x[i], out.state) if with_state
+              else None)
+        one = tgn.BatchOut(state=st, emb_src=out.emb_src[i],
+                           emb_dst=out.emb_dst[i],
+                           attn_logits=out.attn_logits[i],
+                           nbr_valid=out.nbr_valid[i],
+                           nbr_dt=out.nbr_dt[i])
+        B = one.emb_src.shape[0]
+        if b == B:
+            return one
+        two = jnp.concatenate([jnp.arange(b), B + jnp.arange(b)])
+        return tgn.BatchOut(
+            state=one.state, emb_src=one.emb_src[:b], emb_dst=one.emb_dst[:b],
+            attn_logits=one.attn_logits[two], nbr_valid=one.nbr_valid[two],
+            nbr_dt=one.nbr_dt[two])
+
+    def step(self, batches: Mapping[str, EdgeBatch | tuple]) -> dict:
+        """Advance every tenant with a submitted batch; one launch per
+        cohort (idle cohort members are masked, unsubmitted cohorts are
+        skipped). Returns ``{tid: BatchOut}`` for the submitted tenants
+        with ``state=None`` — per-tenant states are committed in place;
+        read them via ``state_of``.
+        """
+        unknown = set(batches) - set(self._tenant_cohort)
+        if unknown:
+            raise KeyError(f"unknown tenants {sorted(unknown)}; "
+                           f"registered: {sorted(self._tenant_cohort)}")
+        t0 = time.perf_counter()
+        outs: dict[str, tgn.BatchOut] = {}
+        launches = 0
+        edge_counts = []
+        for cohort in self._cohorts.values():
+            submitted = {tid: _as_device_tuple(batches[tid])
+                         for tid in cohort.tids if tid in batches}
+            if not submitted:
+                continue
+            out = self._cohort_round(cohort, submitted)
+            cohort.state = out.state
+            launches += 1
+            for i, tid in enumerate(cohort.tids):
+                if tid in submitted:
+                    b = submitted[tid][0].shape[0]
+                    outs[tid] = self._slice_out(out, i, b)
+                    # async device count — summed (one host sync) only
+                    # after every cohort launch has been dispatched
+                    edge_counts.append(submitted[tid][4].sum())
+        for o in outs.values():
+            o.emb_src.block_until_ready()
+        edges = int(jnp.stack(edge_counts).sum()) if edge_counts else 0
+        dt = time.perf_counter() - t0
+        self.metrics.append({
+            "latency_s": dt, "edges": edges, "launches": launches,
+            "tenants_active": len(outs),
+            "throughput_eps": edges / dt if dt > 0 else 0.0})
+        return outs
+
+    def peek(self, tid: str, batch) -> tgn.BatchOut:
+        """The tenant's step output WITHOUT committing any state (timing /
+        what-if hook; other cohort members are masked as idle)."""
+        cohort = self._tenant_cohort[tid]
+        dev = _as_device_tuple(batch)
+        if cohort.size == 1:
+            return cohort._vstep1(self.params, cohort.state, dev,
+                                  self.edge_feats, self.node_feats)
+        out = self._cohort_round(cohort, {tid: dev})
+        return self._slice_out(out, cohort.tids.index(tid),
+                               dev[0].shape[0], with_state=True)
+
+    # -- stream driving ------------------------------------------------
+    def run(self, streams: Mapping[str, Iterable]):
+        """Drive tenant streams round-robin until all are exhausted.
+
+        ``streams``: tid -> iterable of EdgeBatch. Yields
+        ``(batches, outs)`` per round; tenants whose stream has ended are
+        masked for the remaining rounds.
+        """
+        its = {tid: iter(s) for tid, s in streams.items()}
+        while its:
+            batches = {}
+            for tid in list(its):
+                try:
+                    batches[tid] = next(its[tid])
+                except StopIteration:
+                    del its[tid]
+            if not batches:
+                return
+            yield batches, self.step(batches)
+
+    def summary(self) -> dict:
+        """Aggregate round metrics (first round skipped: jit warmup)."""
+        if len(self.metrics) < 2:
+            return {}
+        lat = np.array([m["latency_s"] for m in self.metrics[1:]])
+        edges = sum(m["edges"] for m in self.metrics[1:])
+        return {
+            "rounds": len(lat),
+            "tenants": len(self._tenant_cohort),
+            "cohorts": len(self._cohorts),
+            "mean_round_ms": float(lat.mean() * 1e3),
+            "p99_round_ms": float(np.percentile(lat, 99) * 1e3),
+            "throughput_eps": float(edges / lat.sum()) if lat.sum() else 0.0,
+        }

@@ -1,0 +1,333 @@
+"""Multi-tenant SessionManager: N concurrent streams through one vmapped
+launch must be BITWISE-identical to N sequential single-tenant engines;
+sampler backends (uniform / time-decayed reservoir) and the spec-menu
+error messages ride along."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import pipeline as pl, stages, tgn
+from repro.data import stream as stream_mod
+from repro.data import temporal_graph as tgd
+from repro.serving.engine import StreamingEngine
+from repro.serving.session import SessionManager
+
+
+N_TENANTS = 3
+
+
+@pytest.fixture(scope="module")
+def small_graph():
+    return tgd.wikipedia_like(n_edges=500)
+
+
+def _dims(g, f=16):
+    return dict(n_nodes=g.cfg.n_nodes, n_edges=g.n_edges, f_edge=172,
+                f_mem=f, f_time=f, f_emb=f, m_r=10)
+
+
+def _tenant_stream(g, i, batch=40, rounds=4):
+    """Each tenant replays a different window of the graph (independent
+    streams with overlapping vertex populations)."""
+    lo = 60 * i
+    return stream_mod.fixed_count(g, batch,
+                                  window=slice(lo, lo + batch * rounds),
+                                  seed=i)
+
+
+def _assert_state_equal(a, b, msg=""):
+    for f in a._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(a, f)),
+                                      np.asarray(getattr(b, f)),
+                                      err_msg=f"{msg}:{f}")
+
+
+# ---------------------------------------------------------------------------
+# the acceptance criterion: N-tenant session == N sequential engines, bitwise
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("variant", ["teacher", "sat+lut+np4"])
+def test_multitenant_bitwise_matches_sequential_engines(small_graph, variant):
+    """One cohort of N same-variant tenants, advanced by one vmapped launch
+    per round, reproduces N independent StreamingEngine runs bitwise —
+    trajectories (per-round embeddings) AND final vertex state."""
+    g = small_graph
+    dims = _dims(g)
+    cfg = pl.variant_config(variant, **dims)
+    params = tgn.init_params(jax.random.key(0), cfg)
+    ef = jnp.asarray(g.edge_feats)
+
+    mgr = SessionManager(params, ef, model=cfg, use_kernels=False)
+    tids = [mgr.add_tenant() for _ in range(N_TENANTS)]
+    session_embs = {t: [] for t in tids}
+    streams = {t: _tenant_stream(g, i) for i, t in enumerate(tids)}
+    for _batches, outs in mgr.run(streams):
+        for t, o in outs.items():
+            session_embs[t].append((np.asarray(o.emb_src),
+                                    np.asarray(o.emb_dst)))
+
+    for i, t in enumerate(tids):
+        eng = StreamingEngine.from_variant(variant, params, ef,
+                                           use_kernels=False, **dims)
+        for r, batch in enumerate(_tenant_stream(g, i)):
+            hs, hd = eng.process(batch)
+            ms, md = session_embs[t][r]
+            np.testing.assert_array_equal(ms, np.asarray(hs),
+                                          err_msg=f"{t} round {r} src")
+            np.testing.assert_array_equal(md, np.asarray(hd),
+                                          err_msg=f"{t} round {r} dst")
+        _assert_state_equal(mgr.state_of(t), eng.state, msg=t)
+
+
+def test_mixed_sampler_cohorts_each_match_their_engine(small_graph):
+    """Tenants on different sampler backends share the session (and the
+    parameter set): one launch per cohort, each tenant still bitwise equal
+    to its own sequential engine."""
+    g = small_graph
+    dims = _dims(g)
+    variants = ("sat+lut+np4", "sat+lut+np4+uniform", "sat+lut+np4+reservoir",
+                "sat+lut+np4+reservoir")   # two reservoirs: one 2-cohort
+    cfg = pl.variant_config("sat+lut+np4", **dims)
+    params = tgn.init_params(jax.random.key(1), cfg)
+    ef = jnp.asarray(g.edge_feats)
+
+    mgr = SessionManager(params, ef, model=cfg, use_kernels=False)
+    tids = [mgr.add_tenant(v) for v in variants]
+    assert len(mgr.describe()) == 3         # 3 cohorts for 4 tenants
+    streams = {t: _tenant_stream(g, i) for i, t in enumerate(tids)}
+    for _batches, _outs in mgr.run(streams):
+        pass
+    assert mgr.metrics[-1]["launches"] == 3
+
+    finals = []
+    for i, (t, v) in enumerate(zip(tids, variants)):
+        eng = StreamingEngine.from_variant(v, params, ef,
+                                           use_kernels=False, **dims)
+        for batch in _tenant_stream(g, i):
+            eng.process(batch)
+        _assert_state_equal(mgr.state_of(t), eng.state, msg=v)
+        finals.append(np.asarray(mgr.state_of(t).memory))
+    # the sampler policy is load-bearing: different backends on the same
+    # stream windows land on different memory states
+    assert not np.array_equal(finals[0], finals[1])
+
+
+def test_idle_tenants_are_bitwise_frozen(small_graph):
+    """A round that only some tenants join must not perturb the others:
+    the masked (all-invalid) step is a bitwise no-op on their state."""
+    g = small_graph
+    dims = _dims(g, f=8)
+    cfg = pl.variant_config("sat+lut+np4", **dims)
+    params = tgn.init_params(jax.random.key(2), cfg)
+    mgr = SessionManager(params, jnp.asarray(g.edge_feats), model=cfg)
+    a, b = mgr.add_tenant(), mgr.add_tenant()
+    batches = list(_tenant_stream(g, 0, rounds=2))
+    mgr.step({a: batches[0], b: batches[0]})
+    frozen = mgr.state_of(b)
+    out = mgr.step({a: batches[1]})          # b idles this round
+    assert set(out) == {a}
+    _assert_state_equal(mgr.state_of(b), frozen, msg="idle tenant")
+    # and the idle round left a's trajectory on the sequential path
+    eng = StreamingEngine.from_variant("sat+lut+np4", params,
+                                       jnp.asarray(g.edge_feats),
+                                       use_kernels=False, **dims)
+    for batch in batches:
+        eng.process(batch)
+    _assert_state_equal(mgr.state_of(a), eng.state, msg="active tenant")
+
+
+def test_add_tenant_midstream_and_ragged_batches(small_graph):
+    """Tenants added after rounds have run start fresh and still match a
+    sequential engine; ragged per-tenant batch sizes are padded with masked
+    rows (results on real rows unchanged, outputs cut to the real rows)."""
+    g = small_graph
+    dims = _dims(g, f=8)
+    cfg = pl.variant_config("sat+lut+np4", **dims)
+    params = tgn.init_params(jax.random.key(3), cfg)
+    ef = jnp.asarray(g.edge_feats)
+    mgr = SessionManager(params, ef, model=cfg)
+    a = mgr.add_tenant()
+    first = list(_tenant_stream(g, 0, rounds=2))
+    for batch in first:
+        mgr.step({a: batch})
+    b = mgr.add_tenant()                     # cohort grows mid-serving
+    small = next(iter(stream_mod.fixed_count(g, 24, window=slice(0, 24))))
+    big = next(iter(stream_mod.fixed_count(g, 40,
+                                           window=slice(80, 120), seed=7)))
+    outs = mgr.step({b: small, a: big})      # ragged round: B=24 vs B=40
+    assert outs[b].emb_src.shape[0] == 24
+    assert outs[b].attn_logits.shape[0] == 48
+    assert outs[a].emb_src.shape[0] == 40
+
+    eng = StreamingEngine.from_variant("sat+lut+np4", params, ef,
+                                       use_kernels=False, **dims)
+    hs, _hd = eng.process(small)
+    np.testing.assert_array_equal(np.asarray(outs[b].emb_src),
+                                  np.asarray(hs))
+    _assert_state_equal(mgr.state_of(b), eng.state, msg="late tenant")
+
+
+def test_kernel_backends_serve_multitenant(small_graph):
+    """The Pallas stage backends run under the vmapped cohort launch and
+    agree with the reference-backend session within kernel tolerance."""
+    g = small_graph
+    dims = _dims(g)
+    cfg = pl.variant_config("sat+lut+np4", **dims)
+    params = tgn.init_params(jax.random.key(4), cfg)
+    ef = jnp.asarray(g.edge_feats)
+    outs = {}
+    for kernels in (True, False):
+        mgr = SessionManager(params, ef, model=cfg, use_kernels=kernels)
+        tids = [mgr.add_tenant() for _ in range(2)]
+        for _b, _o in mgr.run({t: _tenant_stream(g, i, rounds=2)
+                               for i, t in enumerate(tids)}):
+            pass
+        outs[kernels] = [np.asarray(mgr.state_of(t).memory) for t in tids]
+    for mk, mr in zip(outs[True], outs[False]):
+        np.testing.assert_allclose(mk, mr, atol=2e-5)
+
+
+def test_tenant_lifecycle_and_errors(small_graph):
+    g = small_graph
+    dims = _dims(g, f=8)
+    cfg = pl.variant_config("sat+lut+np4", **dims)
+    params = tgn.init_params(jax.random.key(5), cfg)
+    mgr = SessionManager(params, jnp.asarray(g.edge_feats), model=cfg)
+    a = mgr.add_tenant(name="fraud-eu")
+    assert mgr.tenants == ("fraud-eu",)
+    with pytest.raises(ValueError, match="already exists"):
+        mgr.add_tenant(name="fraud-eu")
+    # the parameterized axes are shared; samplers/pruning may vary
+    with pytest.raises(ValueError, match="shares sat\\+lut parameters"):
+        mgr.add_tenant("teacher")
+    b = mgr.add_tenant("sat+lut+np4+reservoir", reservoir_tau=3600.0)
+    assert "tau=3600" in mgr.cohort_of(b).pipeline.describe()["sampler"]
+    with pytest.raises(KeyError, match="unknown tenants"):
+        mgr.step({"nope": next(iter(_tenant_stream(g, 0)))})
+    mgr.remove_tenant(a)
+    assert mgr.tenants == (b,)
+    batch = next(iter(_tenant_stream(g, 0)))
+    assert set(mgr.step({b: batch})) == {b}
+
+
+# ---------------------------------------------------------------------------
+# sampler backends
+# ---------------------------------------------------------------------------
+
+
+def _one_neighborhood(variant, g, params, state, batch, dims):
+    pipe = pl.build_pipeline(variant, **dims)
+    vids = jnp.concatenate([jnp.asarray(batch.src), jnp.asarray(batch.dst)])
+    t = jnp.concatenate([jnp.asarray(batch.ts), jnp.asarray(batch.ts)])
+    return pipe.stages.sampler(params, pipe.prepare(params), state,
+                               jnp.asarray(g.edge_feats), vids, t)
+
+
+@pytest.mark.parametrize("variant", ["sat+lut+np4+uniform",
+                                     "sat+lut+np4+reservoir"])
+def test_randomized_samplers_select_valid_deterministic(small_graph,
+                                                        variant):
+    """Both hash-randomized policies pick k slots, only ever valid ones
+    (when enough exist), and are deterministic — two identical queries
+    sample the identical neighborhood (the property the bitwise session
+    guarantee rests on)."""
+    g = small_graph
+    dims = _dims(g)
+    cfg = pl.variant_config(variant, **dims)
+    params = tgn.init_params(jax.random.key(0), cfg)
+    state = tgn.init_state(cfg)
+    ef = jnp.asarray(g.edge_feats)
+    batches = list(stream_mod.fixed_count(g, 50, window=slice(0, 200)))
+    for batch in batches[:-1]:
+        b = tuple(jnp.asarray(x) for x in
+                  (batch.src, batch.dst, batch.eid, batch.ts, batch.valid))
+        state = tgn.process_batch(params, cfg, state, None, ef, *b).state
+    nb1 = _one_neighborhood(variant, g, params, state, batches[-1], dims)
+    nb2 = _one_neighborhood(variant, g, params, state, batches[-1], dims)
+    np.testing.assert_array_equal(np.asarray(nb1.dt), np.asarray(nb2.dt))
+    np.testing.assert_array_equal(np.asarray(nb1.valid),
+                                  np.asarray(nb2.valid))
+    assert nb1.dt.shape[1] == 4
+    # rows with >= k valid ring slots must select k valid ones
+    full = np.asarray(nb1.full_valid).sum(axis=1)
+    sel = np.asarray(nb1.valid).sum(axis=1)
+    assert np.all(sel[full >= 4] == 4)
+    assert np.all(sel[full < 4] == full[full < 4])
+
+
+def test_reservoir_tau_biases_toward_recency(small_graph):
+    """As tau -> 0 the reservoir weight exp(-dt/tau) collapses onto the
+    most recent neighbors, so the mean selected dt must not exceed the
+    uniform policy's."""
+    g = small_graph
+    dims = _dims(g)
+    dims_tau = dict(dims, reservoir_tau=1e-3)
+    cfg = pl.variant_config("sat+lut+np4", **dims)
+    params = tgn.init_params(jax.random.key(0), cfg)
+    state = tgn.init_state(cfg)
+    ef = jnp.asarray(g.edge_feats)
+    batches = list(stream_mod.fixed_count(g, 50, window=slice(0, 300)))
+    for batch in batches[:-1]:
+        b = tuple(jnp.asarray(x) for x in
+                  (batch.src, batch.dst, batch.eid, batch.ts, batch.valid))
+        state = tgn.process_batch(params, cfg, state, None, ef, *b).state
+    nb_u = _one_neighborhood("sat+lut+np4+uniform", g, params, state,
+                             batches[-1], dims)
+    nb_r = _one_neighborhood("sat+lut+np4+reservoir", g, params, state,
+                             batches[-1], dims_tau)
+    du = np.asarray(nb_u.dt)[np.asarray(nb_u.valid)]
+    dr = np.asarray(nb_r.dt)[np.asarray(nb_r.valid)]
+    assert dr.mean() <= du.mean()
+
+
+def test_sampler_variants_run_through_pipeline(small_graph):
+    g = small_graph
+    dims = _dims(g, f=8)
+    for variant in pl.SAMPLER_VARIANTS:
+        pipe = pl.build_pipeline(variant, **dims)
+        params = pipe.init_params(jax.random.key(0))
+        state = pipe.init_state()
+        b = next(iter(stream_mod.fixed_count(g, 32)))
+        bt = tuple(jnp.asarray(x) for x in
+                   (b.src, b.dst, b.eid, b.ts, b.valid))
+        out = pipe.step_fn(params, state, bt, jnp.asarray(g.edge_feats))
+        assert bool(jnp.all(jnp.isfinite(out.emb_src)))
+
+
+# ---------------------------------------------------------------------------
+# spec menu in error messages
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bad", ["sat+lut+bogus", "nope+cosine", "sat+fft",
+                                 "vanilla+cosine+uniform",
+                                 "sat+lut+np4+np2+x"])
+def test_invalid_spec_prints_the_full_menu(bad):
+    with pytest.raises(ValueError) as ei:
+        pl.build_pipeline(bad, n_nodes=10, n_edges=10)
+    msg = str(ei.value)
+    for token in ("vanilla", "sat", "cosine", "lut", "np<k>", "recent",
+                  "uniform", "reservoir", "registered variants",
+                  "aliases"):
+        assert token in msg, f"{token!r} missing from menu for {bad!r}"
+
+
+def test_sampler_spec_round_trips():
+    assert pl.resolve_variant("sat+lut+np4+reservoir").sampler == "reservoir"
+    assert pl.resolve_variant("uniform") == pl.VariantSpec(
+        "sat", "lut", 4, "uniform")
+    assert pl.variant_name(pl.VariantSpec("sat", "lut", 2, "uniform")) == \
+        "sat+lut+np2+uniform"
+    assert pl.variant_name(pl.resolve_variant("reservoir")) == \
+        "sat+lut+np4+reservoir"
+    # default sampler stays out of canonical names
+    assert pl.variant_name(pl.VariantSpec("sat", "lut", 4)) == "sat+lut+np4"
+    assert stages.SAMPLERS == ("recent", "uniform", "reservoir")
+    # an explicit 'recent' clause is the default policy: legal anywhere,
+    # and it still arms the duplicate-clause check in BOTH orders
+    assert pl.resolve_variant("vanilla+cosine+recent").sampler == "recent"
+    for dup in ("sat+lut+recent+uniform", "sat+lut+uniform+recent"):
+        with pytest.raises(ValueError, match="duplicate sampler"):
+            pl.resolve_variant(dup)

@@ -1,0 +1,95 @@
+#!/usr/bin/env python
+"""Doc hygiene checks (make docs-check; part of make lint).
+
+Over every tracked markdown file (repo root + docs/):
+
+  1. intra-repo links resolve: each ``[text](target)`` whose target is not
+     external (http/https/mailto/#anchor) must point at an existing file,
+     relative to the doc that contains it;
+  2. variant strings exist: every backtick code span that *looks like* a
+     pipeline variant spec (the ``attn+enc[+np<k>][+sampler]`` grammar or a
+     ``+ROW``-style Table-II alias) must resolve in the live registry —
+     docs cannot advertise specs ``build_pipeline`` would reject.
+
+Exits non-zero listing every violation.
+"""
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+from repro.core import pipeline as pl  # noqa: E402
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+CODE_RE = re.compile(r"`([^`\n]+)`")
+# a span is a variant-spec candidate if it is pure grammar tokens with at
+# least one '+', or a Table-II-style "+ROW" alias
+GRAMMAR_RE = re.compile(r"^(vanilla|sat)\+[a-z0-9+]+$")
+ALIAS_RE = re.compile(r"^\+[A-Za-z]{2,}(\([A-Za-z]\))?$")
+EXTERNAL = ("http://", "https://", "mailto:", "#")
+
+
+def doc_files() -> list:
+    return sorted(glob.glob(os.path.join(REPO, "*.md"))
+                  + glob.glob(os.path.join(REPO, "docs", "*.md")))
+
+
+def check_links(path: str, text: str) -> list:
+    errors = []
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(EXTERNAL):
+            continue
+        target = target.split("#", 1)[0]
+        if not target:
+            continue
+        resolved = os.path.normpath(
+            os.path.join(os.path.dirname(path), target))
+        if not os.path.exists(resolved):
+            errors.append(f"{os.path.relpath(path, REPO)}: broken link "
+                          f"-> {m.group(1)}")
+    return errors
+
+
+def check_variants(path: str, text: str) -> list:
+    errors = []
+    for m in CODE_RE.finditer(text):
+        span = m.group(1).strip()
+        if not (GRAMMAR_RE.match(span) or ALIAS_RE.match(span)):
+            continue
+        try:
+            pl.resolve_variant(span)
+        except ValueError:
+            errors.append(f"{os.path.relpath(path, REPO)}: variant spec "
+                          f"`{span}` does not resolve in the pipeline "
+                          "registry")
+    return errors
+
+
+def main() -> int:
+    errors = []
+    files = doc_files()
+    n_links = n_specs = 0
+    for path in files:
+        with open(path) as f:
+            text = f.read()
+        n_links += len(LINK_RE.findall(text))
+        n_specs += sum(1 for m in CODE_RE.finditer(text)
+                       if GRAMMAR_RE.match(m.group(1).strip())
+                       or ALIAS_RE.match(m.group(1).strip()))
+        errors += check_links(path, text)
+        errors += check_variants(path, text)
+    for e in errors:
+        print(f"docs-check: {e}", file=sys.stderr)
+    print(f"docs-check: {len(files)} files, {n_links} links, "
+          f"{n_specs} variant specs, {len(errors)} error(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
