@@ -1,21 +1,28 @@
 # Uniform verify targets for the builder and future PRs.
 #
 #   make test         tier-1 suite (the ROADMAP verify command)
+#   make test-sharded sharded tenant-fabric tests (tests/test_cluster.py)
+#                     on a forced 8-device host mesh — tier-1 runs them
+#                     skipped because conftest.py keeps XLA_FLAGS unset
 #   make bench-smoke  one tiny fig5 sweep through the streaming engine
 #   make docs-check   intra-repo doc links resolve + every variant spec in
 #                     docs exists in the pipeline registry
 #   make lint         pyflakes over src/ tests/ benchmarks/ examples/
 #                     (falls back to a bytecode-compile check when
 #                      pyflakes is not installed; see requirements-dev.txt)
-#                     + docs-check
+#                     + docs-check + test-sharded preflight
 
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test bench-smoke lint docs-check
+.PHONY: test test-sharded bench-smoke lint docs-check
 
 test:
 	$(PY) -m pytest -x -q
+
+test-sharded:
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+	    $(PY) -m pytest -x -q tests/test_cluster.py tests/test_tgn_sharding.py
 
 bench-smoke:
 	$(PY) -c "from benchmarks.fig5_latency_throughput import sweep; \
@@ -25,7 +32,7 @@ bench-smoke:
 docs-check:
 	$(PY) tools/docs_check.py
 
-lint: docs-check
+lint: docs-check test-sharded
 	@if $(PY) -c "import pyflakes" 2>/dev/null; then \
 	    $(PY) -m pyflakes src benchmarks examples tests/*.py; \
 	else \

@@ -1,6 +1,13 @@
 """Fig. 7 — accuracy/latency frontier: AP (from the table2 --ap ladder, or
 a quick re-train) against measured per-batch latency of each variant, every
-one served by the variant-agnostic StreamingEngine."""
+one served by the variant-agnostic StreamingEngine.
+
+Beyond the paper, the SAMPLER-BACKEND axis (ROADMAP accuracy-benchmark
+item): the np4 student's prune-then-fetch selection policy is pluggable
+(``recent`` — the paper's SAT top-k — vs ``uniform`` vs time-decayed
+``reservoir``), selection is parameter-free, so ONE distilled student
+evaluates under all three. ``--full`` trains that student; default mode
+reuses the previously saved AP points."""
 from __future__ import annotations
 
 import jax
@@ -9,12 +16,14 @@ import jax.numpy as jnp
 from benchmarks.common import (VARIANTS, load_json, paper_tgn_config,
                                save_json, timeit)
 from repro.core import tgn
+from repro.core.pipeline import SAMPLER_VARIANTS, variant_config
 from repro.data import stream as stream_mod
 from repro.data import temporal_graph as tgd
 from repro.serving.engine import EngineConfig, StreamingEngine
 
 
-def latencies(n_edges: int = 2000, batch: int = 200, f_mem: int = 100):
+def latencies(n_edges: int = 2000, batch: int = 200, f_mem: int = 100,
+              variants=VARIANTS):
     g = tgd.wikipedia_like(n_edges=n_edges)
     ef = jnp.asarray(g.edge_feats)
     b0 = next(iter(stream_mod.fixed_count(g, batch,
@@ -22,12 +31,40 @@ def latencies(n_edges: int = 2000, batch: int = 200, f_mem: int = 100):
     dev = tuple(jnp.asarray(x) for x in (b0.src, b0.dst, b0.eid, b0.ts,
                                          b0.valid))
     out = {}
-    for name in VARIANTS:
+    for name in variants:
         cfg = paper_tgn_config(name, g.cfg.n_nodes, g.n_edges, f_mem=f_mem)
         params = tgn.init_params(jax.random.key(0), cfg)
         eng = StreamingEngine(EngineConfig(model=cfg), params, ef)
         t = timeit(lambda: eng.step_on_device(dev).emb_src, iters=5)
         out[name] = round(t * 1e3, 3)
+    return out
+
+
+def sampler_ap(n_edges: int = 4000, f_mem: int = 32, epochs: int = 2):
+    """AP of ONE distilled np4 student under each sampler backend.
+
+    Teacher + one student train (same recipe as table2's --ap ladder);
+    the three backends then replay the identical test stream with only
+    the neighbor-selection policy swapped — the AP delta is purely the
+    sampler's."""
+    from repro.training import tgn_trainer as TT
+    g = tgd.wikipedia_like(n_edges=n_edges)
+    base = dict(n_nodes=g.cfg.n_nodes, n_edges=g.n_edges, f_edge=172,
+                f_mem=f_mem, f_time=f_mem, f_emb=f_mem, m_r=10)
+    tcfg = TT.TGNTrainConfig(batch_size=100, epochs=epochs)
+    _tr, va, te_sl = stream_mod.chronological_split(g)
+    t_cfg = variant_config("Baseline", **base)
+    t_params, _ = TT.train_teacher(g, t_cfg, tcfg)
+    s_params, _ = TT.distill_student(g, t_params, t_cfg,
+                                     variant_config("sat+lut+np4", **base),
+                                     tcfg)
+    warm = slice(0, va.stop)
+    out = {}
+    for name in SAMPLER_VARIANTS:
+        s_cfg = variant_config(name, **base)
+        out[name] = TT.evaluate_ap(s_params, s_cfg, g, te_sl,
+                                   warm_window=warm)
+        print(f"  [sampler ap] {name}: {out[name]:.4f}")
     return out
 
 
@@ -39,8 +76,20 @@ def main(full: bool = False):
     for name in VARIANTS:
         ap_s = f"AP={aps[name]:.4f}" if aps else "AP=(run table2 --ap)"
         print(f"  {name:9s} latency={lat[name]:8.3f}ms  {ap_s}")
-    save_json("fig7.json", {"latency_ms": lat, "ap": aps})
+
+    print("-- sampler-backend axis (np4 student: selection policy only) --")
+    lat_s = latencies(variants=SAMPLER_VARIANTS)
+    prev = load_json("fig7.json") or {}
+    ap_s = sampler_ap() if full else prev.get("sampler_ap")
+    for name in SAMPLER_VARIANTS:
+        ap_str = (f"AP={ap_s[name]:.4f}" if ap_s and name in ap_s
+                  else "AP=(run with --full)")
+        print(f"  {name:24s} latency={lat_s[name]:8.3f}ms  {ap_str}")
+    save_json("fig7.json", {"latency_ms": lat, "ap": aps,
+                            "sampler_latency_ms": lat_s,
+                            "sampler_ap": ap_s})
 
 
 if __name__ == "__main__":
-    main()
+    import sys
+    main(full="--full" in sys.argv)

@@ -15,7 +15,8 @@ def main() -> None:
     full = "--full" in sys.argv
     from benchmarks import (fig5_latency_throughput, fig6_perf_model,
                             fig7_accuracy_latency, multitenant, roofline,
-                            table1_case_study, table2_model_opts)
+                            sharded_session, table1_case_study,
+                            table2_model_opts)
     benches = [
         ("table1_case_study", table1_case_study),
         ("table2_model_opts", table2_model_opts),
@@ -23,6 +24,7 @@ def main() -> None:
         ("fig6_perf_model", fig6_perf_model),
         ("fig7_accuracy_latency", fig7_accuracy_latency),
         ("multitenant", multitenant),
+        ("sharded_session", sharded_session),
         ("roofline", roofline),
     ]
     for name, mod in benches:

@@ -1,0 +1,107 @@
+"""Sharded tenant fabric scaling: aggregate edges/s vs (tenants x devices).
+
+The ShardedSessionManager (serving/cluster.py) spreads every cohort's
+stacked ``(tenant, V, ...)`` VertexState over the mesh ``tenant`` axis —
+the jax analogue of the paper's banked Graph Storage. This sweep measures
+aggregate throughput of one fleet as BOTH the tenant count and the mesh
+width grow (mesh=1 is the unsharded SessionManager baseline; trajectories
+are bitwise-identical across the whole grid, so rows differ only in
+placement).
+
+Run it on a forced multi-device host (the Makefile's test-sharded flags):
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+        PYTHONPATH=src python -m benchmarks.sharded_session
+
+Without the flag (1 visible device) the sweep degrades to the mesh=1
+column and says so. Imports are deferred so ``main()`` can print that
+hint before jax initializes.
+"""
+from __future__ import annotations
+
+import time
+
+
+def _divisor_meshes(n_devices: int, tenants: int) -> list:
+    """Mesh widths to sweep: device-count divisors up to the fleet size."""
+    return [d for d in (1, 2, 4, 8, 16) if d <= n_devices
+            and n_devices % d == 0 and d <= tenants]
+
+
+def sweep(tenant_counts=(2, 4, 8), batch: int = 100, rounds: int = 6,
+          n_edges: int = 3000, f_mem: int = 32,
+          variant: str = "sat+lut+np4"):
+    """edges/s of one fleet across the (tenants x mesh width) grid."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import pipeline as pl, tgn
+    from repro.data import stream as stream_mod
+    from repro.data import temporal_graph as tgd
+    from repro.serving.cluster import ShardedSessionManager
+    from repro.serving.session import SessionManager
+
+    g = tgd.wikipedia_like(n_edges=n_edges)
+    dims = dict(n_nodes=g.cfg.n_nodes, n_edges=g.n_edges, f_edge=172,
+                f_mem=f_mem, f_time=f_mem, f_emb=f_mem, m_r=10)
+    cfg = pl.variant_config(variant, **dims)
+    params = tgn.init_params(jax.random.key(0), cfg)
+    ef = jnp.asarray(g.edge_feats)
+
+    def feeds(T):
+        return [list(stream_mod.fixed_count(
+            g, batch,
+            window=slice((37 * i) % max(1, g.n_edges - batch * rounds),
+                         (37 * i) % max(1, g.n_edges - batch * rounds)
+                         + batch * rounds),
+            seed=i)) for i in range(T)]
+
+    rows = []
+    for T in tenant_counts:
+        fs = feeds(T)
+        for width in _divisor_meshes(jax.device_count(), T):
+            mgr = (SessionManager(params, ef, model=cfg) if width == 1 else
+                   ShardedSessionManager(params, ef, model=cfg,
+                                         mesh=f"tenant={width}"))
+            tids = [mgr.add_tenant() for _ in range(T)]
+            mgr.step({t: fs[i][0] for i, t in enumerate(tids)})  # warmup/jit
+            t0 = time.perf_counter()
+            for r in range(1, rounds):
+                mgr.step({t: fs[i][r] for i, t in enumerate(tids)})
+            dt = time.perf_counter() - t0
+            rows.append({
+                "tenants": T, "mesh": width, "batch": batch,
+                "variant": variant,
+                "eps": round((rounds - 1) * batch * T / dt),
+            })
+    return rows
+
+
+def main(full: bool = False):
+    import jax
+
+    from benchmarks.common import save_json
+
+    n_dev = jax.device_count()
+    print(f"== sharded tenant fabric: edges/s vs (tenants x devices) "
+          f"[{n_dev} device(s)] ==")
+    if n_dev == 1:
+        print("   (1 visible device: only the mesh=1 baseline column — "
+              "rerun under XLA_FLAGS=--xla_force_host_platform_device_"
+              "count=8 for the full grid)")
+    else:
+        print("   (forced host devices share one physical CPU: wider "
+              "meshes pay partition overhead without extra silicon — "
+              "speedups need real multi-device hardware)")
+    counts = (2, 4, 8, 16) if full else (2, 4, 8)
+    rows = sweep(tenant_counts=counts)
+    base = {r["tenants"]: r["eps"] for r in rows if r["mesh"] == 1}
+    for r in rows:
+        rel = r["eps"] / base[r["tenants"]] if base.get(r["tenants"]) else 0
+        print(f"  T={r['tenants']:3d} mesh={r['mesh']:2d} "
+              f"{r['eps']:8d} E/s  ({rel:4.2f}x vs unsharded)")
+    save_json("sharded_session.json", {"devices": n_dev, "sweep": rows})
+
+
+if __name__ == "__main__":
+    main()

@@ -295,6 +295,38 @@ class TGNPipeline:
         return self.step(params, self.prepare(params), state, batch,
                          edge_feats, node_feats)
 
+    def batched_step(self, aux: dict, *, donate_state: bool = False,
+                     in_shardings=None, out_shardings=None):
+        """The cohort launch: ``jit(vmap(step))`` over a leading tenant axis.
+
+        Signature of the returned callable:
+        ``(params, stacked_state, stacked_batch, edge_feats, node_feats)
+        -> BatchOut`` with state/batch/output leaves carrying the tenant
+        axis and params/features broadcast. ``aux`` (folded/packed tables
+        with static metadata) is closed over, not traced.
+
+        ``donate_state`` donates the stacked VertexState buffers to the
+        launch — the committed state reuses them, so a resident fleet's
+        tables are updated in place instead of double-buffered.
+        ``in_shardings``/``out_shardings`` pin the mesh placement of every
+        operand (the sharded tenant fabric, serving/cluster.py); left
+        ``None`` the launch follows its inputs (single-device serving).
+        """
+        step = self.step
+
+        def one(params, state, batch, ef, nf):
+            return step(params, aux, state, batch, ef, nf)
+
+        vstep = jax.vmap(one, in_axes=(None, 0, 0, None, None))
+        kw = {}
+        if in_shardings is not None:
+            kw["in_shardings"] = in_shardings
+        if out_shardings is not None:
+            kw["out_shardings"] = out_shardings
+        if donate_state:
+            kw["donate_argnums"] = (1,)
+        return jax.jit(vstep, **kw)
+
     def describe(self) -> dict:
         """Variant + resolved stage backends (introspection/logging)."""
         return {"variant": self.variant, "use_kernels": self.use_kernels,

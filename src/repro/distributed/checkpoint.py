@@ -103,14 +103,19 @@ def save(root: str, step: int, tree: PyTree, *, meta: dict | None = None,
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)          # atomic commit
-    _gc(root, keep)
+    _gc(root, keep, protect=os.path.basename(final))
     return final
 
 
-def _gc(root: str, keep: int) -> None:
+def _gc(root: str, keep: int, protect: str | None = None) -> None:
     steps = sorted(d for d in os.listdir(root) if d.startswith("step_")
                    and not d.endswith(".tmp"))
     for d in steps[:-keep] if keep > 0 else []:
+        # never collect the checkpoint this very save just committed, even
+        # when its step sorts below the keep window (e.g. a restarted
+        # writer whose step counter lags the directory's history)
+        if d == protect:
+            continue
         shutil.rmtree(os.path.join(root, d))
     for d in os.listdir(root):
         if d.endswith(".tmp"):

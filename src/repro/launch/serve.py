@@ -7,6 +7,15 @@ With ``--tenants N`` (or ``--tenant-variants``) the stream is split across
 N concurrent tenants served by the multi-tenant SessionManager: one
 vmapped launch per cohort per round, per-tenant states isolated.
 
+``--mesh`` places the fleet on the sharded tenant fabric
+(serving/cluster.py): stacked tenant states and batch inputs shard over
+the mesh's ``tenant`` (and optional ``vertex``) axis, trajectories
+bitwise-identical to the unsharded session. ``--snapshot-dir`` snapshots
+every tenant's VertexState (atomic, crc-checked) every
+``--snapshot-every`` rounds and at exit; ``--restore`` resumes any tenant
+snapshotted there instead of starting it fresh — including onto a
+different mesh shape.
+
 ``--mode lm``: batched prefill+decode generation with a reduced-config LM.
 
 Examples:
@@ -14,6 +23,9 @@ Examples:
     PYTHONPATH=src python -m repro.launch.serve --mode tgn --tenants 4
     PYTHONPATH=src python -m repro.launch.serve --mode tgn \\
         --tenant-variants sat+lut+np4,sat+lut+np4+reservoir
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \\
+        python -m repro.launch.serve --mode tgn --tenants 8 --mesh tenant=8 \\
+        --snapshot-dir /tmp/fleet --snapshot-every 5
     PYTHONPATH=src python -m repro.launch.serve --mode lm --arch qwen3_8b
 """
 from __future__ import annotations
@@ -23,6 +35,51 @@ import argparse
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+class _SnapshotHooks:
+    """--snapshot-dir plumbing: periodic fleet snapshots + --restore."""
+
+    def __init__(self, mgr, args):
+        from repro.core import pipeline
+        from repro.serving import cluster
+        self.cluster = cluster
+        self.pipeline = pipeline
+        self.mgr = mgr
+        self.root = args.snapshot_dir
+        self.do_restore = args.restore
+        self.available = cluster.list_snapshots(self.root)
+        self.base_step = {}          # tid -> step its trajectory resumed at
+
+    def restore(self, variant, name):
+        """Revive ``name`` from disk if --restore and a snapshot exists
+        (returns the tenant id) else None (caller adds it fresh)."""
+        if not (self.do_restore and name in self.available):
+            return None
+        meta = self.cluster.snapshot_meta(self.root, name)
+        want = self.pipeline.variant_name(
+            self.pipeline.resolve_variant(variant))
+        if want != meta["variant"]:
+            raise ValueError(
+                f"tenant {name!r} was snapshotted as {meta['variant']!r} "
+                f"but this run requests {want!r} — a restored trajectory "
+                "keeps its policy; drop the conflicting "
+                "--variant/--tenant-variants entry or point --snapshot-dir "
+                "at a fresh directory")
+        tid = self.cluster.restore_tenant(self.mgr, self.root, name)
+        self.base_step[tid] = self.available[name]
+        print(f"restored tenant {tid!r} ({meta['variant']}) from "
+              f"{self.root} step {self.available[name]}")
+        return tid
+
+    def save(self, rounds):
+        # steps continue from each restored trajectory's snapshot, so a
+        # resumed run's saves never sort below (and lose the latest-step
+        # race against) the history they extend
+        for tid in self.mgr.tenants:
+            self.cluster.snapshot_tenant(
+                self.mgr, tid, self.root,
+                step=self.base_step.get(tid, 0) + rounds)
 
 
 def run_tgn(args):
@@ -46,20 +103,58 @@ def run_tgn(args):
     tenant_variants = ([v for v in args.tenant_variants.split(",") if v]
                        if args.tenant_variants else
                        [args.variant] * args.tenants)
-    if args.tenant_variants or args.tenants > 1:
+    if args.tenant_variants or args.tenants > 1 or args.mesh is not None \
+            or args.snapshot_dir:
         # multi-tenant: split the stream into one contiguous feed per
         # tenant; same-variant tenants share one vmapped launch per round.
-        mgr = SessionManager(params, edge_feats, node_feats, model=cfg,
-                             use_kernels=True)
-        tids = [mgr.add_tenant(v) for v in tenant_variants]
+        # (--snapshot-dir forces this path too: snapshots are a session
+        # feature, and a 1-tenant session serves bitwise like the engine.)
+        if args.mesh is not None:
+            from repro.serving.cluster import ShardedSessionManager
+            mgr = ShardedSessionManager(params, edge_feats, node_feats,
+                                        model=cfg, use_kernels=True,
+                                        mesh=args.mesh)
+        else:
+            mgr = SessionManager(params, edge_feats, node_feats, model=cfg,
+                                 use_kernels=True)
+        snapshots = (_SnapshotHooks(mgr, args) if args.snapshot_dir
+                     else None)
+        tids = []
+        for i, v in enumerate(tenant_variants):
+            tid = snapshots.restore(v, f"t{i}") if snapshots else None
+            tids.append(tid if tid is not None else
+                        mgr.add_tenant(v, name=f"t{i}"))
         print("session cohorts:", {v: i["tenants"]
-                                   for v, i in mgr.describe().items()})
+                                   for v, i in mgr.describe().items()
+                                   if isinstance(i, dict)
+                                   and "tenants" in i})
+        if args.mesh is not None:
+            print("fabric mesh:", dict(mgr.mesh.shape))
         span = g.n_edges // len(tids)
-        streams = {tid: stream.fixed_count(
-            g, args.batch, window=slice(i * span, (i + 1) * span))
-            for i, tid in enumerate(tids)}
+        streams = {}
+        for i, tid in enumerate(tids):
+            lo = i * span
+            if snapshots:
+                # a restored tenant RESUMES its window where the snapshot
+                # left off (one round = one --batch of edges; resuming
+                # assumes the same --batch) instead of re-ingesting edges
+                # its state already contains; a fully-consumed window
+                # leaves the tenant idle.
+                lo += min(snapshots.base_step.get(tid, 0) * args.batch,
+                          span)
+            streams[tid] = stream.fixed_count(
+                g, args.batch, window=slice(lo, (i + 1) * span))
+        rounds = 0
         for _batches, _outs in mgr.run(streams):
-            pass
+            rounds += 1
+            if snapshots and args.snapshot_every and \
+                    rounds % args.snapshot_every == 0:
+                snapshots.save(rounds)
+        if snapshots:
+            snapshots.save(rounds)
+            steps = {t: snapshots.base_step.get(t, 0) + rounds
+                     for t in sorted(mgr.tenants)}
+            print(f"snapshots: {steps} -> {args.snapshot_dir}")
         print("session summary:", mgr.summary())
         return
 
@@ -112,12 +207,29 @@ def main():
                     help="comma-separated per-tenant variant specs "
                          "(overrides --tenants; attention+encoder must "
                          "match --variant, sampler/pruning may differ)")
+    ap.add_argument("--mesh", default=None,
+                    help="serve on the sharded tenant fabric: a device-"
+                         "mesh spec like '8' or 'tenant=4,vertex=2' "
+                         "(CPU hosts: set XLA_FLAGS=--xla_force_host_"
+                         "platform_device_count=N first)")
+    ap.add_argument("--snapshot-dir", default=None,
+                    help="snapshot every tenant's VertexState here "
+                         "(atomic + crc32, via distributed/checkpoint.py)")
+    ap.add_argument("--snapshot-every", type=int, default=0,
+                    help="also snapshot every N rounds (0: only at exit)")
+    ap.add_argument("--restore", action="store_true",
+                    help="resume tenants found in --snapshot-dir instead "
+                         "of starting them fresh (any mesh shape)")
     ap.add_argument("--batch", type=int, default=200)
     ap.add_argument("--window-s", type=float, default=0.0)
     ap.add_argument("--arch", default="qwen3_8b")
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
     args = ap.parse_args()
+    if args.restore and not args.snapshot_dir:
+        ap.error("--restore needs --snapshot-dir")
+    if args.snapshot_every and not args.snapshot_dir:
+        ap.error("--snapshot-every needs --snapshot-dir")
     (run_tgn if args.mode == "tgn" else run_lm)(args)
 
 

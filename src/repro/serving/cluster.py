@@ -1,0 +1,243 @@
+"""Sharded tenant fabric: the multi-tenant session on a device mesh.
+
+``serving/session.py`` stacks every same-variant tenant's VertexState and
+advances the cohort in one vmapped launch — the software analogue of the
+paper's batched datapath. This module is the next scaling layer: place
+those stacked ``(tenant, V, ...)`` tables and the padded batch inputs on a
+``jax.sharding.Mesh`` so the fleet spreads over devices, the way the
+accelerator spreads its Graph Storage over BRAM banks.
+
+  * ``ShardedSessionManager`` — drop-in SessionManager whose cohorts pad
+    their stacked tables to a multiple of the mesh ``tenant`` axis (pad
+    slots are idle-masked rows, a bitwise no-op) and pin every launch
+    operand with the PartitionSpec rules in ``distributed/tgn_sharding.py``:
+    state/batches row-sharded over ``tenant`` (optionally ``vertex`` for
+    the V dim), params and feature stores replicated. The committing
+    launch donates the old state buffers, so resident tables are updated
+    in place. Because the vmapped step has no cross-tenant reduction,
+    per-tenant trajectories are BITWISE-identical to the unsharded
+    SessionManager (tests/test_cluster.py pins this on a forced 8-device
+    host mesh).
+
+  * snapshot / restore / migration — built on ``distributed/checkpoint.py``
+    (atomic tmp-dir+rename commit, per-leaf crc32, versioned steps): a
+    tenant's VertexState plus its variant/config metadata is saved under
+    ``<root>/<tenant>/step_XXXXXXXX/`` and restores into ANY manager whose
+    shared parameter axes match — a different cohort, a different mesh
+    shape, or the unsharded session (the elastic path: checkpoints hold
+    full logical arrays, placement is recomputed by the target).
+
+::
+
+    mgr = ShardedSessionManager(params, edge_feats, model=cfg,
+                                mesh="tenant=4,vertex=2")
+    a = mgr.add_tenant()
+    mgr.step({a: batch})
+    snapshot_tenant(mgr, a, "/ckpt/fleet", step=rounds)
+    # ... later / elsewhere, any mesh shape:
+    b = restore_tenant(other_mgr, "/ckpt/fleet", a)
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+
+from repro.core import mailbox, pipeline as pl, tgn
+from repro.distributed import checkpoint as ckpt
+from repro.distributed import tgn_sharding as tsh
+from repro.serving.session import SessionManager, _Cohort
+
+
+class _ShardedCohort(_Cohort):
+    """A cohort whose stacked tables live sharded on the fabric mesh."""
+
+    def __init__(self, cfg: tgn.TGNConfig, use_kernels: bool, params: dict,
+                 mesh: Mesh):
+        self.mesh = mesh
+        super().__init__(cfg, use_kernels, params)
+
+    def _build_launches(self) -> None:
+        super()._build_launches()        # keeps the unsharded _vstep1 peek
+        like = jax.eval_shape(self.pipeline.init_state)
+        self.state_shardings = tsh.make_shardings(
+            self.mesh, tsh.state_specs(self.mesh, like))
+        rep = tsh.replicated(self.mesh)
+        batch_sh = tuple(NamedSharding(self.mesh, s)
+                         for s in tsh.batch_specs(self.mesh))
+        out_sh = tsh.make_shardings(self.mesh, tsh.out_specs(self.mesh,
+                                                             like))
+        # node_feats may be None: leave its placement unspecified
+        in_sh = (rep, self.state_shardings, batch_sh, rep, None)
+        self._vstep = self.pipeline.batched_step(
+            self.aux, in_shardings=in_sh, out_shardings=out_sh)
+        self._vstep_commit = self.pipeline.batched_step(
+            self.aux, donate_state=True, in_shardings=in_sh,
+            out_shardings=out_sh)
+
+    def _fit(self, state):
+        """Pad the stacked tables to the mesh capacity (idle init-state
+        rows) and place every leaf with its PartitionSpec."""
+        n = int(state.memory.shape[0])
+        cap = tsh.tenant_capacity(n, self.mesh)
+        if cap > n:
+            row = self.pipeline.init_state()
+            pads = jax.tree.map(lambda x: jnp.repeat(x[None], cap - n,
+                                                     axis=0), row)
+            state = jax.tree.map(lambda t, p: jnp.concatenate([t, p],
+                                                              axis=0),
+                                 state, pads)
+        return jax.device_put(state, self.state_shardings)
+
+    def launch(self, params, stacked_batch, edge_feats, node_feats,
+               commit: bool = False) -> tgn.BatchOut:
+        fn = self._vstep_commit if commit else self._vstep
+        return fn(params, self.state, stacked_batch, edge_feats, node_feats)
+
+
+class ShardedSessionManager(SessionManager):
+    """SessionManager on a device mesh: same API, same trajectories.
+
+    ``mesh`` is a ``jax.sharding.Mesh`` or a spec string for
+    ``tgn_sharding.make_tenant_mesh`` (``"8"``, ``"tenant=4,vertex=2"``,
+    ``None`` = every device on the tenant axis). Shared operands (params,
+    edge/node feature stores) are replicated across the mesh once at
+    construction; each cohort's stacked state and batch inputs shard over
+    the ``tenant`` axis. Everything else — tenant lifecycle, idle masking,
+    chronological LWW commits, metrics — is inherited unchanged.
+    """
+
+    def __init__(self, params: dict, edge_feats, node_feats=None, *,
+                 mesh: Mesh | str | int | None = None, **kw):
+        if not isinstance(mesh, Mesh):
+            mesh = tsh.make_tenant_mesh(mesh)
+        self.mesh = mesh
+        super().__init__(params, edge_feats, node_feats, **kw)
+        rep = tsh.replicated(mesh)
+        self.params = jax.device_put(self.params, rep)
+        self.edge_feats = jax.device_put(self.edge_feats, rep)
+        if self.node_feats is not None:
+            self.node_feats = jax.device_put(self.node_feats, rep)
+
+    def _make_cohort(self, cfg: tgn.TGNConfig) -> _ShardedCohort:
+        return _ShardedCohort(cfg, self.use_kernels, self.params, self.mesh)
+
+    def set_state(self, tid: str, st: mailbox.VertexState) -> None:
+        super().set_state(tid, st)
+        cohort = self.cohort_of(tid)
+        cohort.state = jax.device_put(cohort.state, cohort.state_shardings)
+
+    def _cohort_info(self, c) -> dict:
+        return {**super()._cohort_info(c), "capacity": c.capacity}
+
+    def describe(self) -> dict:
+        return {**super().describe(), "mesh": dict(self.mesh.shape)}
+
+
+# ---------------------------------------------------------------------------
+# tenant snapshot / restore / migration (works on ANY SessionManager)
+# ---------------------------------------------------------------------------
+
+
+def snapshot_tenant(mgr: SessionManager, tid: str, root: str, *,
+                    step: int = 0, keep: int = 3,
+                    extra_meta: dict | None = None) -> str:
+    """Atomically snapshot one tenant's VertexState + serving metadata.
+
+    Layout: ``<root>/<tid>/step_XXXXXXXX/`` via ``checkpoint.save`` (tmp
+    dir + rename, per-leaf crc32, last ``keep`` steps retained). ``step``
+    is the caller's stream position (e.g. rounds served) so successive
+    snapshots version the tenant's trajectory. The manifest meta carries
+    the resolved variant and full TGNConfig, which ``restore_tenant``
+    validates against the target session.
+    """
+    cohort = mgr.cohort_of(tid)
+    st = mgr.state_of(tid)
+    meta = {"tenant": tid,
+            "variant": pl.variant_name(cohort.cfg),
+            "config": dataclasses.asdict(cohort.cfg),
+            "use_kernels": mgr.use_kernels}
+    if extra_meta:
+        meta.update(extra_meta)
+    return ckpt.save(os.path.join(root, tid), step, st._asdict(),
+                     meta=meta, keep=keep)
+
+
+def snapshot_meta(root: str, tid: str, *, step: int | None = None) -> dict:
+    """Read a snapshot's manifest meta without loading any array."""
+    d = os.path.join(root, tid)
+    if step is None:
+        step = ckpt.latest_step(d)
+        if step is None:
+            raise FileNotFoundError(f"no snapshot for tenant {tid!r} under "
+                                    f"{root}")
+    with open(os.path.join(d, f"step_{step:08d}", "manifest.json")) as f:
+        return json.load(f)["meta"]
+
+
+def list_snapshots(root: str) -> dict:
+    """``{tenant id: latest step}`` of every restorable snapshot."""
+    if not os.path.isdir(root):
+        return {}
+    out = {}
+    for tid in sorted(os.listdir(root)):
+        step = ckpt.latest_step(os.path.join(root, tid))
+        if step is not None:
+            out[tid] = step
+    return out
+
+
+def restore_tenant(mgr: SessionManager, root: str, tid: str, *,
+                   name: str | None = None, step: int | None = None) -> str:
+    """Restore a snapshotted tenant into ``mgr`` and return its id.
+
+    The target may be a different cohort, a different mesh shape, or the
+    unsharded session — snapshots hold full logical arrays, the target
+    recomputes placement (elastic path). The snapshot's full TGNConfig
+    must match the config the target resolves for its variant; mismatch
+    raises before any state is touched. Loads are crc-verified by
+    ``checkpoint.restore``.
+    """
+    d = os.path.join(root, tid)
+    meta = snapshot_meta(root, tid, step=step)
+    want = meta["config"]
+    new = mgr.add_tenant(meta["variant"], name=name or tid,
+                         reservoir_tau=want.get("reservoir_tau"))
+    cohort = mgr.cohort_of(new)
+    got = dataclasses.asdict(cohort.cfg)
+    if got != want:
+        mgr.remove_tenant(new)
+        diff = sorted(k for k in set(want) | set(got)
+                      if want.get(k) != got.get(k))
+        raise ValueError(
+            f"snapshot {tid!r} was taken with config fields "
+            f"{ {k: want.get(k) for k in diff} } but this session resolves "
+            f"{ {k: got.get(k) for k in diff} } — shared parameter axes and "
+            "table dims must match to continue the trajectory")
+    tree_like = cohort.pipeline.init_state()._asdict()
+    state, _ = ckpt.restore(d, tree_like, step=step)
+    mgr.set_state(new, mailbox.VertexState(**state))
+    return new
+
+
+def migrate_tenant(src: SessionManager, tid: str, dst: SessionManager,
+                   root: str, *, step: int | None = None,
+                   name: str | None = None, keep: int = 3) -> str:
+    """Move a live tenant between sessions through a durable snapshot:
+    snapshot on ``src``, restore into ``dst`` (any mesh shape), then
+    release the source slot. Returns the tenant's id in ``dst``.
+
+    ``step`` defaults to one past the tenant's latest snapshot under
+    ``root``, so a migration never writes a step that sorts below (and
+    would lose the latest-step race against) its own history."""
+    if step is None:
+        prev = ckpt.latest_step(os.path.join(root, tid))
+        step = 0 if prev is None else prev + 1
+    snapshot_tenant(src, tid, root, step=step, keep=keep)
+    new = restore_tenant(dst, root, tid, name=name, step=step)
+    src.remove_tenant(tid)
+    return new

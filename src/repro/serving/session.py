@@ -83,19 +83,23 @@ class _Cohort:
         # jit argument) because the packed layouts carry static metadata.
         self.aux = self.pipeline.prepare(params)
         self.tids: list[str] = []
-        self.state = None           # stacked VertexState, leaves (T, ...)
-        step, aux = self.pipeline.step, self.aux
+        self.state = None           # stacked VertexState, leaves (C, ...)
+        self._build_launches()
 
-        def one(params, state, batch, ef, nf):
-            return step(params, aux, state, batch, ef, nf)
-
-        self._vstep = jax.jit(jax.vmap(one,
-                                       in_axes=(None, 0, 0, None, None)))
+    def _build_launches(self) -> None:
+        """Compile the cohort launches (subclass hook: the sharded cohort
+        rebuilds these with mesh placements and state donation)."""
+        self._vstep = self.pipeline.batched_step(self.aux)
 
         # single-tenant peek fast path: the same vmapped computation with
         # the expand/slice fused into ONE jit, so the hot timing hook
         # (StreamingEngine.step_on_device -> fig5/6/7 sweeps) pays no
         # eager re-stacking or out-of-jit vertex-table slicing.
+        step, aux = self.pipeline.step, self.aux
+
+        def one(params, state, batch, ef, nf):
+            return step(params, aux, state, batch, ef, nf)
+
         def one_t(params, state, batch, ef, nf):
             out = jax.vmap(one, in_axes=(None, 0, 0, None, None))(
                 params, state, jax.tree.map(lambda x: x[None], batch),
@@ -108,28 +112,47 @@ class _Cohort:
     def size(self) -> int:
         return len(self.tids)
 
+    @property
+    def capacity(self) -> int:
+        """Rows of the stacked tables. Equal to ``size`` here; the sharded
+        cohort pads to a multiple of the mesh tenant axis (extra slots are
+        idle-masked every round)."""
+        return 0 if self.state is None else int(self.state.memory.shape[0])
+
+    def _fit(self, state):
+        """Lay out freshly grown/shrunk stacked tables (subclass hook:
+        pad to capacity and place on the mesh)."""
+        return state
+
     def add(self, tid: str) -> None:
         row = jax.tree.map(lambda x: x[None], self.pipeline.init_state())
         if self.state is None:
-            self.state = row
+            st = row
         else:
-            self.state = jax.tree.map(
-                lambda t, r: jnp.concatenate([t, r], axis=0), self.state, row)
+            real = jax.tree.map(lambda x: x[:self.size], self.state)
+            st = jax.tree.map(lambda t, r: jnp.concatenate([t, r], axis=0),
+                              real, row)
         self.tids.append(tid)
+        self.state = self._fit(st)
 
     def remove(self, tid: str) -> None:
+        """Release the tenant's slot eagerly: the stacked tables shrink to
+        the remaining tenants (plus mesh padding in the sharded cohort) —
+        a departed tenant never leaves a dead row behind."""
         i = self.tids.index(tid)
+        n = self.size
         self.tids.pop(i)
         if not self.tids:
             self.state = None
             return
-        keep = np.array([j for j in range(self.state.memory.shape[0])
-                         if j != i])
-        self.state = jax.tree.map(lambda x: x[keep], self.state)
+        keep = np.array([j for j in range(n) if j != i])
+        self.state = self._fit(jax.tree.map(lambda x: x[keep], self.state))
 
     def launch(self, params: dict, stacked_batch: tuple, edge_feats,
-               node_feats) -> tgn.BatchOut:
-        """One device launch advancing every tenant slot of this cohort."""
+               node_feats, commit: bool = False) -> tgn.BatchOut:
+        """One device launch advancing every tenant slot of this cohort.
+        ``commit`` marks launches whose returned state will replace
+        ``self.state`` (the sharded cohort donates the old buffers then)."""
         return self._vstep(params, self.state, stacked_batch, edge_feats,
                            node_feats)
 
@@ -172,6 +195,10 @@ class SessionManager:
         self.metrics: list[dict] = []
 
     # -- tenant lifecycle ----------------------------------------------
+    def _make_cohort(self, cfg: tgn.TGNConfig) -> _Cohort:
+        """Cohort factory (the sharded session swaps in mesh-placed ones)."""
+        return _Cohort(cfg, self.use_kernels, self.params)
+
     def _tenant_cfg(self, variant, reservoir_tau) -> tgn.TGNConfig:
         base = self.base_cfg
         if variant is None:
@@ -206,8 +233,7 @@ class SessionManager:
             raise ValueError(f"tenant {tid!r} already exists")
         cohort = self._cohorts.get(cfg)
         if cohort is None:
-            cohort = self._cohorts[cfg] = _Cohort(cfg, self.use_kernels,
-                                                  self.params)
+            cohort = self._cohorts[cfg] = self._make_cohort(cfg)
         cohort.add(tid)
         self._tenant_cohort[tid] = cohort
         return tid
@@ -237,21 +263,34 @@ class SessionManager:
         cohort.state = jax.tree.map(lambda t, r: t.at[i].set(r),
                                     cohort.state, st)
 
+    def _cohort_info(self, c: _Cohort) -> dict:
+        return {"tenants": tuple(c.tids), **c.pipeline.describe()}
+
     def describe(self) -> dict:
-        """Cohort layout: variant -> (tenant ids, resolved stage backends)."""
-        return {c.pipeline.variant: {"tenants": tuple(c.tids),
-                                     **c.pipeline.describe()}
-                for c in self._cohorts.values()}
+        """Cohort layout: variant -> (tenant ids, resolved stage backends).
+        Cohorts that differ only in ``reservoir_tau`` share a variant name;
+        the later ones are disambiguated with an ``@tau=`` suffix so no
+        cohort's entry is silently overwritten."""
+        out = {}
+        for c in self._cohorts.values():
+            key = c.pipeline.variant
+            if key in out:
+                key = f"{key}@tau={c.cfg.reservoir_tau:g}"
+            out[key] = self._cohort_info(c)
+        return out
 
     # -- the round step ------------------------------------------------
-    def _cohort_round(self, cohort: _Cohort, submitted: dict) -> tgn.BatchOut:
+    def _cohort_round(self, cohort: _Cohort, submitted: dict,
+                      commit: bool = False) -> tgn.BatchOut:
         B = max(d[0].shape[0] for d in submitted.values())
         devs = [( _pad_dev(submitted[tid], B) if tid in submitted
                   else _idle_dev(B)) for tid in cohort.tids]
+        # mesh-padding slots of a sharded cohort idle every round
+        devs += [_idle_dev(B)] * (cohort.capacity - len(devs))
         stacked = tuple(jnp.stack([d[j] for d in devs])
                         for j in range(5))
         return cohort.launch(self.params, stacked, self.edge_feats,
-                             self.node_feats)
+                             self.node_feats, commit=commit)
 
     @staticmethod
     def _slice_out(out: tgn.BatchOut, i: int, b: int,
@@ -300,7 +339,7 @@ class SessionManager:
                          for tid in cohort.tids if tid in batches}
             if not submitted:
                 continue
-            out = self._cohort_round(cohort, submitted)
+            out = self._cohort_round(cohort, submitted, commit=True)
             cohort.state = out.state
             launches += 1
             for i, tid in enumerate(cohort.tids):
@@ -325,7 +364,7 @@ class SessionManager:
         what-if hook; other cohort members are masked as idle)."""
         cohort = self._tenant_cohort[tid]
         dev = _as_device_tuple(batch)
-        if cohort.size == 1:
+        if cohort.size == 1 and cohort.capacity == 1:
             return cohort._vstep1(self.params, cohort.state, dev,
                                   self.edge_feats, self.node_feats)
         out = self._cohort_round(cohort, {tid: dev})

@@ -48,6 +48,21 @@ def test_corruption_detected(tmp_path):
         C.restore(d, _tree())
 
 
+def test_gc_never_collects_the_step_just_written(tmp_path):
+    """A writer whose step counter lags the directory's history (e.g. a
+    restarted serving process) must not have its fresh checkpoint GC'd the
+    instant it commits."""
+    d = str(tmp_path)
+    for s in (3, 4, 5):
+        C.save(d, s, _tree(), keep=3)
+    final = C.save(d, 2, _tree(), keep=3)   # sorts below the keep window
+    assert os.path.isdir(final)
+    out, _ = C.restore(d, _tree(), step=2)  # and is restorable
+    np.testing.assert_array_equal(np.asarray(out["a"]),
+                                  np.asarray(_tree()["a"]))
+    assert C.latest_step(d) == 5            # history still wins "latest"
+
+
 def test_tmp_dirs_ignored(tmp_path):
     d = str(tmp_path)
     C.save(d, 1, _tree())
@@ -78,6 +93,96 @@ def test_restore_with_shardings_host_mesh(tmp_path):
     out, _ = C.restore(d, tree, shardings=shardings)
     np.testing.assert_array_equal(np.asarray(out["embed"]),
                                   np.asarray(tree["embed"]))
+
+
+# ---------------------------------------------------------------------------
+# VertexState (tenant snapshot) round-trips — serving/cluster.py over this
+# module; the multi-device restore paths are in tests/test_cluster.py
+# ---------------------------------------------------------------------------
+
+
+def _live_tenant(f_mem=8, n_edges=300):
+    from repro.core import pipeline as pl, tgn
+    from repro.data import stream as stream_mod, temporal_graph as tgd
+    from repro.serving.session import SessionManager
+    g = tgd.wikipedia_like(n_edges=n_edges)
+    cfg = pl.variant_config("sat+lut+np4", n_nodes=g.cfg.n_nodes,
+                            n_edges=g.n_edges, f_edge=172, f_mem=f_mem,
+                            f_time=f_mem, f_emb=f_mem, m_r=10)
+    params = tgn.init_params(jax.random.key(0), cfg)
+    mgr = SessionManager(params, jnp.asarray(g.edge_feats), model=cfg)
+    tid = mgr.add_tenant()
+    for b in list(stream_mod.fixed_count(g, 50))[:3]:
+        mgr.step({tid: b})
+    return mgr, tid, cfg, params, g
+
+
+def test_vertex_state_snapshot_roundtrip_crc(tmp_path):
+    """A live tenant's VertexState survives snapshot_tenant/restore_tenant
+    bitwise; every leaf is crc32-verified and a flipped byte is caught."""
+    from repro.serving import cluster as cl
+    mgr, tid, cfg, params, g = _live_tenant()
+    root = str(tmp_path)
+    final = cl.snapshot_tenant(mgr, tid, root, step=3)
+    meta = cl.snapshot_meta(root, tid)
+    assert meta["variant"] == "sat+lut+np4" and meta["tenant"] == tid
+    fresh = cl.SessionManager(params, jnp.asarray(g.edge_feats), model=cfg)
+    revived = cl.restore_tenant(fresh, root, tid, name="revived")
+    a, b = mgr.state_of(tid), fresh.state_of(revived)
+    for f in a._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(a, f)),
+                                      np.asarray(getattr(b, f)),
+                                      err_msg=f)
+    # silent corruption of one payload -> IOError at restore
+    target = os.path.join(final, "arr_00000.npy")
+    data = bytearray(open(target, "rb").read())
+    data[-1] ^= 0xFF
+    open(target, "wb").write(bytes(data))
+    broke = cl.SessionManager(params, jnp.asarray(g.edge_feats), model=cfg)
+    with pytest.raises(IOError):
+        cl.restore_tenant(broke, root, tid)
+
+
+def test_vertex_state_crash_mid_write_recovery(tmp_path):
+    """A crash mid-snapshot leaves only a .tmp dir: the previous snapshot
+    stays the restorable latest, and the next save garbage-collects the
+    torn one."""
+    from repro.serving import cluster as cl
+    mgr, tid, _cfg, _params, _g = _live_tenant()
+    root = str(tmp_path)
+    cl.snapshot_tenant(mgr, tid, root, step=1)
+    torn = os.path.join(root, tid, "step_00000002.tmp")
+    os.makedirs(torn)
+    open(os.path.join(torn, "arr_00000.npy"), "wb").write(b"partial")
+    assert C.latest_step(os.path.join(root, tid)) == 1
+    assert cl.list_snapshots(root) == {tid: 1}
+    cl.snapshot_tenant(mgr, tid, root, step=2)
+    assert not os.path.exists(torn)
+    assert C.latest_step(os.path.join(root, tid)) == 2
+
+
+def test_vertex_state_restore_with_mesh_shardings(tmp_path):
+    """The elastic path at the checkpoint layer: a snapshot holds full
+    logical arrays, so a restore may place them with whatever
+    NamedShardings a (differently shaped) target mesh prescribes."""
+    from repro.core import mailbox
+    from repro.distributed import tgn_sharding as tsh
+    from repro.serving import cluster as cl
+    mgr, tid, _cfg, _params, _g = _live_tenant()
+    root = str(tmp_path)
+    cl.snapshot_tenant(mgr, tid, root, step=1)
+    st = mgr.state_of(tid)
+    mesh = tsh.make_tenant_mesh("tenant=1,vertex=1")
+    shardings = tsh.make_shardings(
+        mesh, tsh.state_specs(mesh, st, stacked=False))
+    out, meta = C.restore(os.path.join(root, tid), st._asdict(),
+                          shardings=shardings._asdict())
+    restored = mailbox.VertexState(**out)
+    for f in st._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(st, f)),
+                                      np.asarray(getattr(restored, f)),
+                                      err_msg=f)
+    assert restored.memory.sharding.mesh.axis_names == ("tenant", "vertex")
 
 
 def test_lm_restart_determinism(tmp_path):

@@ -189,6 +189,40 @@ def test_kernel_backends_serve_multitenant(small_graph):
         np.testing.assert_allclose(mk, mr, atol=2e-5)
 
 
+def test_remove_tenant_releases_slots_eagerly(small_graph):
+    """Removing a tenant shrinks the cohort's stacked tables immediately
+    (no dead rows), survivors' states round-trip through the shrink
+    bitwise, and a removed tenant's slot is really gone."""
+    g = small_graph
+    dims = _dims(g, f=8)
+    cfg = pl.variant_config("sat+lut+np4", **dims)
+    params = tgn.init_params(jax.random.key(6), cfg)
+    mgr = SessionManager(params, jnp.asarray(g.edge_feats), model=cfg)
+    tids = [mgr.add_tenant() for _ in range(4)]
+    cohort = mgr.cohort_of(tids[0])
+    batches = list(_tenant_stream(g, 0, rounds=2))
+    mgr.step({t: batches[0] for t in tids})
+    assert cohort.capacity == 4 == cohort.state.memory.shape[0]
+    survivors = {t: mgr.state_of(t) for t in tids if t != tids[1]}
+    mgr.remove_tenant(tids[1])               # middle slot: indices shift
+    assert cohort.capacity == 3 == cohort.state.memory.shape[0]
+    for t, st in survivors.items():
+        _assert_state_equal(st, mgr.state_of(t), msg=f"survivor {t}")
+    with pytest.raises(KeyError):
+        mgr.state_of(tids[1])
+    # set_state/state_of round-trip still lands on the right slot
+    mgr.set_state(tids[2], survivors[tids[0]])
+    _assert_state_equal(mgr.state_of(tids[2]), survivors[tids[0]],
+                        msg="set_state after remove")
+    out = mgr.step({t: batches[1] for t in survivors})
+    assert set(out) == set(survivors)
+    # removing the rest tears the cohort down entirely
+    for t in survivors:
+        mgr.remove_tenant(t)
+    assert mgr.tenants == () and cohort.state is None
+    assert cohort.capacity == 0
+
+
 def test_tenant_lifecycle_and_errors(small_graph):
     g = small_graph
     dims = _dims(g, f=8)
@@ -204,6 +238,14 @@ def test_tenant_lifecycle_and_errors(small_graph):
         mgr.add_tenant("teacher")
     b = mgr.add_tenant("sat+lut+np4+reservoir", reservoir_tau=3600.0)
     assert "tau=3600" in mgr.cohort_of(b).pipeline.describe()["sampler"]
+    # cohorts differing only in tau share a variant name: describe must
+    # keep BOTH entries (tau-suffixed), not silently overwrite one
+    c = mgr.add_tenant("sat+lut+np4+reservoir", reservoir_tau=60.0)
+    taus = {k: v for k, v in mgr.describe().items() if "reservoir" in k}
+    assert len(taus) == 2
+    assert any(k.endswith("@tau=60") for k in taus)
+    assert {t for v in taus.values() for t in v["tenants"]} == {b, c}
+    mgr.remove_tenant(c)
     with pytest.raises(KeyError, match="unknown tenants"):
         mgr.step({"nope": next(iter(_tenant_stream(g, 0)))})
     mgr.remove_tenant(a)

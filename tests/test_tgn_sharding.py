@@ -1,0 +1,101 @@
+"""Vertex-state sharding rules (distributed/tgn_sharding.py): spec shapes,
+divisibility degradation, capacity math, and mesh-spec parsing. Pure spec
+computation — runs on a single device (the multi-device launch behavior is
+pinned by tests/test_cluster.py under make test-sharded)."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import mailbox, tgn
+from repro.distributed import tgn_sharding as tsh
+
+
+def _mesh(**sizes):
+    """A mesh over logical axes backed by repeats of the one real device
+    (spec-validation only — never used to launch)."""
+    n = int(np.prod(list(sizes.values()))) if sizes else 1
+    devs = np.asarray([jax.devices()[0]] * n).reshape(tuple(sizes.values()))
+    return Mesh(devs, tuple(sizes))
+
+
+def _like(n_nodes=10_000, f_mem=16):
+    return jax.eval_shape(
+        lambda: mailbox.init_state(mailbox.TableConfig(n_nodes=n_nodes,
+                                                       f_mem=f_mem)))
+
+
+def test_stacked_specs_tenant_axis():
+    specs = tsh.state_specs(_mesh(tenant=8), _like())
+    assert tuple(specs.memory) == ("tenant", None, None)
+    assert tuple(specs.last_update) == ("tenant", None)
+    assert tuple(specs.nbr_ids) == ("tenant", None, None)
+
+
+def test_vertex_axis_applied_when_divisible():
+    specs = tsh.state_specs(_mesh(tenant=2, vertex=2), _like())
+    assert tuple(specs.memory) == ("tenant", "vertex", None)
+    assert tuple(specs.mail_ts) == ("tenant", "vertex")
+
+
+def test_vertex_axis_dropped_when_not_divisible():
+    # V=10001 does not divide a 2-way vertex axis -> replicated V dim,
+    # tenant axis kept (same degrade policy as sharding._validate)
+    specs = tsh.state_specs(_mesh(tenant=2, vertex=2), _like(n_nodes=10_001))
+    assert tuple(specs.memory) == ("tenant", None, None)
+
+
+def test_unstacked_specs_for_single_state():
+    specs = tsh.state_specs(_mesh(vertex=2), _like(), stacked=False)
+    assert tuple(specs.memory) == ("vertex", None)
+    assert tuple(specs.nbr_cursor) == ("vertex",)
+
+
+def test_batch_and_out_specs():
+    mesh = _mesh(tenant=4)
+    assert all(tuple(s) == ("tenant", None) for s in tsh.batch_specs(mesh))
+    out = tsh.out_specs(mesh, _like())
+    assert tuple(out.emb_src) == ("tenant",)
+    assert tuple(out.state.memory) == ("tenant", None, None)
+    assert isinstance(out, tgn.BatchOut)
+
+
+def test_tenant_axis_optional():
+    # a vertex-only mesh replicates the tenant dim instead of erroring
+    specs = tsh.state_specs(_mesh(vertex=2), _like())
+    assert tuple(specs.memory) == (None, "vertex", None)
+    assert tuple(tsh.batch_specs(_mesh(vertex=2))[0]) == (None, None)
+
+
+def test_tenant_capacity_rounds_to_axis_multiple():
+    mesh = _mesh(tenant=4)
+    assert [tsh.tenant_capacity(n, mesh) for n in (0, 1, 4, 5, 8, 9)] == \
+        [4, 4, 4, 8, 8, 12]
+    # no tenant axis -> no padding
+    assert tsh.tenant_capacity(3, _mesh(vertex=2)) == 3
+
+
+def test_make_tenant_mesh_specs():
+    m = tsh.make_tenant_mesh(1)
+    assert m.axis_names == ("tenant",) and m.shape["tenant"] == 1
+    m2 = tsh.make_tenant_mesh("tenant=1,vertex=1")
+    assert m2.axis_names == ("tenant", "vertex")
+    assert tsh.make_tenant_mesh(None).shape["tenant"] == jax.device_count()
+
+
+def test_make_tenant_mesh_errors_mention_xla_flags():
+    with pytest.raises(RuntimeError, match="xla_force_host_platform"):
+        tsh.make_tenant_mesh(jax.device_count() * 64)
+    with pytest.raises(ValueError, match="bad mesh clause"):
+        tsh.make_tenant_mesh("tenant:2")
+    with pytest.raises(ValueError, match="duplicate mesh axis"):
+        tsh.make_tenant_mesh("tenant=1,tenant=1")
+    with pytest.raises(ValueError, match="bad size"):
+        tsh.make_tenant_mesh("tenant=zero")
+
+
+def test_make_shardings_wraps_specs():
+    mesh = _mesh(tenant=2)
+    sh = tsh.make_shardings(mesh, tsh.state_specs(mesh, _like()))
+    assert sh.memory.spec == P("tenant", None, None)
+    assert sh.memory.mesh.shape["tenant"] == 2
