@@ -4,18 +4,22 @@
 #   make test-sharded sharded tenant-fabric tests (tests/test_cluster.py)
 #                     on a forced 8-device host mesh — tier-1 runs them
 #                     skipped because conftest.py keeps XLA_FLAGS unset
-#   make bench-smoke  one tiny fig5 sweep through the streaming engine
+#   make bench-smoke  one tiny fig5 sweep through the streaming engine +
+#                     a toy-scale coalesced-vs-per-cohort multitenant sweep
 #   make docs-check   intra-repo doc links resolve + every variant spec in
 #                     docs exists in the pipeline registry
+#   make session-lint the serving round path stages through the in-place
+#                     _HostStager ring buffers (no jnp.pad/jnp.stack/...
+#                     per-tenant staging regressions)
 #   make lint         pyflakes over src/ tests/ benchmarks/ examples/
 #                     (falls back to a bytecode-compile check when
 #                      pyflakes is not installed; see requirements-dev.txt)
-#                     + docs-check + test-sharded preflight
+#                     + docs-check + session-lint + test-sharded preflight
 
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test test-sharded bench-smoke lint docs-check
+.PHONY: test test-sharded bench-smoke lint docs-check session-lint
 
 test:
 	$(PY) -m pytest -x -q
@@ -28,11 +32,18 @@ bench-smoke:
 	$(PY) -c "from benchmarks.fig5_latency_throughput import sweep; \
 	          rows = sweep(batch_sizes=(25,), n_edges=600, f_mem=16); \
 	          [print(r) for r in rows]"
+	$(PY) -c "from benchmarks.multitenant import coalesced_sweep; \
+	          rows = coalesced_sweep(tenant_counts=(3,), cohort_counts=(3,), \
+	              batch=16, rounds=4, n_edges=600, f_mem=16); \
+	          [print(r) for r in rows]"
 
 docs-check:
 	$(PY) tools/docs_check.py
 
-lint: docs-check test-sharded
+session-lint:
+	$(PY) tools/session_lint.py
+
+lint: docs-check session-lint test-sharded
 	@if $(PY) -c "import pyflakes" 2>/dev/null; then \
 	    $(PY) -m pyflakes src benchmarks examples tests/*.py; \
 	else \

@@ -1,10 +1,17 @@
-"""Multi-tenant throughput scaling: one vmapped launch vs tenant count.
+"""Multi-tenant throughput scaling: launch coalescing vs tenant count.
 
-The SessionManager advances every same-variant tenant stream in ONE device
-launch (stacked VertexState + ``jax.vmap``); the alternative is stepping N
-StreamingEngine sessions back-to-back (N launches). This sweep measures
-aggregate edges/s of both dispatch modes as the tenant fleet grows, plus a
-mixed-sampler fleet (one cohort per sampler backend).
+Two dispatch axes, both measured here:
+
+  * batched vs sequential — the SessionManager advances every same-variant
+    tenant in ONE vmapped launch; the alternative is stepping N
+    StreamingEngine sessions back-to-back (N launches);
+  * coalesced vs per-cohort — a MIXED fleet (several variants) used to pay
+    one launch PER COHORT per round; ``pipeline.CoalescedRound`` fuses the
+    whole round into one compiled execution fed by one in-place-staged
+    ``device_put`` (``SessionManager(coalesce=True)``, the default).
+    ``coalesced_sweep`` measures aggregate edges/s of both dispatch modes
+    over a (cohorts x tenants) grid — the dispatch-bound small-batch
+    streaming regime the paper's single-pass pipeline targets.
 
     PYTHONPATH=src python -m benchmarks.multitenant
 """
@@ -22,6 +29,12 @@ from repro.data import temporal_graph as tgd
 from repro.serving.engine import StreamingEngine
 from repro.serving.session import SessionManager
 
+#: Cohort ladder of the mixed fleets: the prune axis plus a sampler cohort
+#: (a session shares one parameter set, so attention+encoder are fixed and
+#: fleets mix the per-tenant axes: prune_k and the sampler backend).
+MIXED_VARIANTS = ("sat+lut+np4", "sat+lut+np2", "sat+lut+np4+reservoir",
+                  "sat+lut+np4+uniform", "sat+lut+np6")
+
 
 def _dims(g, f_mem):
     return dict(n_nodes=g.cfg.n_nodes, n_edges=g.n_edges, f_edge=172,
@@ -34,12 +47,18 @@ def _tenant_batches(g, i, batch, rounds):
         g, batch, window=slice(lo, lo + batch * rounds), seed=i))
 
 
-def _time_rounds(step_round, rounds, warmup=1):
+def _time_rounds(step_round, rounds, warmup=1, sync=None):
+    """Wall seconds for rounds [warmup, rounds); ``sync`` drains async
+    session dispatch before each clock read (engines block themselves)."""
     for r in range(warmup):
         step_round(r)
+    if sync is not None:
+        sync()
     t0 = time.perf_counter()
     for r in range(warmup, rounds):
         step_round(r)
+    if sync is not None:
+        sync()
     return time.perf_counter() - t0
 
 
@@ -60,7 +79,8 @@ def sweep(tenant_counts=(1, 2, 4, 8), batch: int = 100, rounds: int = 6,
         tids = [mgr.add_tenant() for _ in range(T)]
         dt_b = _time_rounds(
             lambda r: mgr.step({t: feeds[i][r]
-                                for i, t in enumerate(tids)}), rounds)
+                                for i, t in enumerate(tids)}), rounds,
+            sync=mgr.sync)
 
         engines = [StreamingEngine.from_variant(variant, params, ef,
                                                 use_kernels=use_kernels,
@@ -84,7 +104,7 @@ def sweep(tenant_counts=(1, 2, 4, 8), batch: int = 100, rounds: int = 6,
 
 def mixed_fleet(batch: int = 100, rounds: int = 6, n_edges: int = 3000,
                 f_mem: int = 32):
-    """A fleet mixing sampler policies: one launch per cohort per round."""
+    """A fleet mixing sampler policies: 3 cohorts, ONE coalesced launch."""
     g = tgd.wikipedia_like(n_edges=n_edges)
     dims = _dims(g, f_mem)
     cfg = pl.variant_config("sat+lut+np4", **dims)
@@ -96,9 +116,49 @@ def mixed_fleet(batch: int = 100, rounds: int = 6, n_edges: int = 3000,
     feeds = [_tenant_batches(g, i, batch, rounds) for i in range(len(tids))]
     for r in range(rounds):
         mgr.step({t: feeds[i][r] for i, t in enumerate(tids)})
-    return {"cohorts": len(mgr.describe()),
-            "launches_per_round": mgr.metrics[-1]["launches"],
-            **mgr.summary()}
+    return {"cohorts": len(mgr.describe()), **mgr.summary()}
+
+
+def coalesced_sweep(tenant_counts=(2, 4, 8, 16), cohort_counts=(1, 2, 3),
+                    batch: int = 25, rounds: int = 22, n_edges: int = 4000,
+                    f_mem: int = 32):
+    """Coalesced (one fused launch per round) vs per-cohort (one launch
+    per cohort per round) aggregate edges/s over a (cohorts x tenants)
+    grid of mixed fleets — small streaming batches, the dispatch-bound
+    regime the coalesced round targets."""
+    g = tgd.wikipedia_like(n_edges=n_edges)
+    dims = _dims(g, f_mem)
+    cfg = pl.variant_config("sat+lut+np4", **dims)
+    params = tgn.init_params(jax.random.key(0), cfg)
+    ef = jnp.asarray(g.edge_feats)
+    rows = []
+    for C in cohort_counts:
+        variants = MIXED_VARIANTS[:C]
+        for T in tenant_counts:
+            if T < C:
+                continue
+            feeds = [_tenant_batches(g, i, batch, rounds) for i in range(T)]
+            eps = {}
+            for mode, coalesce in (("coalesced", True),
+                                   ("per_cohort", False)):
+                mgr = SessionManager(params, ef, model=cfg,
+                                     coalesce=coalesce)
+                tids = [mgr.add_tenant(variants[i % C]) for i in range(T)]
+                dt = _time_rounds(
+                    lambda r: mgr.step({t: feeds[i][r]
+                                        for i, t in enumerate(tids)}),
+                    rounds, warmup=2, sync=mgr.sync)
+                eps[mode] = (rounds - 2) * batch * T / dt
+                eps[f"{mode}_launches"] = mgr.metrics[-1]["launches"]
+            rows.append({
+                "cohorts": C, "tenants": T, "batch": batch,
+                "coalesced_eps": round(eps["coalesced"]),
+                "per_cohort_eps": round(eps["per_cohort"]),
+                "speedup": round(eps["coalesced"] / eps["per_cohort"], 2),
+                "launches_per_round": (eps["coalesced_launches"],
+                                       eps["per_cohort_launches"]),
+            })
+    return rows
 
 
 def main(full: bool = False):
@@ -113,6 +173,16 @@ def main(full: bool = False):
     mixed = mixed_fleet()
     print(f"-- mixed-sampler fleet (np4 x2 / uniform / reservoir): {mixed}")
     save_json("multitenant.json", {"sweep": rows, "mixed": mixed})
+
+    print("== coalesced round (one launch) vs per-cohort launches ==")
+    crows = coalesced_sweep()
+    for r in crows:
+        print(f"  C={r['cohorts']} T={r['tenants']:3d} "
+              f"coalesced={r['coalesced_eps']:8d} E/s  "
+              f"per-cohort={r['per_cohort_eps']:8d} E/s  "
+              f"speedup={r['speedup']:.2f}x  "
+              f"launches/round={r['launches_per_round']}")
+    save_json("multitenant_coalesced.json", {"sweep": crows})
 
 
 if __name__ == "__main__":

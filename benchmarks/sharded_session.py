@@ -65,9 +65,11 @@ def sweep(tenant_counts=(2, 4, 8), batch: int = 100, rounds: int = 6,
                                          mesh=f"tenant={width}"))
             tids = [mgr.add_tenant() for _ in range(T)]
             mgr.step({t: fs[i][0] for i, t in enumerate(tids)})  # warmup/jit
+            mgr.sync()                  # steps are async: drain before/after
             t0 = time.perf_counter()
             for r in range(1, rounds):
                 mgr.step({t: fs[i][r] for i, t in enumerate(tids)})
+            mgr.sync()
             dt = time.perf_counter() - t0
             rows.append({
                 "tenants": T, "mesh": width, "batch": batch,

@@ -3,9 +3,10 @@
 Four tenants — think per-region transaction feeds — share one SessionManager.
 Two run the paper's NP(M) student, one samples neighbors uniformly, one with
 a time-decayed reservoir (the sampler-backend axis of the variant registry).
-Same-variant tenants form a cohort advanced by ONE vmapped device launch per
-round; per-tenant trajectories are bitwise-identical to running each stream
-through its own StreamingEngine.
+Same-variant tenants form a cohort, and the WHOLE mixed-cohort round is ONE
+coalesced device launch (pipeline.CoalescedRound) fed by one in-place-staged
+host transfer; per-tenant trajectories are bitwise-identical to running each
+stream through its own StreamingEngine.
 
     PYTHONPATH=src python examples/multi_tenant_serving.py
 """

@@ -32,6 +32,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import mailbox, memory, stages, tgn
 
@@ -330,7 +331,116 @@ class TGNPipeline:
     def describe(self) -> dict:
         """Variant + resolved stage backends (introspection/logging)."""
         return {"variant": self.variant, "use_kernels": self.use_kernels,
-                **self.stages.names}
+                "lane": self.stages.variant_id, **self.stages.names}
+
+
+class CoalescedRound:
+    """ONE compiled launch advancing EVERY cohort of a serving round.
+
+    The per-cohort launch (``batched_step``) pays one dispatch per cohort
+    per round — the dispatch-bound regime StreamTGN identifies for small
+    streaming batches. ``CoalescedRound`` fuses the whole round: the
+    cohorts are laid out as contiguous row segments of a common
+    **super-batch** (rows = sum of cohort capacities, columns = the shared
+    padded batch width) and one ``jax.jit`` compiles every segment's
+    vmapped step side by side, so a round costs one XLA execution no
+    matter how many variants the fleet mixes.
+
+    Variant-stage selection is POSITIONAL and static: each segment's rows
+    are advanced by the step closure of the pipeline that built it, bound
+    at trace time. ``lane_ids[row]`` (the ``stages.variant_id`` of the
+    program advancing that row) is the introspection/guard view of that
+    mapping — tests and ``describe`` read it; the launch itself never
+    branches on it. A traced per-row ``lax.switch`` would be the dynamic
+    alternative, but under ``vmap`` a batched branch index lowers to
+    computing every branch for every row and selecting — cohorts ×
+    variants work, the opposite of a fusion win — so rows are instead
+    pinned to their lane at build time and a lane change is a relayout
+    (recompile), exactly like cohort growth today.
+
+    Cohort states stay resident per cohort (``states`` is a tuple aligned
+    with the segments — no per-round concatenation of the big vertex
+    tables); the super-batch is the only physically fused operand. Pad
+    rows (idle tenants, mesh padding, batch-width padding) are
+    all-``valid=False`` lanes: the LWW committer and the OOB-redirected
+    ring insert make them bitwise no-ops, so per-tenant trajectories are
+    identical to the per-cohort launches.
+
+    Calling convention::
+
+        outs, edges = round(params, states, superbatch, edge_feats,
+                            node_feats)
+
+    ``outs`` is a per-cohort tuple of ``BatchOut`` (tenant axis leading);
+    ``edges`` is the round's valid-edge count summed INSIDE the launch —
+    a device scalar the caller can keep pending, so steady-state serving
+    never blocks on a D2H sync to meter throughput.
+    """
+
+    def __init__(self, parts, *, donate_state: bool = False,
+                 in_shardings=None, out_shardings=None):
+        """``parts``: sequence of ``(pipeline, aux, rows)`` — one entry per
+        cohort, ``rows`` its stacked-table capacity. ``donate_state``
+        donates the per-cohort state tuple (resident tables updated in
+        place); shardings pin mesh placements exactly as ``batched_step``.
+        """
+        self.parts = tuple((p, a, int(r)) for p, a, r in parts)
+        segments, lanes, lo = [], [], 0
+        for pipe, _aux, rows in self.parts:
+            segments.append((lo, lo + rows))
+            lanes.extend([pipe.stages.variant_id] * rows)
+            lo += rows
+        self.segments = tuple(segments)
+        self.rows = lo
+        #: static per-row lane table of the super-batch (introspection).
+        self.lane_ids = np.asarray(lanes, np.int32)
+        #: number of compiled executions dispatched through this round
+        #: launch (the serving tests' one-launch-per-round guard).
+        self.calls = 0
+
+        steps = [(pipe.step, aux) for pipe, aux, _rows in self.parts]
+        segs = self.segments
+
+        # ``widths`` (static): each segment's padded batch width for this
+        # round — the cohort's max submitted batch size, exactly the B the
+        # per-cohort launch would compile for. Slicing every segment to
+        # its own width (rather than running all at the super-batch's
+        # global width) matters for the BITWISE contract: XLA's lowering
+        # of the embedding math is shape-dependent, so the same real rows
+        # under a different padded width can differ in the last ulp. With
+        # per-segment widths the compiled segment programs are
+        # shape-identical to the per-cohort launches, and jit caches one
+        # executable per widths vector — the same recompile behavior the
+        # per-cohort dispatch has per cohort.
+        def round_fn(params, states, batch, ef, nf, widths):
+            outs = []
+            for (lo, hi), (step, aux), state, w in zip(segs, steps, states,
+                                                       widths):
+                seg = tuple(x[lo:hi, :w] for x in batch)
+
+                def one(p, s, b, e, n, _step=step, _aux=aux):
+                    return _step(p, _aux, s, b, e, n)
+
+                outs.append(jax.vmap(one, in_axes=(None, 0, 0, None, None))(
+                    params, state, seg, ef, nf))
+            return tuple(outs), jnp.sum(batch[4])
+
+        kw = {}
+        if in_shardings is not None:
+            kw["in_shardings"] = in_shardings
+        if out_shardings is not None:
+            kw["out_shardings"] = out_shardings
+        if donate_state:
+            kw["donate_argnums"] = (1,)
+        self._fn = jax.jit(round_fn, static_argnums=(5,), **kw)
+
+    def __call__(self, params, states: tuple, superbatch: tuple,
+                 edge_feats, node_feats=None, *, widths: tuple | None = None):
+        if widths is None:
+            widths = (superbatch[0].shape[1],) * len(self.parts)
+        self.calls += 1
+        return self._fn(params, states, superbatch, edge_feats, node_feats,
+                        tuple(int(w) for w in widths))
 
 
 @functools.lru_cache(maxsize=64)

@@ -69,6 +69,30 @@ class StageBundle(NamedTuple):
     aggregator: object          # (params, aux, nb, s_self, f_self) -> (h, logits)
     committer: object           # LastWriteWinsCommitter
     names: dict                 # stage-name -> backend label (introspection)
+    variant_id: int             # lane id of this stage PROGRAM (variant_lane)
+
+
+#: Process-wide lane registry: every distinct resolved stage *program* (the
+#: knobs that change which code runs inside ``TGNPipeline.step``, not the
+#: table dims) gets a small stable integer id. The coalesced cross-cohort
+#: round dispatcher (``pipeline.CoalescedRound``) uses these ids as its
+#: static lane table: each row of the fused super-batch carries the
+#: variant_id of the stage stack that must advance it.
+_VARIANT_LANES: dict[tuple, int] = {}
+
+
+def variant_lane(cfg, use_kernels: bool = False) -> int:
+    """The lane id of ``cfg``'s resolved stage program.
+
+    Two configs share a lane iff ``build_stages`` would resolve them to the
+    same stage code path: attention/encoder/pruning/sampler (tau included
+    for the reservoir — it is baked into the sampler closure), plus the
+    kernel-backend choice and the ring width the prune clamp sees.
+    """
+    key = (cfg.attention, cfg.encoder, cfg.prune_k, cfg.sampler,
+           float(cfg.reservoir_tau) if cfg.sampler == "reservoir" else None,
+           bool(use_kernels), cfg.m_r)
+    return _VARIANT_LANES.setdefault(key, len(_VARIANT_LANES))
 
 
 # ---------------------------------------------------------------------------
@@ -419,4 +443,5 @@ def build_stages(cfg, use_kernels: bool = False) -> StageBundle:
         memory_updater=muu, sampler=sampler, aggregator=aggregator,
         committer=LastWriteWinsCommitter(),
         names={"memory_updater": muu_name, "sampler": sampler_name,
-               "aggregator": agg_name, "committer": "lww-chronological"})
+               "aggregator": agg_name, "committer": "lww-chronological"},
+        variant_id=variant_lane(cfg, use_kernels))

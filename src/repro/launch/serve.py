@@ -4,8 +4,10 @@
 StreamingEngine (Pallas kernels, prune-then-fetch, LUT, chronological
 commit) and report latency/throughput — the deployment the paper targets.
 With ``--tenants N`` (or ``--tenant-variants``) the stream is split across
-N concurrent tenants served by the multi-tenant SessionManager: one
-vmapped launch per cohort per round, per-tenant states isolated.
+N concurrent tenants served by the multi-tenant SessionManager: the whole
+mixed-cohort round is ONE coalesced compiled launch fed by in-place host
+staging (``--per-cohort`` restores the one-launch-per-cohort baseline),
+per-tenant states isolated.
 
 ``--mesh`` places the fleet on the sharded tenant fabric
 (serving/cluster.py): stacked tenant states and batch inputs shard over
@@ -38,7 +40,16 @@ import numpy as np
 
 
 class _SnapshotHooks:
-    """--snapshot-dir plumbing: periodic fleet snapshots + --restore."""
+    """--snapshot-dir plumbing: periodic fleet snapshots + --restore.
+
+    Periodic (``--snapshot-every``) saves go through a bounded per-tenant
+    background writer (``cluster.TenantSnapshotWriter``): the round loop
+    only captures device-array references, the D2H gather and the atomic
+    commit run on worker threads, and a tenant whose previous snapshot is
+    still being written is skipped that cadence — a snapshot round no
+    longer stalls the fleet. The exit save is synchronous (drain the
+    writer, then write every tenant once more) so shutdown is durable.
+    """
 
     def __init__(self, mgr, args):
         from repro.core import pipeline
@@ -50,6 +61,7 @@ class _SnapshotHooks:
         self.do_restore = args.restore
         self.available = cluster.list_snapshots(self.root)
         self.base_step = {}          # tid -> step its trajectory resumed at
+        self.writer = cluster.TenantSnapshotWriter(self.root)
 
     def restore(self, variant, name):
         """Revive ``name`` from disk if --restore and a snapshot exists
@@ -73,13 +85,31 @@ class _SnapshotHooks:
         return tid
 
     def save(self, rounds):
+        # periodic cadence: overlap snapshot IO with the serving rounds
+        # (bounded: one in-flight write per tenant, stragglers skipped)
+        for tid in self.mgr.tenants:
+            self.writer.submit(self.mgr, tid,
+                               step=self.base_step.get(tid, 0) + rounds)
+
+    def save_final(self, rounds):
         # steps continue from each restored trajectory's snapshot, so a
         # resumed run's saves never sort below (and lose the latest-step
-        # race against) the history they extend
+        # race against) the history they extend. The writer is drained
+        # FIRST (no concurrent writes into a tenant dir its gc could
+        # tear), but a failed background write must not abort the exit
+        # save — that is the moment durability matters most.
+        try:
+            self.writer.close()
+        except Exception as e:
+            print(f"snapshot writer: {e}; writing the exit snapshots "
+                  "synchronously anyway")
         for tid in self.mgr.tenants:
             self.cluster.snapshot_tenant(
                 self.mgr, tid, self.root,
                 step=self.base_step.get(tid, 0) + rounds)
+        if self.writer.skipped:
+            print(f"snapshot writer: {self.writer.skipped} periodic "
+                  "save(s) skipped while a previous write was in flight")
 
 
 def run_tgn(args):
@@ -109,14 +139,15 @@ def run_tgn(args):
         # tenant; same-variant tenants share one vmapped launch per round.
         # (--snapshot-dir forces this path too: snapshots are a session
         # feature, and a 1-tenant session serves bitwise like the engine.)
+        coalesce = not args.per_cohort
         if args.mesh is not None:
             from repro.serving.cluster import ShardedSessionManager
             mgr = ShardedSessionManager(params, edge_feats, node_feats,
                                         model=cfg, use_kernels=True,
-                                        mesh=args.mesh)
+                                        mesh=args.mesh, coalesce=coalesce)
         else:
             mgr = SessionManager(params, edge_feats, node_feats, model=cfg,
-                                 use_kernels=True)
+                                 use_kernels=True, coalesce=coalesce)
         snapshots = (_SnapshotHooks(mgr, args) if args.snapshot_dir
                      else None)
         tids = []
@@ -151,7 +182,7 @@ def run_tgn(args):
                     rounds % args.snapshot_every == 0:
                 snapshots.save(rounds)
         if snapshots:
-            snapshots.save(rounds)
+            snapshots.save_final(rounds)
             steps = {t: snapshots.base_step.get(t, 0) + rounds
                      for t in sorted(mgr.tenants)}
             print(f"snapshots: {steps} -> {args.snapshot_dir}")
@@ -207,6 +238,10 @@ def main():
                     help="comma-separated per-tenant variant specs "
                          "(overrides --tenants; attention+encoder must "
                          "match --variant, sampler/pruning may differ)")
+    ap.add_argument("--per-cohort", action="store_true",
+                    help="dispatch one compiled launch per cohort per "
+                         "round (the pre-coalescing baseline) instead of "
+                         "the fused single-launch round")
     ap.add_argument("--mesh", default=None,
                     help="serve on the sharded tenant fabric: a device-"
                          "mesh spec like '8' or 'tenant=4,vertex=2' "

@@ -69,15 +69,16 @@ class _ShardedCohort(_Cohort):
         rep = tsh.replicated(self.mesh)
         batch_sh = tuple(NamedSharding(self.mesh, s)
                          for s in tsh.batch_specs(self.mesh))
-        out_sh = tsh.make_shardings(self.mesh, tsh.out_specs(self.mesh,
-                                                             like))
+        # the coalesced whole-round launch reuses these per-cohort specs
+        self.out_shardings = tsh.make_shardings(
+            self.mesh, tsh.out_specs(self.mesh, like))
         # node_feats may be None: leave its placement unspecified
         in_sh = (rep, self.state_shardings, batch_sh, rep, None)
         self._vstep = self.pipeline.batched_step(
-            self.aux, in_shardings=in_sh, out_shardings=out_sh)
+            self.aux, in_shardings=in_sh, out_shardings=self.out_shardings)
         self._vstep_commit = self.pipeline.batched_step(
             self.aux, donate_state=True, in_shardings=in_sh,
-            out_shardings=out_sh)
+            out_shardings=self.out_shardings)
 
     def _fit(self, state):
         """Pad the stacked tables to the mesh capacity (idle init-state
@@ -126,6 +127,30 @@ class ShardedSessionManager(SessionManager):
     def _make_cohort(self, cfg: tgn.TGNConfig) -> _ShardedCohort:
         return _ShardedCohort(cfg, self.use_kernels, self.params, self.mesh)
 
+    def _batch_shardings(self) -> tuple:
+        return tuple(NamedSharding(self.mesh, s)
+                     for s in tsh.batch_specs(self.mesh))
+
+    def _make_coalesced(self) -> pl.CoalescedRound:
+        """The fused whole-round launch with every operand's mesh placement
+        pinned: per-cohort states keep their cohort's PartitionSpecs (and
+        are DONATED — resident tables update in place, like the per-cohort
+        commit launch), the super-batch row-shards over the tenant axis
+        (each segment's row count is a capacity, i.e. a multiple of the
+        axis), and the in-launch edge count replicates."""
+        cohorts = list(self._cohorts.values())
+        rep = tsh.replicated(self.mesh)
+        in_sh = (rep, tuple(c.state_shardings for c in cohorts),
+                 self._batch_shardings(), rep, None)
+        out_sh = (tuple(c.out_shardings for c in cohorts), rep)
+        return pl.CoalescedRound(
+            [(c.pipeline, c.aux, c.capacity) for c in cohorts],
+            donate_state=True, in_shardings=in_sh, out_shardings=out_sh)
+
+    def _make_stager(self, rows: int, width: int):
+        from repro.serving.session import _HostStager
+        return _HostStager(rows, width, shardings=self._batch_shardings())
+
     def set_state(self, tid: str, st: mailbox.VertexState) -> None:
         super().set_state(tid, st)
         cohort = self.cohort_of(tid)
@@ -143,6 +168,22 @@ class ShardedSessionManager(SessionManager):
 # ---------------------------------------------------------------------------
 
 
+def _capture_tenant(mgr: SessionManager, tid: str,
+                    extra_meta: dict | None = None) -> tuple[dict, dict]:
+    """Grab a consistent (state pytree, manifest meta) pair for ``tid`` on
+    the serving thread — device arrays are immutable, so the pair stays
+    valid while a background writer gathers and persists it."""
+    cohort = mgr.cohort_of(tid)
+    st = mgr.state_of(tid)
+    meta = {"tenant": tid,
+            "variant": pl.variant_name(cohort.cfg),
+            "config": dataclasses.asdict(cohort.cfg),
+            "use_kernels": mgr.use_kernels}
+    if extra_meta:
+        meta.update(extra_meta)
+    return st._asdict(), meta
+
+
 def snapshot_tenant(mgr: SessionManager, tid: str, root: str, *,
                     step: int = 0, keep: int = 3,
                     extra_meta: dict | None = None) -> str:
@@ -155,16 +196,76 @@ def snapshot_tenant(mgr: SessionManager, tid: str, root: str, *,
     the resolved variant and full TGNConfig, which ``restore_tenant``
     validates against the target session.
     """
-    cohort = mgr.cohort_of(tid)
-    st = mgr.state_of(tid)
-    meta = {"tenant": tid,
-            "variant": pl.variant_name(cohort.cfg),
-            "config": dataclasses.asdict(cohort.cfg),
-            "use_kernels": mgr.use_kernels}
-    if extra_meta:
-        meta.update(extra_meta)
-    return ckpt.save(os.path.join(root, tid), step, st._asdict(),
-                     meta=meta, keep=keep)
+    tree, meta = _capture_tenant(mgr, tid, extra_meta)
+    return ckpt.save(os.path.join(root, tid), step, tree, meta=meta,
+                     keep=keep)
+
+
+class TenantSnapshotWriter:
+    """Bounded per-tenant background snapshot writer: serving rounds never
+    stall on snapshot IO.
+
+    ``submit`` captures the tenant's state on the calling thread (device
+    array references + manifest meta — cheap, no host gather) and hands
+    the D2H gather plus the atomic ``checkpoint.save`` commit to a worker
+    thread. At most ONE snapshot per tenant is in flight: while a
+    tenant's previous write is still running, new submissions for it are
+    skipped (counted in ``skipped``) — the periodic cadence is
+    best-effort, durability comes from the final ``wait()`` + sync save
+    at exit. The on-disk format and the tmp-dir + rename + crc32 commit
+    of ``distributed/checkpoint.py`` are unchanged.
+    """
+
+    def __init__(self, root: str, *, keep: int = 3, max_workers: int = 2):
+        from concurrent.futures import ThreadPoolExecutor
+        self.root = root
+        self.keep = keep
+        self.skipped = 0
+        self.written = 0
+        self._pool = ThreadPoolExecutor(max_workers=max_workers)
+        self._inflight: dict[str, object] = {}
+
+    def submit(self, mgr: SessionManager, tid: str, *, step: int = 0,
+               extra_meta: dict | None = None) -> bool:
+        """Queue a snapshot of ``tid`` at ``step``; returns False when the
+        tenant's previous snapshot is still in flight (skipped)."""
+        prev = self._inflight.get(tid)
+        if prev is not None:
+            if not prev.done():
+                self.skipped += 1
+                return False
+            prev.result()                # surface a failed write loudly
+        tree, meta = _capture_tenant(mgr, tid, extra_meta)
+
+        def work():
+            return ckpt.save(os.path.join(self.root, tid), step, tree,
+                             meta=meta, keep=self.keep)
+
+        self._inflight[tid] = self._pool.submit(work)
+        self.written += 1
+        return True
+
+    def wait(self) -> None:
+        """Join EVERY in-flight write, then re-raise the first failure —
+        a failed write never leaves later ones unjoined."""
+        errors = []
+        for tid, fut in list(self._inflight.items()):
+            try:
+                fut.result()
+            except Exception as e:
+                errors.append((tid, e))
+            del self._inflight[tid]
+        if errors:
+            tid, err = errors[0]
+            raise RuntimeError(
+                f"background snapshot of tenant {tid!r} failed "
+                f"({len(errors)} failure(s) total)") from err
+
+    def close(self) -> None:
+        try:
+            self.wait()
+        finally:
+            self._pool.shutdown(wait=True)
 
 
 def snapshot_meta(root: str, tid: str, *, step: int | None = None) -> dict:

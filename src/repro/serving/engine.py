@@ -26,11 +26,12 @@ elsewhere. Folded/packed kernel parameters are prepared by the pipeline's
 
 Since the multi-tenant SessionManager (serving/session.py) the engine is a
 SINGLE-TENANT VIEW of a session: one tenant in a one-member cohort, stepped
-through the same ``jax.jit(jax.vmap(step))`` launch as a full fleet. That
-keeps single-stream and multi-tenant serving bitwise-identical per tenant
-(vmapped numerics are invariant to the mapped batch size), so an engine can
-be consolidated into a shared session — or a tenant split out into its own
-engine — without a replay divergence.
+through the same compiled round launch as a full fleet (the coalesced
+``pipeline.CoalescedRound`` — trivially one segment here — fed by the
+in-place host stager). That keeps single-stream and multi-tenant serving
+bitwise-identical per tenant (vmapped numerics are invariant to the mapped
+batch size), so an engine can be consolidated into a shared session — or a
+tenant split out into its own engine — without a replay divergence.
 """
 from __future__ import annotations
 

@@ -27,9 +27,20 @@ vmapped XLA numerics are invariant to the batch size along the mapped axis.
 (The randomized sampler backends keep that guarantee by deriving their draws
 from a stateless hash of the batch contents, not from threaded PRNG keys.)
 
+Since the coalesced-round tentpole, a full round is ONE compiled launch
+regardless of cohort count (``pipeline.CoalescedRound``: cohorts are
+contiguous row segments of a common super-batch, variant stages selected
+by the static lane table) and the host side of the round is
+allocation-free: batches are written in place into pre-allocated,
+double-buffered NumPy ring buffers and shipped with a single
+``device_put`` per round, so the H2D transfer of round k+1 overlaps the
+compute of round k. ``coalesce=False`` keeps the original one-launch-per-
+cohort dispatch as the measured baseline (``benchmarks/multitenant.py``)
+— both paths replay bitwise-identically.
+
 Cohorts recompile when their tenant count or padded batch size changes;
 steady-state serving (fixed fleet, fixed batch cap) reuses one executable
-per cohort.
+per cohort (per round, when coalesced).
 """
 from __future__ import annotations
 
@@ -53,6 +64,93 @@ def _as_device_tuple(batch) -> tuple:
         valid = jnp.ones(jnp.asarray(src).shape, bool)
     return (jnp.asarray(src), jnp.asarray(dst), jnp.asarray(eid),
             jnp.asarray(ts), jnp.asarray(valid))
+
+
+def _as_host_tuple(batch) -> tuple:
+    """Normalize an EdgeBatch / 5-tuple to HOST (src,dst,eid,ts,valid)
+    arrays — the form the in-place ring-buffer stager consumes. Already-
+    device arrays are brought back (the engine's pre-staged path); host
+    NumPy batches (the streaming common case) pass through without a copy.
+    """
+    if isinstance(batch, EdgeBatch):
+        batch = (batch.src, batch.dst, batch.eid, batch.ts, batch.valid)
+    src, dst, eid, ts, valid = (np.asarray(x) if x is not None else None
+                                for x in batch)
+    if valid is None:
+        valid = np.ones(src.shape, bool)
+    return src, dst, eid, ts, valid
+
+
+class _HostStager:
+    """Pre-allocated, double-buffered host staging of a round's super-batch.
+
+    The original round path allocated per tenant per round
+    (``jnp.asarray`` + ``jnp.pad`` per batch, then a ``jnp.stack`` per
+    cohort — each a separate device dispatch). The stager instead owns two
+    sets of ``(rows, width)`` NumPy buffers (one per field of the batch
+    five-tuple), fills the submitted rows IN PLACE on the host, and ships
+    the whole super-batch with a single ``device_put`` per round.
+
+    Double buffering: rounds alternate between the two buffer sets, so the
+    (async) H2D transfer of round k can still be draining while round
+    k+1's batches are written into the other set — the transfer overlaps
+    the in-flight compute. Before a set is reused its previous transfer is
+    waited on (a transfer-only wait two rounds stale, not a D2H sync).
+
+    ``width`` grows sticky to the largest batch seen (growth is a
+    relayout: fresh buffers, new launch shape); extra columns and
+    unsubmitted rows are ``valid=False`` padding, which the step turns
+    into bitwise no-ops.
+    """
+
+    DTYPES = (np.int32, np.int32, np.int32, np.float32, np.bool_)
+
+    def __init__(self, rows: int, width: int = 1, shardings=None):
+        self.rows = int(rows)
+        self.width = max(int(width), 1)
+        self.shardings = shardings      # per-field placements (mesh fleets)
+        self._alloc()
+
+    def _alloc(self) -> None:
+        self._bufs = [tuple(np.zeros((self.rows, self.width), dt)
+                            for dt in self.DTYPES) for _ in range(2)]
+        self._inflight: list[tuple | None] = [None, None]
+        self._turn = 0
+
+    def ensure_width(self, width: int) -> None:
+        """Grow the staged batch width (sticky; a relayout)."""
+        if width > self.width:
+            self.drain()                 # old buffers may still be read
+            self.width = int(width)
+            self._alloc()
+
+    def stage(self, row_batches: Mapping[int, tuple]) -> tuple:
+        """Fill ``{row: host five-tuple}`` into the next buffer set and
+        dispatch ONE ``device_put`` for the whole super-batch. Unlisted
+        rows are all-``valid=False`` (idle). Returns the device tuple."""
+        turn = self._turn
+        self._turn = 1 - turn
+        prev = self._inflight[turn]
+        if prev is not None:             # reuse gate: transfer-only wait
+            jax.block_until_ready(prev)
+        buf = self._bufs[turn]
+        for field in buf:
+            field.fill(0)                # deterministic padding rows
+        for row, host in row_batches.items():
+            b = host[0].shape[0]
+            for field, src in zip(buf, host):
+                field[row, :b] = src
+        dev = (jax.device_put(buf, self.shardings)
+               if self.shardings is not None else jax.device_put(buf))
+        self._inflight[turn] = dev
+        return dev
+
+    def drain(self) -> None:
+        """Wait for every outstanding transfer (relayout / teardown)."""
+        for dev in self._inflight:
+            if dev is not None:
+                jax.block_until_ready(dev)
+        self._inflight = [None, None]
 
 
 def _pad_dev(dev: tuple, B: int) -> tuple:
@@ -176,7 +274,7 @@ class SessionManager:
 
     def __init__(self, params: dict, edge_feats, node_feats=None, *,
                  model: tgn.TGNConfig | None = None, variant=None,
-                 use_kernels: bool = False, **dims):
+                 use_kernels: bool = False, coalesce: bool = True, **dims):
         if model is None:
             if variant is None:
                 raise TypeError("pass model=TGNConfig or variant= + dims")
@@ -185,6 +283,7 @@ class SessionManager:
             raise TypeError("model= is exclusive with variant=/dims")
         self.base_cfg = model
         self.use_kernels = use_kernels
+        self.coalesce = coalesce
         self.params = params
         self.edge_feats = jnp.asarray(edge_feats)
         self.node_feats = (jnp.asarray(node_feats)
@@ -193,6 +292,10 @@ class SessionManager:
         self._tenant_cohort: dict[str, _Cohort] = {}
         self._next_id = 0
         self.metrics: list[dict] = []
+        # coalesced-round layout (built lazily, dropped on fleet changes)
+        self._coalesced: pl.CoalescedRound | None = None
+        self._stager: _HostStager | None = None
+        self._drained: tuple[int, float] | None = None   # summary() cache
 
     # -- tenant lifecycle ----------------------------------------------
     def _make_cohort(self, cfg: tgn.TGNConfig) -> _Cohort:
@@ -236,6 +339,7 @@ class SessionManager:
             cohort = self._cohorts[cfg] = self._make_cohort(cfg)
         cohort.add(tid)
         self._tenant_cohort[tid] = cohort
+        self._coalesced = None           # fleet layout changed: relaunch
         return tid
 
     def remove_tenant(self, tid: str) -> None:
@@ -243,6 +347,7 @@ class SessionManager:
         cohort.remove(tid)
         if not cohort.tids:
             self._cohorts.pop(cohort.cfg)
+        self._coalesced = None           # fleet layout changed: relaunch
 
     @property
     def tenants(self) -> tuple:
@@ -319,18 +424,82 @@ class SessionManager:
             attn_logits=one.attn_logits[two], nbr_valid=one.nbr_valid[two],
             nbr_dt=one.nbr_dt[two])
 
-    def step(self, batches: Mapping[str, EdgeBatch | tuple]) -> dict:
-        """Advance every tenant with a submitted batch; one launch per
-        cohort (idle cohort members are masked, unsubmitted cohorts are
-        skipped). Returns ``{tid: BatchOut}`` for the submitted tenants
-        with ``state=None`` — per-tenant states are committed in place;
-        read them via ``state_of``.
-        """
-        unknown = set(batches) - set(self._tenant_cohort)
-        if unknown:
-            raise KeyError(f"unknown tenants {sorted(unknown)}; "
-                           f"registered: {sorted(self._tenant_cohort)}")
-        t0 = time.perf_counter()
+    # -- coalesced dispatch (the default round path) -------------------
+    def _make_coalesced(self) -> pl.CoalescedRound:
+        """Build the fused whole-round launch for the current fleet layout
+        (subclass hook: the sharded session pins mesh placements and
+        donates the resident state buffers)."""
+        return pl.CoalescedRound((c.pipeline, c.aux, c.capacity)
+                                 for c in self._cohorts.values())
+
+    def _make_stager(self, rows: int, width: int) -> _HostStager:
+        """Host-stager factory (subclass hook: mesh batch placements)."""
+        return _HostStager(rows, width)
+
+    def _ensure_layout(self, width: int) -> pl.CoalescedRound:
+        if self._coalesced is None:
+            self._coalesced = self._make_coalesced()
+        if self._stager is None or self._stager.rows != self._coalesced.rows:
+            self._stager = self._make_stager(self._coalesced.rows, width)
+        self._stager.ensure_width(width)
+        return self._coalesced
+
+    def _coalesced_round(self, batches: Mapping) -> tuple[dict, object]:
+        """ONE compiled launch for the whole round: stage every submitted
+        batch into the super-batch ring buffer in place (single
+        ``device_put``), advance all cohorts through the fused launch, and
+        commit each cohort's state. Returns ``(outs, pending edge count)``
+        — the count is a device scalar resolved only in ``summary()``."""
+        host = {tid: _as_host_tuple(b) for tid, b in batches.items()}
+        width = max(h[0].shape[0] for h in host.values())
+        launch = self._ensure_layout(width)
+        cohorts = list(self._cohorts.values())
+        offsets, lo = {}, 0
+        for c in cohorts:
+            offsets[id(c)] = lo
+            lo += c.capacity
+        rows = {}
+        widths = {}
+        for tid, h in host.items():
+            c = self._tenant_cohort[tid]
+            rows[offsets[id(c)] + c.tids.index(tid)] = h
+            widths[id(c)] = max(widths.get(id(c), 1), h[0].shape[0])
+        superbatch = self._stager.stage(rows)
+        states = tuple(c.state for c in cohorts)
+        # per-segment padded widths (static): each cohort steps at ITS
+        # round-max batch size — the exact B the per-cohort launch would
+        # use, which the bitwise contract requires (idle cohorts run a
+        # width-1 masked no-op lane)
+        outs_t, edges = launch(self.params, states, superbatch,
+                               self.edge_feats, self.node_feats,
+                               widths=tuple(widths.get(id(c), 1)
+                                            for c in cohorts))
+        outs: dict[str, tgn.BatchOut] = {}
+        for c, out in zip(cohorts, outs_t):
+            c.state = out.state
+            for i, tid in enumerate(c.tids):
+                if tid in host:
+                    outs[tid] = self._slice_out(out, i, host[tid][0].shape[0])
+        return outs, edges
+
+    def _device_staged(self, batches: Mapping) -> bool:
+        """True when the fleet is a single-tenant view being fed an
+        already-on-device batch tuple (StreamingEngine's prefetched
+        path): round-tripping it through the host stager would cost a
+        blocking D2H copy plus a second transfer, so such steps launch
+        through the per-cohort dispatch instead — a one-cohort fleet, so
+        still exactly one compiled launch per round."""
+        if len(batches) != 1 or len(self._tenant_cohort) != 1:
+            return False
+        (b,) = batches.values()
+        return (isinstance(b, tuple) and len(b) == 5
+                and all(x is None or isinstance(x, jax.Array) for x in b))
+
+    def _percohort_round(self, batches: Mapping) -> tuple[dict, object, int]:
+        """The original dispatch — one compiled launch per cohort, batches
+        staged through per-tenant device ops. Kept (``coalesce=False``) as
+        the measured baseline of the coalesced path; trajectories are
+        bitwise-identical between the two (tests/test_session.py)."""
         outs: dict[str, tgn.BatchOut] = {}
         launches = 0
         edge_counts = []
@@ -346,18 +515,52 @@ class SessionManager:
                 if tid in submitted:
                     b = submitted[tid][0].shape[0]
                     outs[tid] = self._slice_out(out, i, b)
-                    # async device count — summed (one host sync) only
-                    # after every cohort launch has been dispatched
                     edge_counts.append(submitted[tid][4].sum())
-        for o in outs.values():
-            o.emb_src.block_until_ready()
-        edges = int(jnp.stack(edge_counts).sum()) if edge_counts else 0
+        # pending device-side count — resolved in summary(), never here
+        edges = jnp.stack(edge_counts).sum() if edge_counts else 0
+        return outs, edges, launches
+
+    def step(self, batches: Mapping[str, EdgeBatch | tuple]) -> dict:
+        """Advance every tenant with a submitted batch. Coalesced (the
+        default), the whole round — every cohort, idle members masked — is
+        ONE compiled launch fed by one in-place-staged ``device_put``;
+        with ``coalesce=False`` each submitted cohort launches separately.
+        Returns ``{tid: BatchOut}`` for the submitted tenants with
+        ``state=None`` — per-tenant states are committed in place; read
+        them via ``state_of``.
+
+        Steps are fully asynchronous: nothing here blocks on the device,
+        so staging round k+1 overlaps the compute of round k. ``sync()``
+        (or ``summary()``, which calls it) drains the fleet.
+        """
+        unknown = set(batches) - set(self._tenant_cohort)
+        if unknown:
+            raise KeyError(f"unknown tenants {sorted(unknown)}; "
+                           f"registered: {sorted(self._tenant_cohort)}")
+        t0 = time.perf_counter()
+        if not batches:
+            outs, edges, launches = {}, 0, 0
+        elif self.coalesce and not self._device_staged(batches):
+            outs, edges = self._coalesced_round(batches)
+            launches = 1
+        else:
+            outs, edges, launches = self._percohort_round(batches)
         dt = time.perf_counter() - t0
+        self._drained = None
         self.metrics.append({
-            "latency_s": dt, "edges": edges, "launches": launches,
-            "tenants_active": len(outs),
-            "throughput_eps": edges / dt if dt > 0 else 0.0})
+            "t0": t0, "latency_s": dt, "edges": edges,
+            "launches": launches, "tenants_active": len(outs)})
         return outs
+
+    def sync(self) -> None:
+        """Drain the fleet: wait until every dispatched round's commits
+        (and staged transfers) have landed. Steps never block — this is
+        the one place the serving loop waits on the device."""
+        for c in self._cohorts.values():
+            if c.state is not None:
+                jax.block_until_ready(c.state)
+        if self._stager is not None:
+            self._stager.drain()
 
     def peek(self, tid: str, batch) -> tgn.BatchOut:
         """The tenant's step output WITHOUT committing any state (timing /
@@ -392,16 +595,32 @@ class SessionManager:
             yield batches, self.step(batches)
 
     def summary(self) -> dict:
-        """Aggregate round metrics (first round skipped: jit warmup)."""
+        """Aggregate round metrics (first round skipped: jit warmup).
+
+        Steps are async, so per-round walls are reconstructed from the
+        dispatch timestamps — ``wall(k) = t0(k+1) - t0(k)``, with the last
+        round absorbing the final ``sync()`` drain — and the pending
+        device-side edge counts are resolved here, the serving loop's only
+        host sync. Call right after the last round for faithful numbers.
+        """
         if len(self.metrics) < 2:
             return {}
-        lat = np.array([m["latency_s"] for m in self.metrics[1:]])
-        edges = sum(m["edges"] for m in self.metrics[1:])
+        if self._drained is None or self._drained[0] != len(self.metrics):
+            self.sync()
+            self._drained = (len(self.metrics), time.perf_counter())
+        t0s = [m["t0"] for m in self.metrics] + [self._drained[1]]
+        walls = np.diff(np.array(t0s))[1:]
+        edges = sum(int(np.asarray(m["edges"])) for m in self.metrics[1:])
         return {
-            "rounds": len(lat),
+            "rounds": len(walls),
             "tenants": len(self._tenant_cohort),
             "cohorts": len(self._cohorts),
-            "mean_round_ms": float(lat.mean() * 1e3),
-            "p99_round_ms": float(np.percentile(lat, 99) * 1e3),
-            "throughput_eps": float(edges / lat.sum()) if lat.sum() else 0.0,
+            # max, not last: tail rounds of uneven streams mask whole
+            # cohorts, which would under-report the steady-state cost
+            "launches_per_round": max(m["launches"]
+                                      for m in self.metrics[1:]),
+            "mean_round_ms": float(walls.mean() * 1e3),
+            "p99_round_ms": float(np.percentile(walls, 99) * 1e3),
+            "throughput_eps": (float(edges / walls.sum())
+                               if walls.sum() > 0 else 0.0),
         }

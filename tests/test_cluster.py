@@ -131,9 +131,80 @@ def test_mixed_sampler_cohorts_on_mesh(small_graph):
     for r in range(2):
         ref.step({t: fr[t][r] for t in rt})
         sh.step({t: fs[t][r] for t in st})
-    assert sh.metrics[-1]["launches"] == 3
+    # coalesced (default): the whole 3-cohort round is ONE compiled launch
+    assert sh.metrics[-1]["launches"] == 1
     for t1, t2 in zip(rt, st):
         _assert_state_equal(ref.state_of(t1), sh.state_of(t2), msg=t2)
+
+
+# ---------------------------------------------------------------------------
+# coalesced cross-cohort rounds on the mesh
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mesh", ["tenant=8", "tenant=4,vertex=2"])
+def test_sharded_coalesced_matches_percohort_bitwise(small_graph, mesh):
+    """A mixed 3-cohort fleet (8 tenants) on the mesh replays
+    BITWISE-identically under the coalesced single-launch round (states
+    donated, mesh placements pinned) and the per-cohort sharded baseline,
+    through ragged widths and idle tenants — with exactly ONE compiled
+    execution per coalesced round."""
+    g = small_graph
+    cfg, params, ef = _setup(g, key=6)
+    variants = ("sat+lut+np4", "sat+lut+np2", "sat+lut+np4+reservoir")
+    m1 = cl.ShardedSessionManager(params, ef, model=cfg, mesh=mesh)
+    m2 = cl.ShardedSessionManager(params, ef, model=cfg, mesh=mesh,
+                                  coalesce=False)
+    t1 = [m1.add_tenant(variants[i % 3]) for i in range(8)]
+    t2 = [m2.add_tenant(variants[i % 3]) for i in range(8)]
+    for r, w in enumerate((30, 18, 30)):
+        bs = {}
+        for i in range(8):
+            if r == 1 and i % 4 == 1:        # some tenants idle round 1
+                # (i=1 and i=5 — every cohort keeps at least one active
+                # member, so the per-cohort baseline still launches 3x)
+                continue
+            lo = 40 * i + r * w
+            bs[i] = next(iter(stream_mod.fixed_count(
+                g, w, window=slice(lo, lo + w), seed=i)))
+        before = m1._coalesced.calls if m1._coalesced is not None else 0
+        o1 = m1.step({t1[i]: b for i, b in bs.items()})
+        o2 = m2.step({t2[i]: b for i, b in bs.items()})
+        assert m1._coalesced.calls == before + 1
+        assert m1.metrics[-1]["launches"] == 1
+        assert m2.metrics[-1]["launches"] == 3
+        for i in bs:
+            np.testing.assert_array_equal(
+                np.asarray(o1[t1[i]].emb_src), np.asarray(o2[t2[i]].emb_src),
+                err_msg=f"round {r} tenant {i}")
+    for a, b in zip(t1, t2):
+        _assert_state_equal(m1.state_of(a), m2.state_of(b), msg=a)
+    # the super-batch row space covers every cohort's mesh capacity
+    n_tenant_shards = dict(m1.mesh.shape).get("tenant", 1)
+    assert m1._coalesced.rows % n_tenant_shards == 0
+
+
+def test_sharded_coalesced_matches_unsharded_session(small_graph):
+    """Coalesced rounds on the mesh reproduce the UNSHARDED coalesced
+    session bitwise (the fabric contract composed with the fused round)."""
+    g = small_graph
+    cfg, params, ef = _setup(g, key=7)
+    variants = ("sat+lut+np4", "sat+lut+np4+uniform")
+    flat = SessionManager(params, ef, model=cfg)
+    sh = cl.ShardedSessionManager(params, ef, model=cfg, mesh="tenant=4")
+    ft = [flat.add_tenant(v) for v in variants for _ in range(2)]
+    st = [sh.add_tenant(v) for v in variants for _ in range(2)]
+    fr, fs = _feeds(g, ft), _feeds(g, st)
+    for r in range(3):
+        o1 = flat.step({t: fr[t][r] for t in ft})
+        o2 = sh.step({t: fs[t][r] for t in st})
+        for a, b in zip(ft, st):
+            np.testing.assert_array_equal(np.asarray(o1[a].emb_src),
+                                          np.asarray(o2[b].emb_src),
+                                          err_msg=f"round {r} {b}")
+    assert flat.metrics[-1]["launches"] == sh.metrics[-1]["launches"] == 1
+    for a, b in zip(ft, st):
+        _assert_state_equal(flat.state_of(a), sh.state_of(b), msg=b)
 
 
 # ---------------------------------------------------------------------------

@@ -99,7 +99,8 @@ def test_mixed_sampler_cohorts_each_match_their_engine(small_graph):
     streams = {t: _tenant_stream(g, i) for i, t in enumerate(tids)}
     for _batches, _outs in mgr.run(streams):
         pass
-    assert mgr.metrics[-1]["launches"] == 3
+    # coalesced (default): the whole 3-cohort round is ONE compiled launch
+    assert mgr.metrics[-1]["launches"] == 1
 
     finals = []
     for i, (t, v) in enumerate(zip(tids, variants)):
@@ -252,6 +253,196 @@ def test_tenant_lifecycle_and_errors(small_graph):
     assert mgr.tenants == (b,)
     batch = next(iter(_tenant_stream(g, 0)))
     assert set(mgr.step({b: batch})) == {b}
+
+
+# ---------------------------------------------------------------------------
+# coalesced cross-cohort rounds (one compiled launch per round)
+# ---------------------------------------------------------------------------
+
+# the mixed 3-cohort fleet: the prune axis (np4 vs np2) AND a sampler
+# cohort. (The vanilla/cosine teacher cannot share a session with the
+# SAT/LUT students — a session shares ONE parameter set and the
+# attention+encoder axes are parameterized — so the fleet mixes the axes
+# tenants CAN vary: prune_k and the sampler backend.)
+MIXED_VARIANTS = ("sat+lut+np4", "sat+lut+np2", "sat+lut+np4+reservoir")
+
+
+def _mixed_fleet(g, params, cfg, n_tenants, coalesce):
+    ef = jnp.asarray(g.edge_feats)
+    mgr = SessionManager(params, ef, model=cfg, use_kernels=False,
+                         coalesce=coalesce)
+    tids = [mgr.add_tenant(MIXED_VARIANTS[i % len(MIXED_VARIANTS)])
+            for i in range(n_tenants)]
+    return mgr, tids
+
+
+def test_coalesced_bitwise_matches_percohort_mixed_cohorts(small_graph):
+    """A mixed 3-cohort fleet (8 tenants) replays BITWISE-identically
+    under the coalesced single-launch round and the per-cohort baseline —
+    per-round embeddings, distill views, and final states — through
+    ragged batch widths and idle tenants."""
+    g = small_graph
+    dims = _dims(g, f=8)
+    cfg = pl.variant_config("sat+lut+np4", **dims)
+    params = tgn.init_params(jax.random.key(7), cfg)
+    m1, t1 = _mixed_fleet(g, params, cfg, 8, coalesce=True)
+    m2, t2 = _mixed_fleet(g, params, cfg, 8, coalesce=False)
+    assert len(m1.describe()) == 3
+    rng_widths = (40, 24, 40, 8)          # ragged rounds: stager width grows
+    for r, width in enumerate(rng_widths):
+        batches = {}
+        for i in range(8):
+            if r == 2 and i % 4 == 1:     # some tenants idle round 2
+                continue
+            lo = 50 * i + r * width
+            batches[i] = next(iter(stream_mod.fixed_count(
+                g, width, window=slice(lo, lo + width), seed=i)))
+        o1 = m1.step({t1[i]: b for i, b in batches.items()})
+        o2 = m2.step({t2[i]: b for i, b in batches.items()})
+        assert set(o1) == {t1[i] for i in batches}
+        for i in batches:
+            for field in ("emb_src", "emb_dst", "attn_logits",
+                          "nbr_valid", "nbr_dt"):
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(o1[t1[i]], field)),
+                    np.asarray(getattr(o2[t2[i]], field)),
+                    err_msg=f"round {r} tenant {i} {field}")
+    for a, b in zip(t1, t2):
+        _assert_state_equal(m1.state_of(a), m2.state_of(b), msg=a)
+
+
+def test_coalesced_round_is_exactly_one_compiled_launch(small_graph):
+    """The launch-count guard: every coalesced ``step`` dispatches exactly
+    ONE compiled round execution regardless of cohort count (the
+    per-cohort baseline pays one per cohort), and a fleet change relayouts
+    without breaking the guarantee."""
+    g = small_graph
+    dims = _dims(g, f=8)
+    cfg = pl.variant_config("sat+lut+np4", **dims)
+    params = tgn.init_params(jax.random.key(8), cfg)
+    m1, t1 = _mixed_fleet(g, params, cfg, 6, coalesce=True)
+    m2, t2 = _mixed_fleet(g, params, cfg, 6, coalesce=False)
+    feeds = {i: list(_tenant_stream(g, i, rounds=3)) for i in range(6)}
+    for r in range(3):
+        before = m1._coalesced.calls if m1._coalesced is not None else 0
+        m1.step({t1[i]: feeds[i][r] for i in range(6)})
+        m2.step({t2[i]: feeds[i][r] for i in range(6)})
+        assert m1._coalesced.calls == before + 1   # ONE compiled execution
+        assert m1.metrics[-1]["launches"] == 1
+        assert m2.metrics[-1]["launches"] == 3     # baseline: per cohort
+    # lane table covers every cohort row: 6 tenants over 3 variants
+    assert m1._coalesced.rows == 6
+    assert len(set(m1._coalesced.lane_ids.tolist())) == 3
+    # fleet change: relayout, still one launch, trajectories still equal
+    a1 = m1.add_tenant(MIXED_VARIANTS[0])
+    a2 = m2.add_tenant(MIXED_VARIANTS[0])
+    assert m1._coalesced is None                   # layout invalidated
+    b = next(iter(_tenant_stream(g, 6)))
+    m1.step({a1: b})
+    m2.step({a2: b})
+    assert m1.metrics[-1]["launches"] == 1
+    assert m1._coalesced.rows == 7
+    _assert_state_equal(m1.state_of(a1), m2.state_of(a2), msg="late tenant")
+
+
+def test_edge_counts_defer_to_summary(small_graph):
+    """Steady-state rounds never block on a D2H sync: the per-round edge
+    count stays a pending device value in ``metrics`` and is resolved only
+    by ``summary()`` (both dispatch modes)."""
+    g = small_graph
+    dims = _dims(g, f=8)
+    cfg = pl.variant_config("sat+lut+np4", **dims)
+    params = tgn.init_params(jax.random.key(9), cfg)
+    for coalesce in (True, False):
+        mgr, tids = _mixed_fleet(g, params, cfg, 3, coalesce=coalesce)
+        feeds = {i: list(_tenant_stream(g, i, batch=20, rounds=3))
+                 for i in range(3)}
+        for r in range(3):
+            mgr.step({tids[i]: feeds[i][r] for i in range(3)})
+            assert isinstance(mgr.metrics[-1]["edges"], jax.Array), coalesce
+        s = mgr.summary()
+        # rounds 1..2 (warmup skipped): 2 rounds x 3 tenants x 20 edges
+        resolved = sum(int(np.asarray(m["edges"])) for m in mgr.metrics[1:])
+        assert resolved == 2 * 3 * 20
+        assert s["rounds"] == 2 and s["launches_per_round"] == (
+            1 if coalesce else 3)
+
+
+def test_background_snapshot_writer_bounded_and_durable(small_graph,
+                                                        tmp_path):
+    """The bounded per-tenant background writer: a submitted snapshot
+    restores bitwise after ``wait()``; while a tenant's write is in
+    flight further submissions for it are SKIPPED (never queued), so a
+    snapshot cadence can never pile IO behind the serving loop."""
+    from repro.serving import cluster as cl
+    g = small_graph
+    dims = _dims(g, f=8)
+    cfg = pl.variant_config("sat+lut+np4", **dims)
+    params = tgn.init_params(jax.random.key(11), cfg)
+    ef = jnp.asarray(g.edge_feats)
+    mgr = SessionManager(params, ef, model=cfg)
+    a, b = mgr.add_tenant(), mgr.add_tenant()
+    batch = next(iter(_tenant_stream(g, 0)))
+    mgr.step({a: batch, b: batch})
+
+    w = cl.TenantSnapshotWriter(str(tmp_path))
+    assert w.submit(mgr, a, step=1)
+    w.wait()
+    fresh = SessionManager(params, ef, model=cfg)
+    revived = cl.restore_tenant(fresh, str(tmp_path), a, name="r")
+    _assert_state_equal(mgr.state_of(a), fresh.state_of(revived),
+                        msg="background snapshot")
+
+    class _Stuck:                        # a write that never finishes
+        def done(self):
+            return False
+
+    w._inflight[b] = _Stuck()
+    assert not w.submit(mgr, b, step=1)  # bounded: skipped, not queued
+    assert w.skipped == 1
+    del w._inflight[b]
+    assert w.submit(mgr, b, step=2)      # free again once drained
+    w.close()
+    assert cl.list_snapshots(str(tmp_path)) == {a: 1, b: 2}
+
+    class _Failed:                       # a write that blew up
+        def done(self):
+            return True
+
+        def result(self):
+            raise IOError("disk full")
+
+    w2 = cl.TenantSnapshotWriter(str(tmp_path))
+    w2._inflight["x"] = _Failed()
+    w2._inflight["y"] = _Failed()
+    with pytest.raises(RuntimeError, match="background snapshot"):
+        w2.wait()                        # raises AFTER joining everything
+    assert w2._inflight == {}            # ...so nothing is left unjoined
+    w2.close()
+
+
+def test_coalesced_engine_view_and_peek_unchanged(small_graph):
+    """The single-tenant engine view: pre-staged device batches take the
+    per-cohort fast path (no host round-trip through the stager — the
+    prefetched transfer is consumed as-is), still exactly one launch per
+    round, and ``peek``'s non-committing output matches ``process``."""
+    g = small_graph
+    dims = _dims(g, f=8)
+    cfg = pl.variant_config("sat+lut+np4", **dims)
+    params = tgn.init_params(jax.random.key(10), cfg)
+    ef = jnp.asarray(g.edge_feats)
+    eng = StreamingEngine.from_variant("sat+lut+np4", params, ef,
+                                       use_kernels=False, **dims)
+    assert eng.session.coalesce
+    batches = list(_tenant_stream(g, 0, rounds=2))
+    peeked = eng.session.peek(eng.tid, batches[0])
+    hs, _ = eng.process(batches[0])
+    np.testing.assert_array_equal(np.asarray(peeked.emb_src),
+                                  np.asarray(hs))
+    assert eng.session.metrics[-1]["launches"] == 1
+    # the engine's device_put-staged batch never bounced through host
+    # staging: the session's ring-buffer stager was never even built
+    assert eng.session._stager is None
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,94 @@
+#!/usr/bin/env python
+"""Staging-regression guard for the serving hot path (part of make lint).
+
+The coalesced round path in ``src/repro/serving/session.py`` must stay
+allocation-free on the host: batches are written in place into the
+pre-allocated ``_HostStager`` ring buffers and shipped with ONE
+``device_put`` per round. A ``jnp.pad`` / ``jnp.stack`` / ``jnp.asarray``
+/ ``jnp.concatenate`` creeping back into that path reintroduces exactly
+the per-tenant-per-round device dispatches the coalesced design removed —
+so this check walks the AST of the round-path functions and fails on any
+such call.
+
+The per-cohort baseline (``_percohort_round`` / ``_cohort_round`` /
+``_as_device_tuple`` / ``_pad_dev`` / ``_idle_dev``) is exempt BY DESIGN:
+it is kept as the measured comparison point for
+``benchmarks/multitenant.py`` and intentionally stages through device ops.
+
+Exits non-zero listing every violation; also fails if a guarded function
+disappears (a rename must update this guard, not silently skip it).
+"""
+from __future__ import annotations
+
+import ast
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SESSION = os.path.join(REPO, "src", "repro", "serving", "session.py")
+
+#: (class name or None, function name) -> the round-path functions that
+#: must stay free of host-side jnp staging.
+GUARDED = (
+    (None, "_as_host_tuple"),
+    ("_HostStager", "stage"),
+    ("SessionManager", "step"),
+    ("SessionManager", "_coalesced_round"),
+    ("SessionManager", "_ensure_layout"),
+)
+
+#: jnp attributes that mean per-batch device staging is back.
+BANNED = {"pad", "stack", "asarray", "concatenate"}
+
+
+def _functions(tree: ast.Module) -> dict:
+    found = {}
+    for node in tree.body:
+        if isinstance(node, ast.FunctionDef):
+            found[(None, node.name)] = node
+        elif isinstance(node, ast.ClassDef):
+            for sub in node.body:
+                if isinstance(sub, ast.FunctionDef):
+                    found[(node.name, sub.name)] = sub
+    return found
+
+
+def _violations(fn: ast.FunctionDef) -> list:
+    out = []
+    for node in ast.walk(fn):
+        if (isinstance(node, ast.Attribute)
+                and isinstance(node.value, ast.Name)
+                and node.value.id == "jnp" and node.attr in BANNED):
+            out.append((node.lineno, f"jnp.{node.attr}"))
+    return out
+
+
+def main() -> int:
+    with open(SESSION) as f:
+        tree = ast.parse(f.read(), SESSION)
+    functions = _functions(tree)
+    errors = []
+    checked = 0
+    for key in GUARDED:
+        fn = functions.get(key)
+        qual = ".".join(p for p in key if p)
+        if fn is None:
+            errors.append(f"guarded function {qual} not found in "
+                          "session.py — update tools/session_lint.py "
+                          "alongside the rename")
+            continue
+        checked += 1
+        for lineno, what in _violations(fn):
+            errors.append(f"session.py:{lineno}: {what} in {qual} — the "
+                          "coalesced round path must stage through the "
+                          "in-place _HostStager ring buffers, not "
+                          "per-batch device ops")
+    for e in errors:
+        print(f"session-lint: {e}", file=sys.stderr)
+    print(f"session-lint: {checked} round-path functions checked, "
+          f"{len(errors)} error(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
