@@ -4,22 +4,28 @@
 #   make test-sharded sharded tenant-fabric tests (tests/test_cluster.py)
 #                     on a forced 8-device host mesh — tier-1 runs them
 #                     skipped because conftest.py keeps XLA_FLAGS unset
+#   make test-kernels the kernel equivalence suite (staged + fused Pallas
+#                     kernels vs their jnp oracles, interpret mode)
 #   make bench-smoke  one tiny fig5 sweep through the streaming engine +
 #                     a toy-scale coalesced-vs-per-cohort multitenant sweep
+#                     + a toy-scale fused-vs-staged step sweep
 #   make docs-check   intra-repo doc links resolve + every variant spec in
 #                     docs exists in the pipeline registry
 #   make session-lint the serving round path stages through the in-place
 #                     _HostStager ring buffers (no jnp.pad/jnp.stack/...
-#                     per-tenant staging regressions)
+#                     per-tenant staging regressions) AND the fused step
+#                     path never re-materializes neighbor gathers/concats
 #   make lint         pyflakes over src/ tests/ benchmarks/ examples/
 #                     (falls back to a bytecode-compile check when
 #                      pyflakes is not installed; see requirements-dev.txt)
-#                     + docs-check + session-lint + test-sharded preflight
+#                     + docs-check + session-lint + test-sharded +
+#                     test-kernels preflight
 
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test test-sharded bench-smoke lint docs-check session-lint
+.PHONY: test test-sharded test-kernels bench-smoke lint docs-check \
+	session-lint
 
 test:
 	$(PY) -m pytest -x -q
@@ -27,6 +33,9 @@ test:
 test-sharded:
 	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
 	    $(PY) -m pytest -x -q tests/test_cluster.py tests/test_tgn_sharding.py
+
+test-kernels:
+	$(PY) -m pytest -x -q tests/test_kernels.py
 
 bench-smoke:
 	$(PY) -c "from benchmarks.fig5_latency_throughput import sweep; \
@@ -36,6 +45,10 @@ bench-smoke:
 	          rows = coalesced_sweep(tenant_counts=(3,), cohort_counts=(3,), \
 	              batch=16, rounds=4, n_edges=600, f_mem=16); \
 	          [print(r) for r in rows]"
+	$(PY) -c "from benchmarks.fused_step import sweep; \
+	          rows = sweep(batch_sizes=(16,), rounds=4, n_edges=600, \
+	              f_mem=16); \
+	          [print(r) for r in rows]"
 
 docs-check:
 	$(PY) tools/docs_check.py
@@ -43,7 +56,7 @@ docs-check:
 session-lint:
 	$(PY) tools/session_lint.py
 
-lint: docs-check session-lint test-sharded
+lint: docs-check session-lint test-sharded test-kernels
 	@if $(PY) -c "import pyflakes" 2>/dev/null; then \
 	    $(PY) -m pyflakes src benchmarks examples tests/*.py; \
 	else \

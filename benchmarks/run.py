@@ -14,17 +14,19 @@ import time
 def main() -> None:
     full = "--full" in sys.argv
     from benchmarks import (fig5_latency_throughput, fig6_perf_model,
-                            fig7_accuracy_latency, multitenant, roofline,
-                            sharded_session, table1_case_study,
-                            table2_model_opts)
+                            fig7_accuracy_latency, fused_step, multitenant,
+                            roofline, sharded_session, table1_case_study,
+                            table2_model_opts, vertex_collectives)
     benches = [
         ("table1_case_study", table1_case_study),
         ("table2_model_opts", table2_model_opts),
         ("fig5_latency_throughput", fig5_latency_throughput),
         ("fig6_perf_model", fig6_perf_model),
         ("fig7_accuracy_latency", fig7_accuracy_latency),
+        ("fused_step", fused_step),
         ("multitenant", multitenant),
         ("sharded_session", sharded_session),
+        ("vertex_collectives", vertex_collectives),
         ("roofline", roofline),
     ]
     for name, mod in benches:

@@ -1,0 +1,136 @@
+"""``vertex``-axis collectives profiling (ROADMAP open item).
+
+The sharded tenant fabric can split each tenant's vertex tables over a
+``vertex`` mesh axis — the jax analogue of the paper's banked Graph
+Storage (§IV-A). Banking is free on the FPGA (BRAM ports); on a device
+mesh every cross-bank gather/scatter of a step (neighbor fetch, LWW
+commit, ring insert) becomes collective traffic XLA inserts. This sweep
+measures what a real vertex-sharded mesh PAYS per step:
+
+  * per-step collective bytes + op mix — ``launch/hlo_analysis.analyze``
+    over the COMPILED (post-SPMD) cohort launch, ring-weighted per device;
+  * wall clock per round through the ShardedSessionManager on the forced
+    host mesh (devices share one CPU, so walls show overhead, not
+    speedup — the collective bytes are the hardware-relevant signal).
+
+Run on a forced multi-device host (the Makefile's test-sharded flags):
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+        PYTHONPATH=src python -m benchmarks.vertex_collectives
+
+With fewer devices the sweep degrades to the widths that fit and says so.
+Baseline: results/vertex_collectives.json.
+"""
+from __future__ import annotations
+
+import time
+
+
+def sweep(tenants: int = 2, batch: int = 100, rounds: int = 4,
+          n_edges: int = 2000, f_mem: int = 32,
+          vertex_widths=(1, 2, 4), variant: str = "sat+lut+np4"):
+    """One row per vertex-axis width: per-step collective traffic of the
+    compiled cohort launch + measured round walls."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import pipeline as pl, tgn
+    from repro.data import stream as stream_mod
+    from repro.data import temporal_graph as tgd
+    from repro.launch import hlo_analysis as hlo
+    from repro.serving.cluster import ShardedSessionManager
+    from repro.serving.session import SessionManager
+
+    g = tgd.wikipedia_like(n_edges=n_edges)
+    dims = dict(n_nodes=g.cfg.n_nodes, n_edges=g.n_edges, f_edge=172,
+                f_mem=f_mem, f_time=f_mem, f_emb=f_mem, m_r=10)
+    cfg = pl.variant_config(variant, **dims)
+    params = tgn.init_params(jax.random.key(0), cfg)
+    ef = jnp.asarray(g.edge_feats)
+    n_dev = jax.device_count()
+
+    feeds = [list(stream_mod.fixed_count(
+        g, batch, window=slice(60 * i, 60 * i + batch * rounds), seed=i))
+        for i in range(tenants)]
+
+    rows = []
+    for width in vertex_widths:
+        if width == 1:
+            # unsharded baseline column: runs on any host (no mesh)
+            mgr = SessionManager(params, ef, model=cfg)
+        elif tenants * width > n_dev or n_dev % (tenants * width):
+            continue
+        else:
+            mgr = ShardedSessionManager(params, ef, model=cfg,
+                                        mesh=f"tenant={tenants},"
+                                             f"vertex={width}")
+        tids = [mgr.add_tenant() for _ in range(tenants)]
+        mgr.step({t: feeds[i][0] for i, t in enumerate(tids)})  # compile
+        mgr.sync()
+
+        # post-SPMD HLO of the per-cohort launch: the compiled collective
+        # schedule a vertex-sharded mesh actually executes per step. The
+        # width=1 row uses the unsharded cohort's launch — 0 collective
+        # bytes by construction, the comparison floor.
+        cohort = mgr.cohort_of(tids[0])
+        C = cohort.capacity
+        zi = jnp.zeros((C, batch), jnp.int32)
+        stacked = (zi, zi, zi, jnp.zeros((C, batch), jnp.float32),
+                   jnp.zeros((C, batch), bool))
+        lowered = cohort._vstep.lower(params, cohort.state, stacked, ef,
+                                      None)
+        res = hlo.analyze(lowered.compile().as_text())
+
+        t0 = time.perf_counter()
+        for r in range(1, rounds):
+            mgr.step({t: feeds[i][r] for i, t in enumerate(tids)})
+        mgr.sync()
+        wall = (time.perf_counter() - t0) / (rounds - 1)
+        edges = batch * tenants
+        rows.append({
+            "tenants": tenants, "vertex": width, "batch": batch,
+            "variant": variant,
+            "collective_bytes_per_step": round(res["collective_bytes"]),
+            "collective_bytes_per_edge": round(
+                res["collective_bytes"] / edges, 1),
+            "collectives_by_op": {k: round(v) for k, v in
+                                  res["collectives_by_op"].items()},
+            "hbm_bytes_per_step": round(res["bytes"]),
+            "round_ms": round(wall * 1e3, 2),
+            "eps": round(edges / wall),
+        })
+    return rows
+
+
+def main(full: bool = False):
+    import jax
+
+    from benchmarks.common import save_json
+
+    n_dev = jax.device_count()
+    print(f"== vertex-axis collectives: gather/scatter traffic per step "
+          f"[{n_dev} device(s)] ==")
+    if n_dev < 4:
+        print("   (needs a multi-device host for the vertex>1 columns — "
+              "rerun under XLA_FLAGS=--xla_force_host_platform_device_"
+              "count=8)")
+    rows = sweep()
+    for r in rows:
+        print(f"  vertex={r['vertex']}  "
+              f"coll {r['collective_bytes_per_step']/1e6:7.3f} MB/step "
+              f"({r['collective_bytes_per_edge']:8.1f} B/edge)  "
+              f"round {r['round_ms']:7.2f} ms  {r['eps']:7d} E/s")
+        if r["collectives_by_op"]:
+            print(f"           by op: {r['collectives_by_op']}")
+    if any(r["vertex"] > 1 for r in rows):
+        save_json("vertex_collectives.json",
+                  {"devices": n_dev, "sweep": rows})
+    else:
+        # baseline-only run (too few devices for a vertex axis): keep the
+        # committed 8-device baseline instead of clobbering it
+        print("   (vertex>1 columns unavailable — committed baseline left "
+              "untouched)")
+
+
+if __name__ == "__main__":
+    main()

@@ -206,9 +206,12 @@ class TGNPipeline:
     cover the common cases.
     """
 
-    def __init__(self, cfg: tgn.TGNConfig, use_kernels: bool = False):
+    def __init__(self, cfg: tgn.TGNConfig, use_kernels=False):
         self.cfg = cfg
-        self.use_kernels = use_kernels
+        self.use_kernels = stages.kernel_tier(use_kernels)
+        #: the tier that actually runs (``"fused"`` degrades to
+        #: ``"staged"`` outside the fused kernel's coverage)
+        self.tier = stages.resolved_tier(cfg, use_kernels)
         self.variant = variant_name(cfg)
         self.stages = stages.build_stages(cfg, use_kernels)
         self.prepare = stages.make_prepare(cfg, use_kernels)
@@ -239,6 +242,14 @@ class TGNPipeline:
         vvalid = (jnp.concatenate([valid, valid]) if valid is not None
                   else jnp.ones((2 * B,), bool))
         st = self.stages
+
+        # --- fused tier: the whole post-prune datapath is ONE launch ------
+        # (selection metadata + winner-row DMA + EU + MUU inside the
+        # kernel; commits and the ring insert follow — see
+        # stages.make_fused_step)
+        if st.fused is not None:
+            return st.fused(params, aux, state, batch, vids, t_inst,
+                            vvalid, edge_feats, node_feats)
 
         # --- 1. UPDT: consume cached mail for involved vertices ----------
         s_upd, lu_upd = st.memory_updater(params, aux, state, vids)
@@ -331,7 +342,8 @@ class TGNPipeline:
     def describe(self) -> dict:
         """Variant + resolved stage backends (introspection/logging)."""
         return {"variant": self.variant, "use_kernels": self.use_kernels,
-                "lane": self.stages.variant_id, **self.stages.names}
+                "tier": self.tier, "lane": self.stages.variant_id,
+                **self.stages.names}
 
 
 class CoalescedRound:
@@ -444,16 +456,18 @@ class CoalescedRound:
 
 
 @functools.lru_cache(maxsize=64)
-def _cached_pipeline(cfg: tgn.TGNConfig, use_kernels: bool) -> TGNPipeline:
-    return TGNPipeline(cfg, use_kernels)
+def _cached_pipeline(cfg: tgn.TGNConfig, tier: str) -> TGNPipeline:
+    return TGNPipeline(cfg, tier)
 
 
-def build_pipeline(spec, use_kernels: bool = False, **dims) -> TGNPipeline:
+def build_pipeline(spec, use_kernels=False, **dims) -> TGNPipeline:
     """Build (or fetch the cached) pipeline for a variant.
 
     ``spec`` may be a TGNConfig (used as-is; ``dims`` must be empty) or any
     string/VariantSpec accepted by ``resolve_variant`` — then ``dims``
-    supplies the TGNConfig table/feature fields.
+    supplies the TGNConfig table/feature fields. ``use_kernels`` selects
+    the kernel tier (``stages.KERNEL_TIERS``: ``"ref"``/``"staged"``/
+    ``"fused"``; legacy booleans accepted).
     """
     if isinstance(spec, tgn.TGNConfig):
         if dims:
@@ -462,4 +476,6 @@ def build_pipeline(spec, use_kernels: bool = False, **dims) -> TGNPipeline:
         cfg = spec
     else:
         cfg = variant_config(spec, **dims)
-    return _cached_pipeline(cfg, use_kernels)
+    # cache on the RESOLVED tier: "fused" on an uncovered variant is the
+    # same program as "staged", so both requests share one pipeline
+    return _cached_pipeline(cfg, stages.resolved_tier(cfg, use_kernels))

@@ -10,7 +10,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-NEG_INF = -1e30
+from repro.utils import NEG_INF  # single source of truth (see utils.py)
+
+__all__ = ["NEG_INF", "topk_select", "masked_softmax", "gather_rows"]
 
 
 def topk_select(logits: jax.Array, valid: jax.Array, k: int):

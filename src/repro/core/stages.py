@@ -43,6 +43,48 @@ from repro.core import mailbox, memory, pruning, time_encode as te
 from repro.core import updater
 
 
+#: Kernel-backend tiers. ``use_kernels`` everywhere accepts a tier name or
+#: the legacy booleans (False -> "ref", True -> "staged"):
+#:   ref     pure-jnp stage references (the numerics oracle)
+#:   staged  one Pallas kernel per unit (LUT encode, GRU, SAT aggregate) —
+#:           stage boundaries still materialize HBM intermediates
+#:   fused   the single-pass step kernel (kernels/fused_step.py): scalar-
+#:           prefetched winner gather + EU + MUU in ONE launch, no
+#:           inter-kernel intermediates (paper §IV, Fig. 4)
+KERNEL_TIERS = ("ref", "staged", "fused")
+
+
+def kernel_tier(use_kernels) -> str:
+    """Normalize a ``use_kernels`` value (bool-like or tier name) to a
+    tier: any falsy value is ``"ref"``, any truthy non-string (True, 1,
+    np.True_) is ``"staged"``, strings must name a tier."""
+    if isinstance(use_kernels, str):
+        if use_kernels in KERNEL_TIERS:
+            return use_kernels
+        raise ValueError(f"unknown kernel tier {use_kernels!r}; pass a "
+                         f"bool or one of {KERNEL_TIERS}")
+    return "staged" if use_kernels else "ref"
+
+
+def fused_supported(cfg) -> bool:
+    """The fused single-pass kernel covers the co-designed student tail:
+    SAT attention + LUT encoder (any prune budget / sampler backend),
+    without static node features (the paper's Wikipedia/Reddit setting —
+    f_feat > 0 would add a feature projection the kernel does not carry)."""
+    return (cfg.attention == "sat" and cfg.encoder == "lut"
+            and cfg.f_feat == 0)
+
+
+def resolved_tier(cfg, use_kernels) -> str:
+    """The tier that actually runs for ``cfg``: requesting ``"fused"`` on a
+    variant outside the fused kernel's coverage silently degrades to the
+    staged tier, mirroring how staged kernels degrade to references."""
+    tier = kernel_tier(use_kernels)
+    if tier == "fused" and not fused_supported(cfg):
+        return "staged"
+    return tier
+
+
 class Neighborhood(NamedTuple):
     """What a sampler hands the aggregator.
 
@@ -62,6 +104,23 @@ class Neighborhood(NamedTuple):
     full_dt: jax.Array          # (2B, m_r) time deltas of every slot
 
 
+class Selection(NamedTuple):
+    """Prune-then-fetch METADATA — everything the selection policy decides
+    from timestamps/ids alone, before any memory/feature gather. The
+    staged sampler turns this into a ``Neighborhood`` by gathering the k
+    winners' rows; the fused tier hands it (scalar-prefetched) straight to
+    the single-pass kernel, which DMAs the rows itself.
+    """
+    ids: jax.Array              # (2B, k) int32 winner vertex ids
+    eids: jax.Array             # (2B, k) int32 winner edge-feature rows
+    dt: jax.Array               # (2B, k) winner time deltas
+    logits: jax.Array           # (2B, k) SAT logits (NEG_INF where invalid)
+    valid: jax.Array            # (2B, k) bool winner validity
+    full_logits: jax.Array      # (2B, m_r) pre-softmax scores (distill)
+    full_valid: jax.Array       # (2B, m_r) ring-buffer validity
+    full_dt: jax.Array          # (2B, m_r) time deltas of every slot
+
+
 class StageBundle(NamedTuple):
     """The resolved stage stack for one variant (+ backend choice)."""
     memory_updater: object      # (params, aux, state, vids) -> (s_upd, lu_upd)
@@ -70,6 +129,7 @@ class StageBundle(NamedTuple):
     committer: object           # LastWriteWinsCommitter
     names: dict                 # stage-name -> backend label (introspection)
     variant_id: int             # lane id of this stage PROGRAM (variant_lane)
+    fused: object = None        # fused tier only: the one-launch step body
 
 
 #: Process-wide lane registry: every distinct resolved stage *program* (the
@@ -81,17 +141,18 @@ class StageBundle(NamedTuple):
 _VARIANT_LANES: dict[tuple, int] = {}
 
 
-def variant_lane(cfg, use_kernels: bool = False) -> int:
+def variant_lane(cfg, use_kernels=False) -> int:
     """The lane id of ``cfg``'s resolved stage program.
 
     Two configs share a lane iff ``build_stages`` would resolve them to the
     same stage code path: attention/encoder/pruning/sampler (tau included
     for the reservoir — it is baked into the sampler closure), plus the
-    kernel-backend choice and the ring width the prune clamp sees.
+    RESOLVED kernel tier (a variant the fused kernel cannot cover resolves
+    to its staged lane) and the ring width the prune clamp sees.
     """
     key = (cfg.attention, cfg.encoder, cfg.prune_k, cfg.sampler,
            float(cfg.reservoir_tau) if cfg.sampler == "reservoir" else None,
-           bool(use_kernels), cfg.m_r)
+           resolved_tier(cfg, use_kernels), cfg.m_r)
     return _VARIANT_LANES.setdefault(key, len(_VARIANT_LANES))
 
 
@@ -100,7 +161,7 @@ def variant_lane(cfg, use_kernels: bool = False) -> int:
 # ---------------------------------------------------------------------------
 
 
-def make_prepare(cfg, use_kernels: bool = False):
+def make_prepare(cfg, use_kernels=False):
     """Build ``prepare(params) -> aux`` for ``cfg`` (a TGNConfig).
 
     aux carries every parameter-derived table the resolved stage backends
@@ -109,11 +170,17 @@ def make_prepare(cfg, use_kernels: bool = False):
                                  rows of W_i / W_v (te.fold_projection)
       packed_gru / packed_lut_gru / packed_sat
                                  lane-aligned Pallas parameter layouts
-                                 (kernels/ops.py pad_* helpers) — only when
-                                 ``use_kernels`` selects Pallas backends
+                                 (kernels/ops.py pad_* helpers) — staged and
+                                 fused tiers (the fused tier's ``embed``
+                                 path still runs the staged backends)
+      packed_fused               the single-pass kernel's parameter pack
+                                 (kernels/ops.py pad_fused_params) — fused
+                                 tier only
     Cheap jnp ops — safe to trace inside a training step (gradients flow
     through the folds) or run once at engine construction.
     """
+    tier = resolved_tier(cfg, use_kernels)
+
     def prepare(params: dict) -> dict:
         aux = {}
         if cfg.encoder != "lut":
@@ -130,7 +197,7 @@ def make_prepare(cfg, use_kernels: bool = False):
             folded_attn = te.fold_projection(params["time"],
                                              attn_p["w_v"][dkv:])
             aux["folded_attn"] = folded_attn
-        if not use_kernels:
+        if tier == "ref":
             return aux
         from repro.kernels import ops as kops  # local: keep core importable
         aux["packed_gru"] = kops.pad_gru_params(
@@ -143,6 +210,10 @@ def make_prepare(cfg, use_kernels: bool = False):
             aux["packed_sat"] = kops.pad_sat_params(
                 attn_p["w_v"][:dkv], attn_p["b_v"],
                 folded_attn["boundaries"], folded_attn["table"])
+        if tier == "fused":
+            aux["packed_fused"] = kops.pad_fused_params(
+                gru_p, attn_p, folded_gru, folded_attn,
+                gcfg.f_mail_raw, cfg.f_mem, cfg.f_edge)
         return aux
 
     return prepare
@@ -267,17 +338,40 @@ def make_sampler(cfg):
 
         return sampler, "sampler:fetch-all"
 
+    select, name = make_selector(cfg)
+
+    # prune-then-fetch: selection is metadata-only (make_selector); here we
+    # fetch ONLY the winners' rows (the point of the co-design).
+    def sampler(params, aux, state, edge_feats, vids, t_query):
+        sel = select(params, aux, state, vids, t_query)
+        s_nbr = state.memory[sel.ids] * sel.valid[..., None]
+        e_nbr = edge_feats[sel.eids] * sel.valid[..., None]
+        return Neighborhood(s_nbr=s_nbr, e_nbr=e_nbr, dt=sel.dt,
+                            valid=sel.valid, logits=sel.logits,
+                            full_logits=sel.full_logits,
+                            full_valid=sel.full_valid, full_dt=sel.full_dt)
+
+    return sampler, name
+
+
+def make_selector(cfg):
+    """Returns ``(select, backend_name)`` — the metadata half of
+    prune-then-fetch for the SAT variants.
+
+    ``select(params, aux, state, vids, t_query) -> Selection`` decides the
+    k winners from the ring buffer's timestamps/ids ONLY, so top-k
+    selection runs BEFORE any memory/edge-feature gather and HBM traffic
+    scales with k, not m_r (the paper's 67% MEM saving). "recent" ranks by
+    SAT logit (the paper's pruner); "uniform"/"reservoir" rank by a
+    stateless-hash priority instead. The staged sampler gathers the
+    winners' rows from this; the fused kernel scalar-prefetches it.
+    """
     k = cfg.prune_k if cfg.prune_k is not None else cfg.m_r
     k = min(k, cfg.m_r)
     policy = cfg.sampler
     tau = float(cfg.reservoir_tau)
 
-    # prune-then-fetch: the selection priority comes from the ring buffer's
-    # timestamps/ids ONLY, so top-k selection runs BEFORE any memory/edge-
-    # feature gather and HBM traffic scales with k, not m_r (the paper's
-    # 67% MEM saving). "recent" ranks by SAT logit (the paper's pruner);
-    # "uniform"/"reservoir" rank by a stateless-hash priority instead.
-    def sampler(params, aux, state, edge_feats, vids, t_query):
+    def select(params, aux, state, vids, t_query):
         nbr_ids, nbr_ts, nbr_eid, valid = mailbox.gather_neighbors(
             state, vids)
         dt = jnp.maximum(t_query[:, None] - nbr_ts, 0.0) * valid
@@ -305,13 +399,9 @@ def make_sampler(cfg):
         else:
             sel_ids, sel_eid, sel_dt = nbr_ids, nbr_eid, dt
             sel_logits, sel_valid = logits, valid
-        # fetch ONLY the winners' rows (the point of the co-design)
-        s_nbr = state.memory[sel_ids] * sel_valid[..., None]
-        e_nbr = edge_feats[sel_eid] * sel_valid[..., None]
-        return Neighborhood(s_nbr=s_nbr, e_nbr=e_nbr, dt=sel_dt,
-                            valid=sel_valid, logits=sel_logits,
-                            full_logits=logits, full_valid=valid,
-                            full_dt=dt)
+        return Selection(ids=sel_ids, eids=sel_eid, dt=sel_dt,
+                         logits=sel_logits, valid=sel_valid,
+                         full_logits=logits, full_valid=valid, full_dt=dt)
 
     if policy == "uniform":
         name = f"sampler:uniform(k={k})"
@@ -320,7 +410,7 @@ def make_sampler(cfg):
     else:
         name = (f"sampler:prune-then-fetch(k={k})" if k < cfg.m_r
                 else "sampler:score-all")
-    return sampler, name
+    return select, name
 
 
 # ---------------------------------------------------------------------------
@@ -424,24 +514,111 @@ class LastWriteWinsCommitter:
         return state._replace(mail=mail_t, mail_ts=mts_t, mail_valid=mvv_t)
 
 
-def build_stages(cfg, use_kernels: bool = False) -> StageBundle:
+# ---------------------------------------------------------------------------
+# Fused tier: the single-pass step body (§IV, Fig. 4)
+# ---------------------------------------------------------------------------
+
+
+def make_fused_step(cfg):
+    """Build the fused-tier step body: prune metadata -> ONE kernel launch
+    (winner gather + EU + MUU) -> state commits.
+
+    The returned closure replaces the staged ``memory_updater -> commit ->
+    sampler -> aggregator`` chain inside ``TGNPipeline.step``: selection
+    stays a metadata computation (timestamps/ids only, the prune-then-fetch
+    contract), the kernel DMAs only the winners' rows, and the committed
+    memory view inside the batch is resolved through the kernel's phase-0
+    scratch instead of a scatter/gather HBM round-trip. The mail build and
+    the state commits — genuine state writes the paper's design also pays —
+    stay in XLA after the launch.
+    """
+    from repro.kernels import ops as kops  # local: keep core importable
+    from repro.core import tgn             # local: BatchOut (no cycle)
+
+    select, _ = make_selector(cfg)
+    committer = LastWriteWinsCommitter()
+    V = cfg.n_nodes
+
+    def datapath(params, aux, state, edge_feats, vids, t_inst, winners):
+        """Metadata + the one launch. This function must never materialize
+        a neighbor row itself: only ids/timestamps/validity leave XLA
+        (tools/session_lint.py AST-guards it against jnp.concatenate and
+        memory/mail/edge-feature gathers creeping back in)."""
+        sel = select(params, aux, state, vids, t_inst)
+        mail_ts = state.mail_ts[vids]
+        lu_prev = state.last_update[vids]
+        mail_ok = state.mail_valid[vids]
+        # winner-row redirect table (ids only): hit[r, j] >= 0 names the
+        # batch row whose phase-0 GRU output IS the committed memory of
+        # winner (r, j) — the kernel reads it from VMEM scratch, giving the
+        # exact post-commit view the staged path gets from its scatter.
+        R = vids.shape[0]
+        win_rows = jnp.full((V + 1,), -1, jnp.int32).at[
+            jnp.where(winners, vids, V)].set(
+                jnp.arange(R, dtype=jnp.int32))
+        hit = win_rows[sel.ids]
+        h, s_upd = kops.fused_step(
+            vids, sel.ids, sel.eids, hit, mail_ts - lu_prev, mail_ok,
+            sel.dt, sel.logits, sel.valid, state.memory, state.mail,
+            edge_feats, aux["packed_fused"])
+        lu_upd = jnp.where(mail_ok, mail_ts, lu_prev)
+        return sel, h, s_upd, lu_upd
+
+    def fused(params, aux, state, batch, vids, t_inst, vvalid, edge_feats,
+              node_feats):
+        src, dst, eid, ts, valid = batch
+        B = src.shape[0]
+        winners = committer.winners(vids, vvalid, B)
+        sel, h, s_upd, lu_upd = datapath(params, aux, state, edge_feats,
+                                         vids, t_inst, winners)
+        state = committer.commit_memory(state, vids, winners, s_upd, lu_upd)
+        # mail build: committed memory of a VALID row r is exactly
+        # s_upd[r] (duplicates of a vertex compute identical updates and
+        # the LWW commit picks one), so the staged path's post-commit
+        # memory gather is unnecessary; losers' mail is dropped by the
+        # commit anyway.
+        fe = edge_feats[eid]
+        mail_src = memory.build_mail_raw(s_upd[:B], s_upd[B:], fe)
+        mail_dst = memory.build_mail_raw(s_upd[B:], s_upd[:B], fe)
+        new_mail = jnp.concatenate([mail_src, mail_dst], axis=0)
+        state = committer.commit_mail(state, vids, winners, new_mail,
+                                      t_inst)
+        state = mailbox.insert_neighbors(state, src, dst, eid, ts, valid)
+        return tgn.BatchOut(state=state, emb_src=h[:B], emb_dst=h[B:],
+                            attn_logits=sel.full_logits,
+                            nbr_valid=sel.full_valid, nbr_dt=sel.full_dt)
+
+    return fused
+
+
+def build_stages(cfg, use_kernels=False) -> StageBundle:
     """Resolve the stage stack for ``cfg`` (a TGNConfig).
 
-    Pallas kernel backends exist for the LUT encoder paths (MUU) and the
-    SAT+LUT aggregation tail; with ``use_kernels=True`` any stage without a
-    kernel backend silently uses its jnp reference, so every variant —
-    teacher included — builds and runs.
+    ``use_kernels`` picks the tier (see ``KERNEL_TIERS``; booleans
+    accepted). Pallas kernel backends exist for the LUT encoder paths
+    (MUU) and the SAT+LUT aggregation tail; any stage without a kernel
+    backend silently uses its jnp reference, so every variant — teacher
+    included — builds and runs. The fused tier additionally carries the
+    single-pass step body; its per-stage backends are the STAGED ones
+    (``embed`` and distillation views still run stage-at-a-time), and
+    variants outside ``fused_supported`` resolve to their staged program.
     """
     if cfg.attention == "vanilla" and cfg.encoder != "cosine":
         raise ValueError("vanilla attention requires the cosine encoder "
                          "(its K/Q/V inputs consume the cosine encoding "
                          "directly; LUT is a SAT-path optimization)")
-    muu, muu_name = make_memory_updater(cfg, use_kernels)
+    tier = resolved_tier(cfg, use_kernels)
+    staged = tier != "ref"
+    muu, muu_name = make_memory_updater(cfg, staged)
     sampler, sampler_name = make_sampler(cfg)
-    aggregator, agg_name = make_aggregator(cfg, use_kernels)
+    aggregator, agg_name = make_aggregator(cfg, staged)
+    names = {"memory_updater": muu_name, "sampler": sampler_name,
+             "aggregator": agg_name, "committer": "lww-chronological"}
+    fused = None
+    if tier == "fused":
+        fused = make_fused_step(cfg)
+        names["fused_step"] = "step:single-pass-pallas"
     return StageBundle(
         memory_updater=muu, sampler=sampler, aggregator=aggregator,
-        committer=LastWriteWinsCommitter(),
-        names={"memory_updater": muu_name, "sampler": sampler_name,
-               "aggregator": agg_name, "committer": "lww-chronological"},
-        variant_id=variant_lane(cfg, use_kernels))
+        committer=LastWriteWinsCommitter(), names=names,
+        variant_id=variant_lane(cfg, use_kernels), fused=fused)

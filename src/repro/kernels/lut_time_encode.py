@@ -16,16 +16,26 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
+def lut_rows(dt_col, bounds_ref, table_ref, n_entries: int):
+    """The in-kernel LUT row fetch, shared by EVERY kernel body that
+    consumes a folded table (this module, sat_aggregate, fused_step —
+    one definition so the bucketing can never drift between tiers):
+    bucket by boundary count (fp32 accumulate of the 0/1 compares — exact
+    for E <= 2^24 and, unlike an integer reduce, Mosaic-lowerable without
+    a TPU attached), then fetch via one-hot matmul (MXU).
+    ``dt_col`` (rows, 1); bounds (1, E); table (E, D) -> (rows, D)."""
+    rows = dt_col.shape[0]
+    bucket = jnp.sum((dt_col >= bounds_ref[...]).astype(jnp.float32),
+                     axis=1, keepdims=True).astype(jnp.int32)
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (rows, n_entries), 1)
+    one_hot = (lanes == bucket).astype(jnp.float32)
+    return jnp.dot(one_hot, table_ref[...],
+                   preferred_element_type=jnp.float32)
+
+
 def _lut_kernel(dt_ref, bounds_ref, table_ref, out_ref, *, n_entries: int):
     """dt (Bb, 1), bounds (1, E), table (E, D) -> out (Bb, D)."""
-    bb = dt_ref.shape[0]
-    dt = dt_ref[...]
-    bucket = jnp.sum((dt >= bounds_ref[...]).astype(jnp.int32), axis=1,
-                     keepdims=True)
-    lanes = jax.lax.broadcasted_iota(jnp.int32, (bb, n_entries), 1)
-    one_hot = (lanes == bucket).astype(jnp.float32)
-    out_ref[...] = jnp.dot(one_hot, table_ref[...],
-                           preferred_element_type=jnp.float32)
+    out_ref[...] = lut_rows(dt_ref[...], bounds_ref, table_ref, n_entries)
 
 
 @functools.partial(jax.jit, static_argnames=("block_b", "interpret"))

@@ -9,7 +9,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-NEG_INF = -1e30
+from repro.utils import NEG_INF  # single source of truth (see utils.py)
 
 
 def gru_ref(mail: jax.Array, s: jax.Array, w_i: jax.Array, w_h: jax.Array,

@@ -26,7 +26,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-NEG_INF = -1e30
+from repro.utils import NEG_INF  # single source of truth (see utils.py)
+from repro.kernels.lut_time_encode import lut_rows
 
 
 def _sat_kernel(kv_ref, dt_ref, logits_ref, valid_ref, w_v_ref, b_v_ref,
@@ -44,14 +45,10 @@ def _sat_kernel(kv_ref, dt_ref, logits_ref, valid_ref, w_v_ref, b_v_ref,
     kv = kv_ref[...].reshape(bb * k, dkv)
     v = jnp.dot(kv, w_v_ref[...], preferred_element_type=jnp.float32)
 
-    # LUT time rows: bucket by counting boundaries <= dt, then one-hot matmul.
+    # LUT time rows (lut_time_encode.lut_rows: the one shared bucketing
+    # definition across every kernel tier)
     dt = dt_ref[...].reshape(bb * k, 1)
-    bucket = jnp.sum((dt >= bounds_ref[...]).astype(jnp.int32), axis=1,
-                     keepdims=True)                       # (Bb*k, 1)
-    lanes = jax.lax.broadcasted_iota(jnp.int32, (bb * k, n_entries), 1)
-    one_hot = (lanes == bucket).astype(jnp.float32)
-    v = v + jnp.dot(one_hot, table_ref[...],
-                    preferred_element_type=jnp.float32)
+    v = v + lut_rows(dt, bounds_ref, table_ref, n_entries)
     v = v + b_v_ref[...]
     v = v.reshape(bb, k, d)
 

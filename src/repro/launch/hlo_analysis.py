@@ -32,7 +32,11 @@ _DTYPE_BYTES = {
     "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "token": 0,
 }
 
-_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*{\s*$")
+# compiled HLO prints computation headers with a full signature
+# ("name (args) -> result {"); unoptimized HLO (cross-platform lowering,
+# compiler_ir(dialect="hlo")) prints the short form ("name {").
+_COMP_HDR = re.compile(
+    r"^(ENTRY\s+)?%?([\w.\-]+)\s*(?:\(.*\)\s*->.*)?{\s*$")
 _DEF_RE = re.compile(
     r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^)]*\)|[\w\[\],{}]+))\s+"
     r"([\w\-]+)\(")
@@ -147,14 +151,29 @@ def _operand_refs(op: _Op) -> list[str]:
     return _REF_RE.findall(paren)
 
 
-def _operand_bytes(op: _Op, comp: _Computation) -> int:
-    return sum(comp.table[r].bytes_ for r in _operand_refs(op)
-               if r in comp.table)
+_PARAM_KINDS = {"parameter", "constant"}
+
+
+def _operand_bytes(op: _Op, comp: _Computation,
+                   skip_params: bool = False) -> int:
+    total = 0
+    for r in _operand_refs(op):
+        o = comp.table.get(r)
+        if o is None or (skip_params and o.kind in _PARAM_KINDS):
+            continue
+        total += o.bytes_
+    return total
 
 
 def _op_traffic(op: _Op, comp: _Computation,
-                fusion_param_bytes: dict | None = None) -> int:
-    """HBM bytes touched by one op (region-aware)."""
+                fusion_param_bytes: dict | None = None,
+                skip_params: bool = False) -> int:
+    """HBM bytes touched by one op (region-aware). ``skip_params``
+    excludes reads of entry parameters/constants — the *materialized
+    intermediates* view: resident state tables, parameter sets and feature
+    stores are standing storage, so only traffic through freshly
+    materialized buffers is charged (region ops already charge the slice,
+    not the table)."""
     k = op.kind
     if k in _REGION_OPS:
         return 2 * op.bytes_
@@ -164,9 +183,9 @@ def _op_traffic(op: _Op, comp: _Computation,
             refs[1] in comp.table else op.bytes_
         return 2 * upd
     if k == "fusion" and fusion_param_bytes is not None:
-        return op.bytes_ + fusion_param_bytes.get(op.name,
-                                                  _operand_bytes(op, comp))
-    return op.bytes_ + _operand_bytes(op, comp)
+        return op.bytes_ + fusion_param_bytes.get(
+            op.name, _operand_bytes(op, comp, skip_params))
+    return op.bytes_ + _operand_bytes(op, comp, skip_params)
 
 
 _TRANSPARENT_KINDS = {"convert", "bitcast", "copy", "reshape", "transpose",
@@ -192,7 +211,8 @@ def _pure_transparent_bytes(op: _Op, comp: _Computation,
     return None
 
 
-def _fusion_traffic(op: _Op, comp: _Computation, comps: dict) -> int:
+def _fusion_traffic(op: _Op, comp: _Computation, comps: dict,
+                    skip_params: bool = False) -> int:
     """HBM traffic of a fusion op, region-aware:
 
       * an operand whose only fused users are dynamic-slice ops counts at
@@ -274,6 +294,8 @@ def _fusion_traffic(op: _Op, comp: _Computation, comps: dict) -> int:
     for i, r in enumerate(refs):
         if r not in comp.table:
             continue
+        if skip_params and comp.table[r].kind in _PARAM_KINDS:
+            continue
         total += param_eff.get(i, comp.table[r].bytes_)
 
     # result side
@@ -327,8 +349,18 @@ def _trip_count(op: _Op, comps: dict) -> int:
     return 1
 
 
-def analyze(hlo_text: str) -> dict:
-    """Per-device totals with loop multipliers applied."""
+def analyze(hlo_text: str, intermediates_only: bool = False) -> dict:
+    """Per-device totals with loop multipliers applied.
+
+    ``intermediates_only`` switches the byte accounting to the
+    *materialized-intermediates* view: operand reads straight from entry
+    parameters/constants (resident state tables, parameter sets, feature
+    stores) are excluded, so ``bytes`` counts only traffic through buffers
+    the program itself materializes — the quantity a kernel-fusion change
+    moves. Region ops (gather/scatter/dynamic-slice) already charge the
+    touched slice rather than the standing table in both modes.
+    """
+    skip = intermediates_only
     comps = _parse(hlo_text)
     entry = comps.get("__entry__")
     if entry is None:
@@ -379,9 +411,9 @@ def analyze(hlo_text: str) -> dict:
                 if pure is not None:
                     b = pure
                 elif k == "fusion":
-                    b = _fusion_traffic(op, comp, comps)
+                    b = _fusion_traffic(op, comp, comps, skip_params=skip)
                 else:
-                    b = _op_traffic(op, comp)
+                    b = _op_traffic(op, comp, skip_params=skip)
                 totals["bytes"] += mult * b
                 bytes_by_kind[k] += mult * b
                 if mult * b > 1e9:
@@ -425,3 +457,133 @@ def analyze(hlo_text: str) -> dict:
 
 def summarize(hlo_text: str) -> str:
     return json.dumps(analyze(hlo_text), indent=2)
+
+
+# ---------------------------------------------------------------------------
+# Cross-platform lowering + jaxpr-level fallback accounting
+# ---------------------------------------------------------------------------
+
+
+def lowered_hlo_text(fn, *args, platform: str | None = "tpu") -> str:
+    """Lower ``fn(*args)`` (optionally cross-platform — Mosaic lowers
+    Pallas kernels to opaque custom-calls without TPU hardware) and return
+    the unoptimized HLO text for ``analyze``. Raises whatever the lowering
+    raises; callers fall back to ``jaxpr_traffic``."""
+    import jax  # local: keep this module importable without jax
+
+    traced = jax.jit(fn).trace(*args)
+    if platform is None:
+        lowered = traced.lower()
+    else:
+        lowered = traced.lower(lowering_platforms=(platform,))
+    return lowered.compiler_ir(dialect="hlo").as_hlo_text()
+
+
+#: jaxpr primitives whose big operand is only touched in a region —
+#: mirrors _REGION_OPS/_REGION_UPDATE_OPS above.
+_JAXPR_REGION = {"gather", "dynamic_slice"}
+_JAXPR_REGION_UPDATE = {"scatter", "scatter-add", "scatter_add",
+                        "dynamic_update_slice"}
+_JAXPR_CALLS = {"pjit": "jaxpr", "closed_call": "call_jaxpr",
+                "custom_jvp_call": "call_jaxpr",
+                "custom_vjp_call": "call_jaxpr",
+                "remat": "jaxpr", "checkpoint": "jaxpr"}
+
+
+def _aval_bytes(v) -> int:
+    aval = v.aval
+    if not hasattr(aval, "dtype"):
+        return 0
+    size = 1
+    for d in aval.shape:
+        size *= int(d)
+    return size * aval.dtype.itemsize
+
+
+def _is_var(v) -> bool:
+    import jax
+
+    return isinstance(v, jax.core.Var)
+
+
+def jaxpr_traffic(fn, *args, intermediates_only: bool = True) -> dict:
+    """Backend-independent traffic accounting over the closed jaxpr.
+
+    Every equation charges operand + result bytes; ``pallas_call`` stays
+    ONE opaque equation (its internals are VMEM-resident by construction),
+    so the count matches the launch-boundary HBM-traffic semantics of the
+    HLO accounting, pre-fusion. ``intermediates_only`` skips operands that
+    are the jaxpr's own invars/constvars (resident tables and parameters),
+    and region ops charge the touched slice. Also reports
+    ``pallas_launches`` — the per-trace kernel-launch count.
+    """
+    import jax
+
+    closed = jax.make_jaxpr(fn)(*args)
+    totals = {"bytes": 0.0, "pallas_launches": 0}
+    by_prim: dict[str, float] = defaultdict(float)
+
+    def visit(jaxpr, params_set, mult):
+        for eqn in jaxpr.eqns:
+            name = eqn.primitive.name
+            sub = _JAXPR_CALLS.get(name)
+            if sub is not None and sub in eqn.params:
+                inner = eqn.params[sub]
+                inner_jaxpr = getattr(inner, "jaxpr", inner)
+                inner_params = set()
+                for iv, ov in zip(inner_jaxpr.invars, eqn.invars):
+                    if not _is_var(ov) or ov in params_set:
+                        inner_params.add(iv)
+                visit(inner_jaxpr, inner_params, mult)
+                continue
+            if name == "scan":
+                inner = eqn.params["jaxpr"].jaxpr
+                visit(inner, set(), mult * eqn.params["length"])
+                continue
+            if name == "while":
+                visit(eqn.params["body_jaxpr"].jaxpr, set(), mult)
+                continue
+            if name == "pallas_call":
+                totals["pallas_launches"] += int(mult)
+            out_b = sum(_aval_bytes(v) for v in eqn.outvars)
+            if name in _JAXPR_REGION:
+                b = 2 * out_b
+            elif name in _JAXPR_REGION_UPDATE:
+                upd = (eqn.invars[1] if len(eqn.invars) > 1
+                       else eqn.invars[-1])
+                b = 2 * _aval_bytes(upd)
+            else:
+                in_b = 0
+                for v in eqn.invars:
+                    if not _is_var(v):
+                        continue        # literal
+                    if intermediates_only and v in params_set:
+                        continue
+                    in_b += _aval_bytes(v)
+                b = out_b + in_b
+            totals["bytes"] += mult * b
+            by_prim[name] += mult * b
+        return
+
+    top_params = set(closed.jaxpr.invars) | set(closed.jaxpr.constvars)
+    visit(closed.jaxpr, top_params if intermediates_only else set(), 1.0)
+    totals["bytes_by_primitive"] = {
+        k: v for k, v in sorted(by_prim.items(), key=lambda kv: -kv[1])}
+    return totals
+
+
+def step_traffic(fn, *args) -> dict:
+    """Materialized-intermediate bytes of one compiled step, preferring
+    HLO-level accounting over a cross-lowered TPU module (Pallas kernels
+    opaque custom-calls) and falling back to the jaxpr view when the
+    host toolchain cannot cross-lower. Returns
+    ``{"bytes", "accounting", ...}``."""
+    try:
+        txt = lowered_hlo_text(fn, *args, platform="tpu")
+        out = analyze(txt, intermediates_only=True)
+        return {"bytes": out["bytes"], "accounting": "hlo-tpu",
+                "bytes_by_kind": out["bytes_by_kind"]}
+    except Exception as e:             # pragma: no cover - toolchain gaps
+        out = jaxpr_traffic(fn, *args, intermediates_only=True)
+        return {"bytes": out["bytes"], "accounting": f"jaxpr ({e!r:.60})",
+                "bytes_by_kind": out["bytes_by_primitive"]}

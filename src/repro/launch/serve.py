@@ -143,11 +143,11 @@ def run_tgn(args):
         if args.mesh is not None:
             from repro.serving.cluster import ShardedSessionManager
             mgr = ShardedSessionManager(params, edge_feats, node_feats,
-                                        model=cfg, use_kernels=True,
+                                        model=cfg, use_kernels=args.kernels,
                                         mesh=args.mesh, coalesce=coalesce)
         else:
             mgr = SessionManager(params, edge_feats, node_feats, model=cfg,
-                                 use_kernels=True, coalesce=coalesce)
+                                 use_kernels=args.kernels, coalesce=coalesce)
         snapshots = (_SnapshotHooks(mgr, args) if args.snapshot_dir
                      else None)
         tids = []
@@ -189,8 +189,9 @@ def run_tgn(args):
         print("session summary:", mgr.summary())
         return
 
-    engine = StreamingEngine(EngineConfig(model=cfg), params, edge_feats,
-                             node_feats)
+    engine = StreamingEngine(EngineConfig(model=cfg,
+                                          use_kernels=args.kernels),
+                             params, edge_feats, node_feats)
     print("engine stages:", engine.describe())
     if args.window_s:
         batches = stream.time_window(g, args.window_s, args.batch)
@@ -238,6 +239,12 @@ def main():
                     help="comma-separated per-tenant variant specs "
                          "(overrides --tenants; attention+encoder must "
                          "match --variant, sampler/pruning may differ)")
+    ap.add_argument("--kernels", default="staged",
+                    choices=("ref", "staged", "fused"),
+                    help="kernel tier: jnp references, one Pallas kernel "
+                         "per unit, or the fused single-pass step kernel "
+                         "(kernels/fused_step.py; SAT+LUT variants — "
+                         "others degrade to staged)")
     ap.add_argument("--per-cohort", action="store_true",
                     help="dispatch one compiled launch per cohort per "
                          "round (the pre-coalescing baseline) instead of "

@@ -124,8 +124,8 @@ class ShardedSessionManager(SessionManager):
         if self.node_feats is not None:
             self.node_feats = jax.device_put(self.node_feats, rep)
 
-    def _make_cohort(self, cfg: tgn.TGNConfig) -> _ShardedCohort:
-        return _ShardedCohort(cfg, self.use_kernels, self.params, self.mesh)
+    def _make_cohort(self, cfg: tgn.TGNConfig, use_kernels) -> _ShardedCohort:
+        return _ShardedCohort(cfg, use_kernels, self.params, self.mesh)
 
     def _batch_shardings(self) -> tuple:
         return tuple(NamedSharding(self.mesh, s)
@@ -178,7 +178,10 @@ def _capture_tenant(mgr: SessionManager, tid: str,
     meta = {"tenant": tid,
             "variant": pl.variant_name(cohort.cfg),
             "config": dataclasses.asdict(cohort.cfg),
-            "use_kernels": mgr.use_kernels}
+            # the TENANT's resolved kernel tier, not the session default:
+            # lanes pick tiers independently (add_tenant(use_kernels=...))
+            # and a restore must resume on the same numerics
+            "use_kernels": cohort.tier}
     if extra_meta:
         meta.update(extra_meta)
     return st._asdict(), meta
@@ -306,8 +309,12 @@ def restore_tenant(mgr: SessionManager, root: str, tid: str, *,
     d = os.path.join(root, tid)
     meta = snapshot_meta(root, tid, step=step)
     want = meta["config"]
+    # resume on the tier the tenant was serving with (older manifests
+    # recorded the session default — same key, still honored); missing
+    # key = let the target session pick its default
     new = mgr.add_tenant(meta["variant"], name=name or tid,
-                         reservoir_tau=want.get("reservoir_tau"))
+                         reservoir_tau=want.get("reservoir_tau"),
+                         use_kernels=meta.get("use_kernels"))
     cohort = mgr.cohort_of(new)
     got = dataclasses.asdict(cohort.cfg)
     if got != want:

@@ -55,7 +55,9 @@ from repro.serving.session import SessionManager
 class EngineConfig(FrozenConfig):
     model: tgn.TGNConfig = tgn.TGNConfig(attention="sat", encoder="lut",
                                          prune_k=4)
-    use_kernels: bool = True
+    # kernel tier: "ref" | "staged" | "fused" (legacy bools accepted —
+    # see core/stages.KERNEL_TIERS)
+    use_kernels: bool | str = True
     prefetch: int = 2
 
 

@@ -172,11 +172,16 @@ def _idle_dev(B: int) -> tuple:
 
 
 class _Cohort:
-    """Tenants sharing one variant: stacked states + one vmapped step."""
+    """Tenants sharing one variant + kernel tier: stacked states + one
+    vmapped step."""
 
-    def __init__(self, cfg: tgn.TGNConfig, use_kernels: bool, params: dict):
+    def __init__(self, cfg: tgn.TGNConfig, use_kernels, params: dict):
         self.cfg = cfg
         self.pipeline = pl.build_pipeline(cfg, use_kernels=use_kernels)
+        #: resolved kernel tier — cohorts are keyed by (cfg, tier), so a
+        #: fused-lane tenant and a staged-lane tenant of the SAME variant
+        #: form two lanes of the coalesced round.
+        self.tier = self.pipeline.tier
         # folded/packed tables prepared once per cohort; closed over (not a
         # jit argument) because the packed layouts carry static metadata.
         self.aux = self.pipeline.prepare(params)
@@ -288,7 +293,10 @@ class SessionManager:
         self.edge_feats = jnp.asarray(edge_feats)
         self.node_feats = (jnp.asarray(node_feats)
                            if node_feats is not None else None)
-        self._cohorts: dict[tgn.TGNConfig, _Cohort] = {}
+        # keyed by (cfg, resolved kernel tier): tenants may pick a kernel
+        # tier per lane (add_tenant(use_kernels=...)), defaulting to the
+        # session-wide setting
+        self._cohorts: dict[tuple, _Cohort] = {}
         self._tenant_cohort: dict[str, _Cohort] = {}
         self._next_id = 0
         self.metrics: list[dict] = []
@@ -298,9 +306,9 @@ class SessionManager:
         self._drained: tuple[int, float] | None = None   # summary() cache
 
     # -- tenant lifecycle ----------------------------------------------
-    def _make_cohort(self, cfg: tgn.TGNConfig) -> _Cohort:
+    def _make_cohort(self, cfg: tgn.TGNConfig, use_kernels) -> _Cohort:
         """Cohort factory (the sharded session swaps in mesh-placed ones)."""
-        return _Cohort(cfg, self.use_kernels, self.params)
+        return _Cohort(cfg, use_kernels, self.params)
 
     def _tenant_cfg(self, variant, reservoir_tau) -> tgn.TGNConfig:
         base = self.base_cfg
@@ -321,22 +329,29 @@ class SessionManager:
         return cfg
 
     def add_tenant(self, variant=None, *, name: str | None = None,
-                   reservoir_tau: float | None = None) -> str:
+                   reservoir_tau: float | None = None,
+                   use_kernels=None) -> str:
         """Register a tenant stream; returns its id.
 
         ``variant`` is any registry spec sharing the session's parameterized
         axes (attention+encoder); ``prune_k`` and the sampler backend may
-        differ per tenant. Adding a tenant grows its cohort's stacked state
+        differ per tenant, and so may the kernel tier (``use_kernels``:
+        ``"ref"``/``"staged"``/``"fused"`` or a bool; ``None`` = the
+        session default) — lanes of the coalesced round select their tier
+        independently. Adding a tenant grows its cohort's stacked state
         (next launch recompiles for the new tenant count).
         """
         cfg = self._tenant_cfg(variant, reservoir_tau)
+        tier = pl.stages.resolved_tier(
+            cfg, self.use_kernels if use_kernels is None else use_kernels)
         tid = name if name is not None else f"t{self._next_id}"
         self._next_id += 1
         if tid in self._tenant_cohort:
             raise ValueError(f"tenant {tid!r} already exists")
-        cohort = self._cohorts.get(cfg)
+        cohort = self._cohorts.get((cfg, tier))
         if cohort is None:
-            cohort = self._cohorts[cfg] = self._make_cohort(cfg)
+            cohort = self._cohorts[(cfg, tier)] = self._make_cohort(cfg,
+                                                                    tier)
         cohort.add(tid)
         self._tenant_cohort[tid] = cohort
         self._coalesced = None           # fleet layout changed: relaunch
@@ -346,7 +361,7 @@ class SessionManager:
         cohort = self._tenant_cohort.pop(tid)
         cohort.remove(tid)
         if not cohort.tids:
-            self._cohorts.pop(cohort.cfg)
+            self._cohorts.pop((cohort.cfg, cohort.tier))
         self._coalesced = None           # fleet layout changed: relaunch
 
     @property
@@ -373,14 +388,20 @@ class SessionManager:
 
     def describe(self) -> dict:
         """Cohort layout: variant -> (tenant ids, resolved stage backends).
-        Cohorts that differ only in ``reservoir_tau`` share a variant name;
-        the later ones are disambiguated with an ``@tau=`` suffix so no
-        cohort's entry is silently overwritten."""
-        out = {}
+        Cohorts that differ only in ``reservoir_tau`` or kernel tier share
+        a variant name; the later ones are disambiguated with ``@tau=`` /
+        ``@<tier>`` suffixes so no cohort's entry is silently
+        overwritten."""
+        out, holders = {}, {}
         for c in self._cohorts.values():
-            key = c.pipeline.variant
+            key = base = c.pipeline.variant
             if key in out:
-                key = f"{key}@tau={c.cfg.reservoir_tau:g}"
+                first = holders[base]
+                if c.cfg.reservoir_tau != first.cfg.reservoir_tau:
+                    key = f"{base}@tau={c.cfg.reservoir_tau:g}"
+                if key in out:
+                    key = f"{key}@{c.tier}"
+            holders.setdefault(base, c)
             out[key] = self._cohort_info(c)
         return out
 

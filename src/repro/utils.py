@@ -69,6 +69,14 @@ def ones(shape: Sequence[int], dtype=jnp.float32) -> jax.Array:
 
 LANE = 128  # MXU/VPU lane width on TPU
 
+#: Masking value for invalid attention logits — the single source of truth
+#: shared by the jnp reference path (core/pruning.py) and every Pallas
+#: kernel (kernels/sat_aggregate.py, kernels/fused_step.py, kernels/ref.py).
+#: A drift between the reference and kernel values would silently break the
+#: fused-vs-staged numeric equivalence the kernel tests pin, so nobody may
+#: define a private copy.
+NEG_INF = -1e30
+
 
 def round_up(x: int, m: int = LANE) -> int:
     return ((x + m - 1) // m) * m

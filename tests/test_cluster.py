@@ -137,6 +137,34 @@ def test_mixed_sampler_cohorts_on_mesh(small_graph):
         _assert_state_equal(ref.state_of(t1), sh.state_of(t2), msg=t2)
 
 
+def test_mixed_kernel_tier_fleet_on_mesh(small_graph):
+    """A fleet mixing the FUSED single-pass lane with a STAGED lane (same
+    variant, two kernel tiers, plus a fused reservoir cohort) on the
+    sharded fabric replays bitwise-identically to the unsharded mixed-tier
+    session — the fused kernel runs inside the one coalesced mesh launch."""
+    g = small_graph
+    cfg, params, ef = _setup(g, key=5)
+    lanes = ((None, "fused"), (None, "staged"),
+             ("sat+lut+np4+reservoir", "fused"))
+    ref = SessionManager(params, ef, model=cfg, use_kernels="staged")
+    sh = cl.ShardedSessionManager(params, ef, model=cfg,
+                                  use_kernels="staged", mesh="tenant=2")
+    rt = [ref.add_tenant(v, use_kernels=t) for v, t in lanes]
+    st = [sh.add_tenant(v, use_kernels=t) for v, t in lanes]
+    assert {c.tier for c in sh._cohorts.values()} == {"fused", "staged"}
+    fr, fs = _feeds(g, rt, rounds=3), _feeds(g, st, rounds=3)
+    for r in range(3):
+        o1 = ref.step({t: fr[t][r] for t in rt})
+        o2 = sh.step({t: fs[t][r] for t in st})
+        assert sh.metrics[-1]["launches"] == 1
+        for t1, t2 in zip(rt, st):
+            np.testing.assert_array_equal(
+                np.asarray(o1[t1].emb_src), np.asarray(o2[t2].emb_src),
+                err_msg=f"round {r} {t2} src")
+    for t1, t2 in zip(rt, st):
+        _assert_state_equal(ref.state_of(t1), sh.state_of(t2), msg=t2)
+
+
 # ---------------------------------------------------------------------------
 # coalesced cross-cohort rounds on the mesh
 # ---------------------------------------------------------------------------

@@ -259,3 +259,56 @@ def test_engine_kernel_and_reference_backends_agree(small_graph):
                                    atol=2e-5)
     np.testing.assert_allclose(np.asarray(eng_k.state.memory),
                                np.asarray(eng_r.state.memory), atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# fused kernel tier (the single-pass step launch)
+# ---------------------------------------------------------------------------
+
+
+def test_fused_tier_resolution_and_describe(small_graph):
+    """``use_kernels="fused"`` selects the single-pass step for SAT+LUT
+    variants and degrades to the staged program — same lane id — for
+    variants the fused kernel does not cover (the teacher)."""
+    g = small_graph
+    dims = dict(n_nodes=g.cfg.n_nodes, n_edges=g.n_edges, f_edge=172,
+                f_mem=8, f_time=8, f_emb=8, m_r=10)
+    d = pl.build_pipeline("sat+lut+np4", use_kernels="fused",
+                          **dims).describe()
+    assert d["tier"] == "fused"
+    assert d["fused_step"] == "step:single-pass-pallas"
+    t_fused = pl.build_pipeline("teacher", use_kernels="fused", **dims)
+    t_staged = pl.build_pipeline("teacher", use_kernels=True, **dims)
+    assert t_fused.tier == "staged"
+    assert t_fused.stages.fused is None
+    assert t_fused.stages.variant_id == t_staged.stages.variant_id
+    # legacy booleans keep resolving to their tiers
+    assert pl.build_pipeline("sat+lut+np4", use_kernels=False,
+                             **dims).tier == "ref"
+    with pytest.raises(ValueError):
+        pl.build_pipeline("sat+lut+np4", use_kernels="warp", **dims)
+
+
+def test_engine_fused_and_staged_backends_agree(small_graph):
+    """A fused-tier engine reproduces the staged-tier trajectory within
+    the kernel tolerances over a multi-batch stream (embeddings AND the
+    committed vertex state)."""
+    g = small_graph
+    dims = dict(n_nodes=g.cfg.n_nodes, n_edges=g.n_edges, f_edge=172,
+                f_mem=16, f_time=16, f_emb=16, m_r=10)
+    cfg = pl.variant_config("sat+lut+np4", **dims)
+    params = tgn.init_params(jax.random.key(5), cfg)
+    ef = jnp.asarray(g.edge_feats)
+    eng_f = StreamingEngine(EngineConfig(model=cfg, use_kernels="fused"),
+                            params, ef)
+    eng_s = StreamingEngine(EngineConfig(model=cfg, use_kernels=True),
+                            params, ef)
+    assert eng_f.describe()["tier"] == "fused"
+    for batch in stream_mod.fixed_count(g, 50, window=slice(0, 150)):
+        hf, _ = eng_f.process(batch)
+        hs, _ = eng_s.process(batch)
+        m = jnp.asarray(batch.valid)[:, None]
+        np.testing.assert_allclose(np.asarray((hf - hs) * m), 0.0,
+                                   atol=2e-5)
+    np.testing.assert_allclose(np.asarray(eng_f.state.memory),
+                               np.asarray(eng_s.state.memory), atol=2e-5)

@@ -345,6 +345,106 @@ def test_coalesced_round_is_exactly_one_compiled_launch(small_graph):
     _assert_state_equal(m1.state_of(a1), m2.state_of(a2), msg="late tenant")
 
 
+def test_mixed_kernel_tier_fleet_replays_bitwise(small_graph):
+    """One session mixing FUSED and STAGED lanes — same variant on two
+    kernel tiers plus a fused reservoir cohort — replays bitwise-
+    identically coalesced vs per-cohort vs N solo single-tenant sessions,
+    through a ragged round and an idle lane. The fused lanes run the
+    single-pass kernel INSIDE the one coalesced launch."""
+    g = small_graph
+    dims = _dims(g, f=8)
+    cfg = pl.variant_config("sat+lut+np4", **dims)
+    params = tgn.init_params(jax.random.key(11), cfg)
+    ef = jnp.asarray(g.edge_feats)
+    lanes = ((None, "fused"), (None, "staged"),
+             ("sat+lut+np4+reservoir", "fused"))
+
+    def fleet(coalesce):
+        mgr = SessionManager(params, ef, model=cfg, use_kernels="staged",
+                             coalesce=coalesce)
+        tids = [mgr.add_tenant(v, use_kernels=t) for v, t in lanes]
+        return mgr, tids
+
+    m1, t1 = fleet(True)
+    m2, t2 = fleet(False)
+    # same variant on two tiers = two lanes; reservoir fused = a third
+    assert len(m1.describe()) == 3
+    tiers = {c.tier for c in m1._cohorts.values()}
+    assert tiers == {"fused", "staged"}
+    solos = []
+    for v, t in lanes:
+        m = SessionManager(params, ef, model=cfg, use_kernels="staged")
+        solos.append((m, m.add_tenant(v, use_kernels=t)))
+
+    feeds = [list(_tenant_stream(g, i, batch=30, rounds=4))
+             for i in range(len(lanes))]
+    widths = (30, 18, 30, 30)             # round 1 ragged
+    for r, w in enumerate(widths):
+        batches = {}
+        for i in range(len(lanes)):
+            if r == 2 and i == 1:         # staged lane idles round 2
+                continue
+            b = feeds[i][r]
+            batches[i] = stream_mod.EdgeBatch(
+                src=b.src[:w], dst=b.dst[:w], eid=b.eid[:w],
+                ts=b.ts[:w], valid=b.valid[:w], neg_dst=b.neg_dst[:w])
+        o1 = m1.step({t1[i]: b for i, b in batches.items()})
+        o2 = m2.step({t2[i]: b for i, b in batches.items()})
+        assert m1.metrics[-1]["launches"] == 1
+        for i, b in batches.items():
+            sm, st = solos[i]
+            o3 = sm.step({st: b})[st]
+            for field in ("emb_src", "emb_dst", "attn_logits",
+                          "nbr_valid", "nbr_dt"):
+                a = np.asarray(getattr(o1[t1[i]], field))
+                np.testing.assert_array_equal(
+                    a, np.asarray(getattr(o2[t2[i]], field)),
+                    err_msg=f"round {r} lane {i} {field} (per-cohort)")
+                np.testing.assert_array_equal(
+                    a, np.asarray(getattr(o3, field)),
+                    err_msg=f"round {r} lane {i} {field} (solo)")
+    for i in range(len(lanes)):
+        sm, st = solos[i]
+        _assert_state_equal(m1.state_of(t1[i]), m2.state_of(t2[i]),
+                            msg=f"lane {i} coalesced-vs-percohort")
+        _assert_state_equal(m1.state_of(t1[i]), sm.state_of(st),
+                            msg=f"lane {i} coalesced-vs-solo")
+
+
+def test_snapshot_restore_preserves_tenant_kernel_tier(small_graph,
+                                                       tmp_path):
+    """A tenant serving on a non-default kernel tier must RESUME on that
+    tier after snapshot/restore: the manifest records the cohort's
+    resolved tier (not the session default), and the restored trajectory
+    continues bitwise-identically to the unsnapshotted one."""
+    from repro.serving.cluster import restore_tenant, snapshot_tenant
+
+    g = small_graph
+    dims = _dims(g, f=8)
+    cfg = pl.variant_config("sat+lut+np4", **dims)
+    params = tgn.init_params(jax.random.key(13), cfg)
+    ef = jnp.asarray(g.edge_feats)
+    feed = list(_tenant_stream(g, 0, batch=25, rounds=4))
+
+    mgr = SessionManager(params, ef, model=cfg, use_kernels="staged")
+    a = mgr.add_tenant(use_kernels="fused")
+    mgr.step({a: feed[0]})
+    mgr.step({a: feed[1]})
+    snapshot_tenant(mgr, a, str(tmp_path), step=2)
+    mgr.step({a: feed[2]})
+    mgr.step({a: feed[3]})
+    mgr.sync()
+
+    other = SessionManager(params, ef, model=cfg, use_kernels="staged")
+    b = restore_tenant(other, str(tmp_path), a, name="b")
+    assert other.cohort_of(b).tier == "fused"
+    other.step({b: feed[2]})
+    other.step({b: feed[3]})
+    other.sync()
+    _assert_state_equal(mgr.state_of(a), other.state_of(b),
+                        msg="restored fused lane")
+
+
 def test_edge_counts_defer_to_summary(small_graph):
     """Steady-state rounds never block on a D2H sync: the per-round edge
     count stays a pending device value in ``metrics`` and is resolved only

@@ -1,19 +1,31 @@
 #!/usr/bin/env python
-"""Staging-regression guard for the serving hot path (part of make lint).
+"""Staging/fusion-regression guard for the serving hot paths (make lint).
 
-The coalesced round path in ``src/repro/serving/session.py`` must stay
-allocation-free on the host: batches are written in place into the
-pre-allocated ``_HostStager`` ring buffers and shipped with ONE
-``device_put`` per round. A ``jnp.pad`` / ``jnp.stack`` / ``jnp.asarray``
-/ ``jnp.concatenate`` creeping back into that path reintroduces exactly
-the per-tenant-per-round device dispatches the coalesced design removed —
-so this check walks the AST of the round-path functions and fails on any
-such call.
+Two invariants, both enforced by walking ASTs (a regression here would be
+silent — everything still computes the right numbers, just slower):
 
-The per-cohort baseline (``_percohort_round`` / ``_cohort_round`` /
-``_as_device_tuple`` / ``_pad_dev`` / ``_idle_dev``) is exempt BY DESIGN:
-it is kept as the measured comparison point for
-``benchmarks/multitenant.py`` and intentionally stages through device ops.
+1. The coalesced round path in ``src/repro/serving/session.py`` must stay
+   allocation-free on the host: batches are written in place into the
+   pre-allocated ``_HostStager`` ring buffers and shipped with ONE
+   ``device_put`` per round. A ``jnp.pad`` / ``jnp.stack`` /
+   ``jnp.asarray`` / ``jnp.concatenate`` creeping back into that path
+   reintroduces exactly the per-tenant-per-round device dispatches the
+   coalesced design removed.
+
+   The per-cohort baseline (``_percohort_round`` / ``_cohort_round`` /
+   ``_as_device_tuple`` / ``_pad_dev`` / ``_idle_dev``) is exempt BY
+   DESIGN: it is kept as the measured comparison point for
+   ``benchmarks/multitenant.py`` and intentionally stages through device
+   ops.
+
+2. The fused single-pass step path must never re-materialize what the one
+   launch exists to avoid: in ``stages.make_fused_step``'s ``datapath``
+   and in ``kernels/ops.fused_step`` no ``jnp.concatenate``/``jnp.stack``
+   (the kv concat) and no subscript gather of ``.memory`` / ``.mail`` /
+   ``edge_feats`` (the ``(B, k, Dkv)`` neighbor tensor — winner rows are
+   DMA'd inside the kernel, everything XLA-side is ids/timestamps
+   metadata); and ``kernels/fused_step.py`` itself must stay concat-free
+   (the kernel computes split matmuls).
 
 Exits non-zero listing every violation; also fails if a guarded function
 disappears (a rename must update this guard, not silently skip it).
@@ -25,67 +37,116 @@ import os
 import sys
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-SESSION = os.path.join(REPO, "src", "repro", "serving", "session.py")
 
-#: (class name or None, function name) -> the round-path functions that
-#: must stay free of host-side jnp staging.
-GUARDED = (
-    (None, "_as_host_tuple"),
-    ("_HostStager", "stage"),
-    ("SessionManager", "step"),
-    ("SessionManager", "_coalesced_round"),
-    ("SessionManager", "_ensure_layout"),
-)
+#: jnp attributes that mean per-batch device staging is back (rule 1).
+STAGING = {"pad", "stack", "asarray", "concatenate"}
+#: jnp attributes that mean the fused datapath re-materializes (rule 2).
+FUSING = {"concatenate", "stack"}
+#: subscripted names/attributes that mean a neighbor-row gather is back.
+GATHERS = {"memory", "mail", "edge_feats"}
 
-#: jnp attributes that mean per-batch device staging is back.
-BANNED = {"pad", "stack", "asarray", "concatenate"}
+#: file -> ((scope, function, banned jnp attrs, ban gathers?), ...)
+#: ``scope`` is a class name, "*" for any nesting (module / closure), or
+#: None for module level.
+GUARDED = {
+    os.path.join("src", "repro", "serving", "session.py"): (
+        (None, "_as_host_tuple", STAGING, False),
+        ("_HostStager", "stage", STAGING, False),
+        ("SessionManager", "step", STAGING, False),
+        ("SessionManager", "_coalesced_round", STAGING, False),
+        ("SessionManager", "_ensure_layout", STAGING, False),
+    ),
+    os.path.join("src", "repro", "core", "stages.py"): (
+        ("*", "datapath", FUSING, True),
+    ),
+    os.path.join("src", "repro", "kernels", "ops.py"): (
+        (None, "fused_step", FUSING, True),
+    ),
+    os.path.join("src", "repro", "kernels", "fused_step.py"): (
+        ("*", "_fused_kernel", FUSING, False),
+        ("*", "fused_step_pallas", FUSING, False),
+    ),
+}
 
 
 def _functions(tree: ast.Module) -> dict:
+    """(scope, name) -> FunctionDef; scope is the enclosing class for
+    methods, None for module level, and every function is ALSO indexed
+    under the wildcard scope "*" (closures inside factories)."""
     found = {}
-    for node in tree.body:
-        if isinstance(node, ast.FunctionDef):
-            found[(None, node.name)] = node
-        elif isinstance(node, ast.ClassDef):
-            for sub in node.body:
-                if isinstance(sub, ast.FunctionDef):
-                    found[(node.name, sub.name)] = sub
+
+    def visit(node, cls):
+        for sub in ast.iter_child_nodes(node):
+            if isinstance(sub, ast.FunctionDef):
+                found.setdefault(("*", sub.name), sub)
+                found[(cls, sub.name)] = found.get((cls, sub.name), sub)
+                visit(sub, cls)
+            elif isinstance(sub, ast.ClassDef):
+                for fn in sub.body:
+                    if isinstance(fn, ast.FunctionDef):
+                        found[(sub.name, fn.name)] = fn
+                        found.setdefault(("*", fn.name), fn)
+                        visit(fn, sub.name)
+            else:
+                visit(sub, cls)
+
+    visit(tree, None)
     return found
 
 
-def _violations(fn: ast.FunctionDef) -> list:
+def _violations(fn: ast.FunctionDef, banned: set, gathers: bool) -> list:
     out = []
     for node in ast.walk(fn):
         if (isinstance(node, ast.Attribute)
                 and isinstance(node.value, ast.Name)
-                and node.value.id == "jnp" and node.attr in BANNED):
+                and node.value.id == "jnp" and node.attr in banned):
             out.append((node.lineno, f"jnp.{node.attr}"))
+        if gathers and isinstance(node, ast.Subscript):
+            v = node.value
+            name = (v.attr if isinstance(v, ast.Attribute)
+                    else v.id if isinstance(v, ast.Name) else None)
+            if name in GATHERS:
+                out.append((node.lineno, f"subscript gather of {name!r}"))
     return out
 
 
-def main() -> int:
-    with open(SESSION) as f:
-        tree = ast.parse(f.read(), SESSION)
+def check_file(relpath: str, guards) -> tuple[int, list]:
+    with open(os.path.join(REPO, relpath)) as f:
+        tree = ast.parse(f.read(), relpath)
     functions = _functions(tree)
-    errors = []
-    checked = 0
-    for key in GUARDED:
-        fn = functions.get(key)
-        qual = ".".join(p for p in key if p)
+    errors, checked = [], 0
+    base = os.path.basename(relpath)
+    for scope, name, banned, gathers in guards:
+        fn = functions.get((scope, name))
+        qual = ".".join(p for p in (None if scope == "*" else scope, name)
+                        if p)
         if fn is None:
-            errors.append(f"guarded function {qual} not found in "
-                          "session.py — update tools/session_lint.py "
-                          "alongside the rename")
+            errors.append(f"guarded function {qual} not found in {base} — "
+                          "update tools/session_lint.py alongside the "
+                          "rename")
             continue
         checked += 1
-        for lineno, what in _violations(fn):
-            errors.append(f"session.py:{lineno}: {what} in {qual} — the "
-                          "coalesced round path must stage through the "
-                          "in-place _HostStager ring buffers, not "
-                          "per-batch device ops")
+        for lineno, what in _violations(fn, banned, gathers):
+            errors.append(
+                f"{base}:{lineno}: {what} in {qual} — "
+                + ("the coalesced round path must stage through the "
+                   "in-place _HostStager ring buffers, not per-batch "
+                   "device ops" if banned is STAGING else
+                   "the fused step path must leave row fetches to the "
+                   "kernel's scalar-prefetch DMA (ids/timestamps metadata "
+                   "only outside the launch)"))
+    return checked, errors
+
+
+def main() -> int:
+    errors, checked = [], 0
+    for relpath, guards in GUARDED.items():
+        c, errs = check_file(relpath, guards)
+        checked += c
+        errors.extend(errs)
     for e in errors:
         print(f"session-lint: {e}", file=sys.stderr)
-    print(f"session-lint: {checked} round-path functions checked, "
+    print(f"session-lint: {checked} hot-path functions checked, "
           f"{len(errors)} error(s)")
     return 1 if errors else 0
 
