@@ -11,6 +11,10 @@
 #                     + a toy-scale fused-vs-staged step sweep
 #   make docs-check   intra-repo doc links resolve + every variant spec in
 #                     docs exists in the pipeline registry
+#   make serve-smoke  online-frontend smoke: 3 tenants / 2 cohorts, a few
+#                     hundred deadline-batched edges, a live mid-stream
+#                     tenant attach+detach — asserts ZERO recompiles of
+#                     the coalesced round (tools/serve_smoke.py)
 #   make session-lint the serving round path stages through the in-place
 #                     _HostStager ring buffers (no jnp.pad/jnp.stack/...
 #                     per-tenant staging regressions) AND the fused step
@@ -18,14 +22,14 @@
 #   make lint         pyflakes over src/ tests/ benchmarks/ examples/
 #                     (falls back to a bytecode-compile check when
 #                      pyflakes is not installed; see requirements-dev.txt)
-#                     + docs-check + session-lint + test-sharded +
-#                     test-kernels preflight
+#                     + docs-check + session-lint + serve-smoke +
+#                     test-sharded + test-kernels preflight
 
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test test-sharded test-kernels bench-smoke lint docs-check \
-	session-lint
+.PHONY: test test-sharded test-kernels bench-smoke serve-smoke lint \
+	docs-check session-lint
 
 test:
 	$(PY) -m pytest -x -q
@@ -50,13 +54,16 @@ bench-smoke:
 	              f_mem=16); \
 	          [print(r) for r in rows]"
 
+serve-smoke:
+	$(PY) tools/serve_smoke.py
+
 docs-check:
 	$(PY) tools/docs_check.py
 
 session-lint:
 	$(PY) tools/session_lint.py
 
-lint: docs-check session-lint test-sharded test-kernels
+lint: docs-check session-lint serve-smoke test-sharded test-kernels
 	@if $(PY) -c "import pyflakes" 2>/dev/null; then \
 	    $(PY) -m pyflakes src benchmarks examples tests/*.py; \
 	else \

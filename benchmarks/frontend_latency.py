@@ -1,0 +1,118 @@
+"""Online front-end latency: per-event p50/p99 and edges/s vs deadline
+and tenant count.
+
+The offline sweeps (multitenant.py) measure the ROUND cost; this one
+measures what an online client sees — the queue->flush->launch latency of
+individual edge events under the deadline batcher (serving/frontend.py)
+— over a (deadline x tenant-count) grid. Small deadlines trade throughput
+(smaller flushed batches, more launches) for latency; the sweep makes the
+knee measurable. Every configuration serves on a reserve-enabled session
+(serving/admission.py capacity classes), so the numbers include the live
+-admission serving path, and each run asserts it stayed zero-recompile
+after warmup.
+
+    PYTHONPATH=src python -m benchmarks.frontend_latency
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import save_json
+from repro.core import pipeline as pl, tgn
+from repro.data import temporal_graph as tgd
+from repro.serving.frontend import FrontendConfig, ServingFrontend
+from repro.serving.session import SessionManager
+
+
+def _setup(n_edges=800, f_mem=16):
+    g = tgd.wikipedia_like(n_edges=n_edges)
+    cfg = pl.variant_config("sat+lut+np4", n_nodes=g.cfg.n_nodes,
+                            n_edges=g.n_edges, f_edge=172, f_mem=f_mem,
+                            f_time=f_mem, f_emb=f_mem, m_r=10)
+    params = tgn.init_params(jax.random.key(0), cfg)
+    return g, cfg, params, jnp.asarray(g.edge_feats)
+
+
+def _serve(g, cfg, params, ef, n_tenants, deadline_s, events_per_tenant,
+           rate_eps=20_000.0):
+    """Replay a Poisson-ish open-loop arrival process against the
+    frontend (real wall clock), pumping between arrivals exactly as the
+    asyncio driver would."""
+    mgr = SessionManager(params, ef, model=cfg, reserve=True)
+    tids = [mgr.add_tenant() for _ in range(n_tenants)]
+    # pad_quantum == max_rows: every flush compiles to the SAME width,
+    # the strict zero-retrace recipe (a smaller quantum amortizes compile
+    # over a few widths instead — cheaper rows, more executables)
+    fe = ServingFrontend(mgr, FrontendConfig(
+        max_wait_s=deadline_s, max_rows=64, queue_rows=4096,
+        pad_quantum=64))
+
+    # warmup: one full-width round through every tenant, then freeze the
+    # compile counters — serving must stay inside this executable
+    for tid in tids:
+        for i in range(64):
+            fe.submit(tid, int(g.src[i]), int(g.dst[i]), i,
+                      float(g.ts[i]), int(g.dst[(i + 3) % g.n_edges]))
+    fe.pump(force=True)
+    mgr.sync()
+    fe.event_latencies.clear()
+    c0 = mgr.compile_counters()
+
+    gap = 1.0 / rate_eps                 # inter-arrival per tenant column
+    t0 = time.perf_counter()
+    for i in range(events_per_tenant):
+        e = (16 + i) % g.n_edges
+        for tid in tids:
+            fe.submit(tid, int(g.src[e]), int(g.dst[e]), e,
+                      float(g.ts[e]), int(g.dst[(e + 3) % g.n_edges]))
+        fe.pump()
+        deadline = t0 + (i + 1) * gap
+        while time.perf_counter() < deadline:
+            fe.pump()
+    fe.pump(force=True)
+    mgr.sync()
+    wall = time.perf_counter() - t0
+
+    c1 = mgr.compile_counters()
+    assert c1["round_traces"] == c0["round_traces"], (c0, c1)
+    lat = np.array(fe.event_latencies)
+    edges = events_per_tenant * n_tenants
+    return {
+        "tenants": n_tenants,
+        "deadline_ms": deadline_s * 1e3,
+        "events": edges,
+        "rounds": fe.rounds,
+        "p50_ms": float(np.percentile(lat, 50) * 1e3),
+        "p99_ms": float(np.percentile(lat, 99) * 1e3),
+        "eps": int(edges / wall),
+    }
+
+
+def sweep(tenant_counts=(1, 4), deadlines_ms=(1.0, 5.0, 20.0),
+          events_per_tenant=400):
+    g, cfg, params, ef = _setup()
+    rows = []
+    for n in tenant_counts:
+        for d in deadlines_ms:
+            rows.append(_serve(g, cfg, params, ef, n, d / 1e3,
+                               events_per_tenant))
+    return rows
+
+
+def main(full: bool = False):
+    print("== online frontend: per-event latency vs deadline x tenants ==")
+    rows = sweep(tenant_counts=(1, 4, 8) if full else (1, 4),
+                 events_per_tenant=1200 if full else 400)
+    for r in rows:
+        print(f"  T={r['tenants']:2d} deadline={r['deadline_ms']:5.1f}ms "
+              f"p50={r['p50_ms']:7.2f}ms p99={r['p99_ms']:7.2f}ms "
+              f"{r['eps']:8d} E/s  ({r['rounds']} rounds)")
+    save_json("frontend_latency.json", {"sweep": rows})
+
+
+if __name__ == "__main__":
+    main()

@@ -14,8 +14,9 @@ import time
 def main() -> None:
     full = "--full" in sys.argv
     from benchmarks import (fig5_latency_throughput, fig6_perf_model,
-                            fig7_accuracy_latency, fused_step, multitenant,
-                            roofline, sharded_session, table1_case_study,
+                            fig7_accuracy_latency, frontend_latency,
+                            fused_step, multitenant, roofline,
+                            sharded_session, table1_case_study,
                             table2_model_opts, vertex_collectives)
     benches = [
         ("table1_case_study", table1_case_study),
@@ -25,6 +26,7 @@ def main() -> None:
         ("fig7_accuracy_latency", fig7_accuracy_latency),
         ("fused_step", fused_step),
         ("multitenant", multitenant),
+        ("frontend_latency", frontend_latency),
         ("sharded_session", sharded_session),
         ("vertex_collectives", vertex_collectives),
         ("roofline", roofline),

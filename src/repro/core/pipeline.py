@@ -378,6 +378,18 @@ class CoalescedRound:
     ring insert make them bitwise no-ops, so per-tenant trajectories are
     identical to the per-cohort launches.
 
+    **Reserved lane slots (live admission).** A segment's ``rows`` is a
+    *capacity*, not a head-count: the serving session may lay a cohort
+    out with spare idle-masked slots (``serving/admission.py`` capacity
+    classes). Attaching a tenant into a spare slot — or detaching one and
+    leaving its slot idle — changes nothing this class was built from, so
+    the SAME compiled program keeps serving: no relayout, no recompile,
+    no round stall. Only exhausting a capacity class forces a new
+    ``CoalescedRound`` (the slow path, identical to cohort growth).
+    ``traces`` counts compilations of this launch (the body traces once
+    per new static signature), so serving tests can assert live admission
+    never recompiled: a fast attach/detach leaves ``traces`` untouched.
+
     Calling convention::
 
         outs, edges = round(params, states, superbatch, edge_feats,
@@ -409,6 +421,10 @@ class CoalescedRound:
         #: number of compiled executions dispatched through this round
         #: launch (the serving tests' one-launch-per-round guard).
         self.calls = 0
+        #: number of TRACES of the round body — one per compiled
+        #: executable (jit traces exactly on cache miss), i.e. the
+        #: compile counter the live-admission zero-recompile guard reads.
+        self.traces = 0
 
         steps = [(pipe.step, aux) for pipe, aux, _rows in self.parts]
         segs = self.segments
@@ -425,6 +441,7 @@ class CoalescedRound:
         # executable per widths vector — the same recompile behavior the
         # per-cohort dispatch has per cohort.
         def round_fn(params, states, batch, ef, nf, widths):
+            self.traces += 1          # trace time == compile time, not per call
             outs = []
             for (lo, hi), (step, aux), state, w in zip(segs, steps, states,
                                                        widths):

@@ -18,10 +18,19 @@ every tenant's VertexState (atomic, crc-checked) every
 snapshotted there instead of starting it fresh — including onto a
 different mesh shape.
 
+``--listen HOST:PORT`` swaps the offline replay for the ONLINE serving
+front-end (serving/frontend.py): a newline-delimited-JSON endpoint
+accepting per-tenant edge events, micro-batched into coalesced rounds
+under a latency deadline, with live tenant attach/detach over the wire
+landing in the compiled round without a recompile (serving/admission.py
+capacity classes). See docs/SERVING.md for the protocol.
+
 ``--mode lm``: batched prefill+decode generation with a reduced-config LM.
 
 Examples:
     PYTHONPATH=src python -m repro.launch.serve --mode tgn --edges 4000
+    PYTHONPATH=src python -m repro.launch.serve --mode tgn --tenants 2 \\
+        --listen 127.0.0.1:8471 --deadline-ms 5
     PYTHONPATH=src python -m repro.launch.serve --mode tgn --tenants 4
     PYTHONPATH=src python -m repro.launch.serve --mode tgn \\
         --tenant-variants sat+lut+np4,sat+lut+np4+reservoir
@@ -112,12 +121,11 @@ class _SnapshotHooks:
                   "save(s) skipped while a previous write was in flight")
 
 
-def run_tgn(args):
+def _tgn_setup(args):
+    """Shared --mode tgn setup: dataset + config + params + features."""
     from repro.core import tgn
     from repro.core.pipeline import variant_config
-    from repro.data import temporal_graph as tgd, stream
-    from repro.serving.engine import EngineConfig, StreamingEngine
-    from repro.serving.session import SessionManager
+    from repro.data import temporal_graph as tgd
 
     g = tgd.DATASETS[args.dataset](n_edges=args.edges)
     cfg = variant_config(
@@ -129,10 +137,74 @@ def run_tgn(args):
     node_feats = g.node_feats
     edge_feats = (jnp.asarray(g.edge_feats) if g.edge_feats.shape[1] else
                   jnp.zeros((g.n_edges, cfg.f_edge), jnp.float32))
+    return g, cfg, params, edge_feats, node_feats
 
-    tenant_variants = ([v for v in args.tenant_variants.split(",") if v]
-                       if args.tenant_variants else
-                       [args.variant] * args.tenants)
+
+def _tenant_variants(args) -> list:
+    return ([v for v in args.tenant_variants.split(",") if v]
+            if args.tenant_variants else [args.variant] * args.tenants)
+
+
+def run_frontend(args):
+    """--listen: the online serving front-end (serving/frontend.py).
+
+    Boots a reserve-enabled SessionManager (live admission: attach/detach
+    over the wire land in the compiled round without a recompile), wraps
+    it in the deadline-batching ServingFrontend, and serves the
+    newline-delimited-JSON protocol on the requested address. One request
+    dict per line, one response per line — see docs/SERVING.md."""
+    import asyncio
+
+    from repro.serving.admission import CapacityLadder
+    from repro.serving.frontend import (FrontendConfig, ServingFrontend,
+                                        serve_jsonl)
+    from repro.serving.session import SessionManager
+
+    _g, cfg, params, edge_feats, node_feats = _tgn_setup(args)
+    mgr = SessionManager(params, edge_feats, node_feats, model=cfg,
+                         use_kernels=args.kernels, reserve=CapacityLadder())
+    for i, v in enumerate(_tenant_variants(args)):
+        mgr.add_tenant(v, name=f"t{i}")
+    fcfg = FrontendConfig(max_wait_s=args.deadline_ms / 1e3,
+                          max_rows=args.max_rows,
+                          queue_rows=args.queue_rows,
+                          pad_quantum=args.pad_quantum)
+    fe = ServingFrontend(mgr, fcfg)
+    host, _, port = args.listen.partition(":")
+
+    async def serve():
+        await fe.start()
+        server = await serve_jsonl(fe, host or "127.0.0.1", int(port or 0))
+        addr = server.sockets[0].getsockname()
+        print(f"serving JSON-lines on {addr[0]}:{addr[1]} "
+              f"(deadline {fcfg.max_wait_s * 1e3:.1f}ms, "
+              f"max-rows {fcfg.max_rows}, tenants {list(mgr.tenants)})",
+              flush=True)
+        try:
+            if args.serve_seconds > 0:
+                await asyncio.sleep(args.serve_seconds)
+            else:
+                await asyncio.Event().wait()      # forever; Ctrl-C stops
+        finally:
+            server.close()
+            await server.wait_closed()
+            await fe.stop()
+
+    try:
+        asyncio.run(serve())
+    except KeyboardInterrupt:
+        pass
+    print("frontend stats:", fe.stats())
+
+
+def run_tgn(args):
+    from repro.data import stream
+    from repro.serving.engine import EngineConfig, StreamingEngine
+    from repro.serving.session import SessionManager
+
+    g, cfg, params, edge_feats, node_feats = _tgn_setup(args)
+
+    tenant_variants = _tenant_variants(args)
     if args.tenant_variants or args.tenants > 1 or args.mesh is not None \
             or args.snapshot_dir:
         # multi-tenant: split the stream into one contiguous feed per
@@ -262,6 +334,27 @@ def main():
     ap.add_argument("--restore", action="store_true",
                     help="resume tenants found in --snapshot-dir instead "
                          "of starting them fresh (any mesh shape)")
+    ap.add_argument("--listen", default=None, metavar="HOST:PORT",
+                    help="serve the online JSON-lines frontend instead of "
+                         "replaying the offline stream (port 0 = "
+                         "ephemeral; see docs/SERVING.md for the "
+                         "protocol)")
+    ap.add_argument("--deadline-ms", type=float, default=10.0,
+                    help="frontend flush deadline: a round launches when "
+                         "the oldest queued event is this old")
+    ap.add_argument("--max-rows", type=int, default=128,
+                    help="frontend flush size: a round launches when any "
+                         "tenant has this many events queued")
+    ap.add_argument("--queue-rows", type=int, default=1024,
+                    help="per-tenant ingest bound; beyond it events are "
+                         "rejected with retry_after (backpressure)")
+    ap.add_argument("--pad-quantum", type=int, default=32,
+                    help="pad flushed batches to a multiple of this so "
+                         "the compiled round's static widths stay stable "
+                         "(0: exact sizes, retraces on new widths)")
+    ap.add_argument("--serve-seconds", type=float, default=0.0,
+                    help="with --listen: serve this long then exit "
+                         "(0: run until interrupted)")
     ap.add_argument("--batch", type=int, default=200)
     ap.add_argument("--window-s", type=float, default=0.0)
     ap.add_argument("--arch", default="qwen3_8b")
@@ -272,7 +365,12 @@ def main():
         ap.error("--restore needs --snapshot-dir")
     if args.snapshot_every and not args.snapshot_dir:
         ap.error("--snapshot-every needs --snapshot-dir")
-    (run_tgn if args.mode == "tgn" else run_lm)(args)
+    if args.listen is not None and args.mode != "tgn":
+        ap.error("--listen is a --mode tgn feature")
+    if args.listen is not None:
+        run_frontend(args)
+    else:
+        (run_tgn if args.mode == "tgn" else run_lm)(args)
 
 
 if __name__ == "__main__":

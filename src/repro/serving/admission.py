@@ -1,0 +1,166 @@
+"""Live tenant admission: capacity classes over the coalesced lane table.
+
+The coalesced round (``core/pipeline.py::CoalescedRound``) compiles ONE
+launch whose lane table — which cohort owns which contiguous rows of the
+super-batch — is static. Growing a cohort's stacked tables therefore
+recompiles the round, which an *online* frontend cannot afford mid-stream.
+
+This module supplies the reservation policy that makes attach/detach a
+fast path instead:
+
+``CapacityLadder``
+    maps a tenant count to a pre-allocated capacity CLASS (2, 4, 8, ...)
+    with ``headroom`` spare slots guaranteed after every relayout. Spare
+    slots hold init-state rows and are idle-masked every round — the
+    established all-``valid=False`` bitwise no-op — so they cost one
+    masked lane row, not a recompile. A relayout happens only when a
+    class is exhausted, i.e. O(log n) times over a tenant ramp instead of
+    every attach.
+
+``AdmissionController``
+    a thin audited wrapper over ``SessionManager.add_tenant`` /
+    ``remove_tenant`` / ``prewarm_cohort`` that records, per admission,
+    whether it landed on the fast path (in-place slot write) or forced a
+    relayout — the ledger the frontend's stats endpoint and the
+    zero-recompile acceptance tests read.
+
+The manager itself enforces the semantics (``serving/session.py``
+``_Cohort.add``/``remove``); everything here is policy + bookkeeping, so
+the offline drivers keep their exact-size eager-shrink behavior simply by
+not passing a reserve.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+class CapacityLadder:
+    """Capacity classes for cohort lane slots.
+
+    ``capacity_for(n)`` returns the stacked-table rows to lay out for
+    ``n`` resident tenants: the smallest class holding ``n + headroom``,
+    so immediately after any relayout there are at least ``headroom``
+    spare slots — the NEXT attaches are guaranteed fast-path. Past the
+    top of the explicit ladder, classes keep doubling.
+
+    The default ladder (2, 4, 8, ..., 64; headroom 1) relays out a
+    single-cohort fleet at sizes 2->3, 4->5, 8->9, ...: growth costs
+    amortize to O(log n) recompiles while idle-slot overhead stays under
+    2x, the classic doubling trade.
+    """
+
+    def __init__(self, classes: tuple = (2, 4, 8, 16, 32, 64),
+                 headroom: int = 1):
+        if not classes or list(classes) != sorted(set(classes)):
+            raise ValueError("classes must be strictly increasing")
+        if headroom < 1:
+            raise ValueError("headroom must be >= 1 (zero headroom means "
+                             "every attach relays out — that is the "
+                             "reserve=None behavior)")
+        self.classes = tuple(int(c) for c in classes)
+        self.headroom = int(headroom)
+
+    def capacity_for(self, n_tenants: int) -> int:
+        """Smallest class with room for ``n_tenants`` plus headroom."""
+        need = max(n_tenants + self.headroom, self.classes[0])
+        for c in self.classes:
+            if c >= need:
+                return c
+        c = self.classes[-1]
+        while c < need:        # geometric growth past the ladder top
+            c *= 2
+        return c
+
+    def __repr__(self) -> str:
+        return (f"CapacityLadder(classes={self.classes}, "
+                f"headroom={self.headroom})")
+
+
+@dataclass(frozen=True)
+class Admission:
+    """One audited attach/detach/prewarm outcome."""
+    tid: str | None       #: tenant id (None for prewarm)
+    action: str           #: "attach" | "detach" | "prewarm"
+    fast: bool            #: True = landed in the compiled program as-is
+    relayout: bool        #: True = coalesced layout rebuilt (slow path)
+    new_cohort: bool      #: True = a new variant lane was created
+    size: int             #: cohort tenants AFTER the admission
+    capacity: int         #: cohort stacked rows AFTER the admission
+
+
+class AdmissionController:
+    """Audited live admission over a reserve-enabled ``SessionManager``.
+
+    ::
+
+        mgr = SessionManager(params, ef, model=cfg, reserve=True)
+        adm = AdmissionController(mgr)
+        adm.prewarm("np4")              # lane compiled before tenant 1
+        tid = adm.attach("np4")         # fast path: in-place slot write
+        adm.detach(tid)                 # fast path: swap-remove, slot idles
+        adm.log[-1].fast                # -> True
+    """
+
+    def __init__(self, mgr):
+        if getattr(mgr, "reserve", None) is None:
+            raise ValueError(
+                "AdmissionController needs a reserve-enabled manager "
+                "(SessionManager(..., reserve=True) or an explicit "
+                "CapacityLadder); without spare lane slots every "
+                "admission is a relayout")
+        self.mgr = mgr
+        #: chronological ``Admission`` records, newest last.
+        self.log: list[Admission] = []
+
+    def _record(self, tid, action) -> Admission:
+        last = self.mgr.last_admission or {}
+        cohort = self.mgr._tenant_cohort.get(tid)
+        size = cohort.size if cohort is not None else 0
+        cap = cohort.capacity if cohort is not None else 0
+        adm = Admission(tid=tid, action=action,
+                        fast=not (last.get("relayout")
+                                  or last.get("new_cohort")),
+                        relayout=bool(last.get("relayout")),
+                        new_cohort=bool(last.get("new_cohort")),
+                        size=size, capacity=cap)
+        self.log.append(adm)
+        return adm
+
+    def attach(self, variant=None, *, name: str | None = None,
+               reservoir_tau: float | None = None,
+               use_kernels=None) -> str:
+        tid = self.mgr.add_tenant(variant, name=name,
+                                  reservoir_tau=reservoir_tau,
+                                  use_kernels=use_kernels)
+        self._record(tid, "attach")
+        return tid
+
+    def detach(self, tid: str) -> Admission:
+        self.mgr.remove_tenant(tid)
+        return self._record(tid, "detach")
+
+    def prewarm(self, variant=None, *,
+                reservoir_tau: float | None = None,
+                use_kernels=None) -> None:
+        """Materialize a variant lane at reserve capacity with zero
+        tenants, so its first tenant attaches fast-path."""
+        self.mgr.prewarm_cohort(variant, reservoir_tau=reservoir_tau,
+                                use_kernels=use_kernels)
+        self.log.append(Admission(tid=None, action="prewarm", fast=False,
+                                  relayout=True, new_cohort=True,
+                                  size=0, capacity=0))
+
+    def stats(self) -> dict:
+        """Per-cohort occupancy plus the fast/slow admission tallies."""
+        occupancy = [
+            {"tenants": list(c.tids), "size": c.size,
+             "capacity": c.capacity, "spare": c.spare}
+            for c in self.mgr._cohorts.values()
+        ]
+        return {
+            "cohorts": occupancy,
+            "admissions": len(self.log),
+            "fast": sum(1 for a in self.log if a.fast),
+            "relayouts": sum(1 for a in self.log if a.relayout),
+            "compile": self.mgr.compile_counters(),
+        }

@@ -57,9 +57,9 @@ class _ShardedCohort(_Cohort):
     """A cohort whose stacked tables live sharded on the fabric mesh."""
 
     def __init__(self, cfg: tgn.TGNConfig, use_kernels: bool, params: dict,
-                 mesh: Mesh):
+                 mesh: Mesh, reserve=None):
         self.mesh = mesh
-        super().__init__(cfg, use_kernels, params)
+        super().__init__(cfg, use_kernels, params, reserve=reserve)
 
     def _build_launches(self) -> None:
         super()._build_launches()        # keeps the unsharded _vstep1 peek
@@ -80,18 +80,13 @@ class _ShardedCohort(_Cohort):
             self.aux, donate_state=True, in_shardings=in_sh,
             out_shardings=self.out_shardings)
 
-    def _fit(self, state):
-        """Pad the stacked tables to the mesh capacity (idle init-state
-        rows) and place every leaf with its PartitionSpec."""
-        n = int(state.memory.shape[0])
-        cap = tsh.tenant_capacity(n, self.mesh)
-        if cap > n:
-            row = self.pipeline.init_state()
-            pads = jax.tree.map(lambda x: jnp.repeat(x[None], cap - n,
-                                                     axis=0), row)
-            state = jax.tree.map(lambda t, p: jnp.concatenate([t, p],
-                                                              axis=0),
-                                 state, pads)
+    def _target_capacity(self, n: int) -> int:
+        """Mesh-aligned capacity: the reserve ladder (when enabled) picks
+        the class, then the mesh rounds it up to a tenant-axis multiple."""
+        return tsh.tenant_capacity(super()._target_capacity(n), self.mesh)
+
+    def _place(self, state):
+        """Place every leaf with its PartitionSpec."""
         return jax.device_put(state, self.state_shardings)
 
     def launch(self, params, stacked_batch, edge_feats, node_feats,
@@ -125,7 +120,8 @@ class ShardedSessionManager(SessionManager):
             self.node_feats = jax.device_put(self.node_feats, rep)
 
     def _make_cohort(self, cfg: tgn.TGNConfig, use_kernels) -> _ShardedCohort:
-        return _ShardedCohort(cfg, use_kernels, self.params, self.mesh)
+        return _ShardedCohort(cfg, use_kernels, self.params, self.mesh,
+                              reserve=self.reserve)
 
     def _batch_shardings(self) -> tuple:
         return tuple(NamedSharding(self.mesh, s)
@@ -155,9 +151,6 @@ class ShardedSessionManager(SessionManager):
         super().set_state(tid, st)
         cohort = self.cohort_of(tid)
         cohort.state = jax.device_put(cohort.state, cohort.state_shardings)
-
-    def _cohort_info(self, c) -> dict:
-        return {**super()._cohort_info(c), "capacity": c.capacity}
 
     def describe(self) -> dict:
         return {**super().describe(), "mesh": dict(self.mesh.shape)}

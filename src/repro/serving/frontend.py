@@ -1,0 +1,377 @@
+"""Online serving front-end: async ingestion + deadline batching.
+
+Layered over ``SessionManager`` (ideally reserve-enabled — see
+``serving/admission.py``) this module turns per-tenant edge EVENTS into
+the per-round edge BATCHES the coalesced launch consumes:
+
+``DeadlineBatcher``
+    pure, clock-injected micro-batching. Events enqueue into bounded
+    per-tenant FIFO queues; a round flushes when any tenant has
+    ``max_rows`` pending OR the oldest pending event has waited
+    ``max_wait_s``, whichever first. Full queues reject with
+    ``RetryAfter`` (bounded memory, never silent drops). Flushed batches
+    are padded (repeat-last-row, ``valid=False``) to a ``pad_quantum``
+    multiple so the round's static widths vector — and therefore the
+    compiled executable — stays stable under jittery arrival rates.
+
+``ServingFrontend``
+    the serving shell: a synchronous ``pump()`` core (testable without an
+    event loop) driving ``SessionManager.step`` plus an asyncio driver
+    (``start``/``stop``) and a request dispatcher (``handle``) speaking a
+    dict protocol — op "ingest" | "attach" | "detach" | "stats" |
+    "flush". Live attach/detach land mid-stream on the reserve fast path:
+    no recompile, surviving tenants' trajectories bitwise-unchanged.
+
+``serve_jsonl``
+    the stdlib wire transport: newline-delimited JSON over
+    ``asyncio.start_server``, one request dict per line, one response
+    dict per line. ``launch/serve.py --listen HOST:PORT`` boots it.
+
+The batcher never touches the device: it hands ``EdgeBatch`` dicts to
+``SessionManager.step``, which stages through the in-place host ring
+buffers as always. A fake ``clock`` makes every deadline path
+deterministic under test.
+"""
+from __future__ import annotations
+
+import asyncio
+import json
+import time
+from collections import deque
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.data.stream import EdgeBatch
+
+
+class RetryAfter(Exception):
+    """Backpressure: the tenant's ingest queue is full.
+
+    Carries the suggested retry delay; the transport maps it to a
+    structured ``{"ok": false, "error": "retry_after", ...}`` response
+    (HTTP would say 429) instead of growing the queue without bound.
+    """
+
+    def __init__(self, tid: str, seconds: float, depth: int):
+        super().__init__(f"tenant {tid!r} queue full ({depth} rows); "
+                         f"retry after {seconds:.3f}s")
+        self.tid = tid
+        self.seconds = seconds
+        self.depth = depth
+
+
+@dataclass(frozen=True)
+class FrontendConfig:
+    """Knobs of the deadline batcher + backpressure contract."""
+    max_wait_s: float = 0.010   #: flush when the oldest event is this old
+    max_rows: int = 128         #: flush when any tenant has this many rows
+    queue_rows: int = 1024      #: per-tenant bound; beyond it -> RetryAfter
+    retry_after_s: float = 0.05  #: suggested client backoff on rejection
+    #: pad flushed batches (repeat-last, ``valid=False``) to a multiple of
+    #: this, so the compiled round sees a stable widths vector. 0 = exact
+    #: (every new flush size is a potential retrace).
+    pad_quantum: int = 0
+
+
+def _pad_rows(cols: tuple, quantum: int) -> tuple:
+    """Repeat-last-row pad ``(src, dst, eid, ts, valid, neg)`` columns up
+    to a ``quantum`` multiple, padding rows ``valid=False`` — numerically
+    a masked no-op, exactly the offline driver's padding convention."""
+    n = len(cols[0])
+    if quantum <= 0 or n % quantum == 0:
+        return cols
+    b = ((n + quantum - 1) // quantum) * quantum
+    out = []
+    for i, c in enumerate(cols):
+        reps = np.repeat(c[-1:], b - n, axis=0)
+        if i == 4:                       # the valid mask
+            reps = np.zeros(b - n, dtype=bool)
+        out.append(np.concatenate([c, reps], axis=0))
+    return tuple(out)
+
+
+class DeadlineBatcher:
+    """Bounded per-tenant event queues with deadline/size flush triggers.
+
+    Pure host-side bookkeeping — inject a fake ``clock`` to test every
+    trigger deterministically. Each pending event is one edge
+    ``(src, dst, eid, ts, neg_dst)`` plus its arrival wall time.
+    """
+
+    def __init__(self, cfg: FrontendConfig, clock=time.monotonic):
+        self.cfg = cfg
+        self.clock = clock
+        self._q: dict[str, deque] = {}
+        self.rejected = 0       #: events refused with RetryAfter
+        self.accepted = 0       #: events enqueued
+        self.flushes = 0        #: rounds handed out by take()
+
+    def add_tenant(self, tid: str) -> None:
+        self._q.setdefault(tid, deque())
+
+    def drop_tenant(self, tid: str) -> deque:
+        """Detach bookkeeping; returns (possibly non-empty) leftovers."""
+        return self._q.pop(tid, deque())
+
+    def submit(self, tid: str, src: int, dst: int, eid: int, ts: float,
+               neg_dst: int = 0) -> int:
+        """Enqueue one edge event; returns the tenant's queue depth.
+        Raises ``RetryAfter`` when the bounded queue is full."""
+        q = self._q[tid]
+        if len(q) >= self.cfg.queue_rows:
+            self.rejected += 1
+            raise RetryAfter(tid, self.cfg.retry_after_s, len(q))
+        q.append((int(src), int(dst), int(eid), float(ts), int(neg_dst),
+                  self.clock()))
+        self.accepted += 1
+        return len(q)
+
+    def depths(self) -> dict:
+        """{tid: pending rows} — the manager's queue-depth provider."""
+        return {tid: len(q) for tid, q in self._q.items()}
+
+    def oldest(self) -> float | None:
+        """Arrival time of the oldest pending event, None when idle."""
+        arrivals = [q[0][5] for q in self._q.values() if q]
+        return min(arrivals) if arrivals else None
+
+    def due(self, now: float | None = None) -> bool:
+        """Should a round flush now? True when any tenant hit
+        ``max_rows`` or the oldest pending event aged past
+        ``max_wait_s``."""
+        if any(len(q) >= self.cfg.max_rows for q in self._q.values()):
+            return True
+        oldest = self.oldest()
+        if oldest is None:
+            return False
+        now = self.clock() if now is None else now
+        return (now - oldest) >= self.cfg.max_wait_s
+
+    def next_deadline(self) -> float | None:
+        """Absolute clock time of the pending deadline, None when idle."""
+        oldest = self.oldest()
+        return None if oldest is None else oldest + self.cfg.max_wait_s
+
+    def take(self) -> tuple:
+        """Drain up to ``max_rows`` per tenant into ``EdgeBatch``es
+        (leftovers stay queued FIFO for the next round). Tenants with
+        nothing pending are omitted — the coalesced round idle-masks
+        them. Returns ``(batches, arrivals)``: the round's ``{tid:
+        EdgeBatch}`` plus the drained events' arrival clock times (for
+        latency accounting; padding rows excluded)."""
+        batches, arrivals = {}, []
+        for tid, q in self._q.items():
+            if not q:
+                continue
+            rows = [q.popleft() for _ in range(min(len(q),
+                                                   self.cfg.max_rows))]
+            src, dst, eid, ts, neg, arrival = zip(*rows)
+            arrivals.extend(arrival)
+            cols = (np.asarray(src, np.int32), np.asarray(dst, np.int32),
+                    np.asarray(eid, np.int32), np.asarray(ts, np.float32),
+                    np.ones(len(rows), bool), np.asarray(neg, np.int32))
+            batches[tid] = EdgeBatch(*_pad_rows(cols, self.cfg.pad_quantum))
+        if batches:
+            self.flushes += 1
+        return batches, arrivals
+
+
+class ServingFrontend:
+    """Deadline-batched online serving over a ``SessionManager``.
+
+    The synchronous core (``submit``/``pump``/``handle``) is complete on
+    its own — tests drive it with a fake clock and zero event-loop
+    machinery. ``start()``/``stop()`` wrap it in an asyncio task that
+    sleeps until the next deadline (or an ingest wake) and pumps.
+
+    ``record_rounds=True`` keeps a log of every flushed ``{tid: batch}``
+    mapping — the replay tape the bitwise acceptance test feeds to an
+    offline ``SessionManager`` driver.
+    """
+
+    def __init__(self, mgr, cfg: FrontendConfig | None = None,
+                 clock=time.monotonic, record_rounds: bool = False):
+        self.mgr = mgr
+        self.cfg = cfg or FrontendConfig()
+        self.clock = clock
+        self.batcher = DeadlineBatcher(self.cfg, clock)
+        for tid in mgr.tenants:
+            self.batcher.add_tenant(tid)
+        # one source of truth: summary()["per_tenant"].queue_depth reads
+        # the live frontend queues
+        mgr.queue_depths = self.batcher.depths
+        self.rounds = 0
+        self.events = 0
+        self.orphaned = 0   #: rows dropped by out-of-band detaches
+        #: per-event queue->flush latency samples (seconds), bounded.
+        self.event_latencies: deque = deque(maxlen=4096)
+        self.round_log: list | None = [] if record_rounds else None
+        self._task: asyncio.Task | None = None
+        self._wake: asyncio.Event | None = None
+        self._stopping = False
+
+    # ------------------------------------------------------------- core
+    def submit(self, tid: str, src: int, dst: int, eid: int, ts: float,
+               neg_dst: int = 0) -> int:
+        if tid not in self.mgr.tenants:
+            raise KeyError(f"unknown tenant {tid!r}")
+        # tenants attached straight through the manager (or an
+        # AdmissionController) get their queue on first ingest
+        self.batcher.add_tenant(tid)
+        depth = self.batcher.submit(tid, src, dst, eid, ts, neg_dst)
+        self.events += 1
+        if self._wake is not None:
+            self._wake.set()
+        return depth
+
+    def pump(self, now: float | None = None, force: bool = False) -> dict:
+        """Flush one round if due (or ``force``). Returns ``{tid:
+        BatchOut}`` (empty when nothing flushed)."""
+        now = self.clock() if now is None else now
+        if not force and not self.batcher.due(now):
+            return {}
+        # a tenant detached out-of-band (straight through the manager or
+        # an AdmissionController, not frontend.detach) leaves an orphaned
+        # queue; drop it rather than step() an unknown tenant
+        known = set(self.mgr.tenants)
+        for tid in [t for t in self.batcher._q if t not in known]:
+            self.orphaned += len(self.batcher.drop_tenant(tid))
+        batches, arrivals = self.batcher.take()
+        if not batches:
+            return {}
+        if self.round_log is not None:
+            self.round_log.append(batches)
+        outs = self.mgr.step(batches)
+        done = self.clock()
+        self.event_latencies.extend(done - a for a in arrivals)
+        self.rounds += 1
+        return outs
+
+    def attach(self, variant=None, *, name: str | None = None,
+               use_kernels=None) -> str:
+        tid = self.mgr.add_tenant(variant, name=name,
+                                  use_kernels=use_kernels)
+        self.batcher.add_tenant(tid)
+        return tid
+
+    def detach(self, tid: str) -> None:
+        """Flush the tenant's pending rows (so no accepted event is
+        silently dropped), then release its lane slot."""
+        if self.batcher.depths().get(tid):
+            self.pump(force=True)
+        self.batcher.drop_tenant(tid)
+        self.mgr.remove_tenant(tid)
+
+    def stats(self) -> dict:
+        lat = sorted(self.event_latencies)
+
+        def pct(p):
+            return lat[min(len(lat) - 1, int(p * len(lat)))] if lat else None
+
+        return {
+            "tenants": list(self.mgr.tenants),
+            "rounds": self.rounds,
+            "events": self.events,
+            "accepted": self.batcher.accepted,
+            "rejected": self.batcher.rejected,
+            "flushes": self.batcher.flushes,
+            "queue_depths": self.batcher.depths(),
+            "latency_p50_s": pct(0.50),
+            "latency_p99_s": pct(0.99),
+            "compile": self.mgr.compile_counters(),
+        }
+
+    # -------------------------------------------------------- dispatcher
+    def handle(self, req: dict) -> dict:
+        """One request dict -> one response dict (the wire protocol).
+
+        ops: ``ingest`` (tid, src, dst, eid, ts[, neg_dst]) |
+        ``attach`` ([variant][, name][, use_kernels]) | ``detach`` (tid) |
+        ``stats`` | ``flush`` (force a round now).
+        """
+        try:
+            op = req.get("op")
+            if op == "ingest":
+                depth = self.submit(req["tid"], req["src"], req["dst"],
+                                    req.get("eid", 0), req["ts"],
+                                    req.get("neg_dst", 0))
+                return {"ok": True, "queued": depth}
+            if op == "attach":
+                tid = self.attach(req.get("variant"),
+                                  name=req.get("name"),
+                                  use_kernels=req.get("use_kernels"))
+                return {"ok": True, "tid": tid,
+                        "admission": dict(self.mgr.last_admission or {})}
+            if op == "detach":
+                self.detach(req["tid"])
+                return {"ok": True,
+                        "admission": dict(self.mgr.last_admission or {})}
+            if op == "stats":
+                return {"ok": True, "stats": self.stats()}
+            if op == "flush":
+                outs = self.pump(force=True)
+                return {"ok": True, "flushed": sorted(outs)}
+            return {"ok": False, "error": "unknown_op", "op": op}
+        except RetryAfter as e:
+            return {"ok": False, "error": "retry_after",
+                    "retry_after_s": e.seconds, "tid": e.tid,
+                    "depth": e.depth}
+        except KeyError as e:
+            return {"ok": False, "error": "unknown_tenant",
+                    "detail": str(e)}
+
+    # ----------------------------------------------------- asyncio shell
+    async def start(self) -> None:
+        """Run the pump loop until ``stop()``."""
+        self._wake = asyncio.Event()
+        self._stopping = False
+        self._task = asyncio.ensure_future(self._run())
+
+    async def stop(self) -> None:
+        self._stopping = True
+        if self._wake is not None:
+            self._wake.set()
+        if self._task is not None:
+            await self._task
+            self._task = None
+        self.pump(force=True)        # drain whatever is still queued
+
+    async def _run(self) -> None:
+        while not self._stopping:
+            self.pump()
+            deadline = self.batcher.next_deadline()
+            wait = (self.cfg.max_wait_s if deadline is None
+                    else max(0.0, deadline - self.clock()))
+            try:
+                await asyncio.wait_for(self._wake.wait(), timeout=wait)
+            except asyncio.TimeoutError:
+                pass
+            self._wake.clear()
+
+
+async def serve_jsonl(frontend: ServingFrontend, host: str = "127.0.0.1",
+                      port: int = 0):
+    """Newline-delimited-JSON transport: one request dict per line, one
+    response per line. Returns the listening ``asyncio.Server`` (query
+    ``server.sockets[0].getsockname()`` for the bound port)."""
+
+    async def client(reader, writer):
+        try:
+            while True:
+                line = await reader.readline()
+                if not line:
+                    break
+                try:
+                    req = json.loads(line)
+                except json.JSONDecodeError as e:
+                    resp = {"ok": False, "error": "bad_json",
+                            "detail": str(e)}
+                else:
+                    resp = frontend.handle(req)
+                writer.write(json.dumps(resp).encode() + b"\n")
+                await writer.drain()
+        finally:
+            writer.close()
+
+    return await asyncio.start_server(client, host, port)

@@ -173,10 +173,21 @@ def _idle_dev(B: int) -> tuple:
 
 class _Cohort:
     """Tenants sharing one variant + kernel tier: stacked states + one
-    vmapped step."""
+    vmapped step.
 
-    def __init__(self, cfg: tgn.TGNConfig, use_kernels, params: dict):
+    With a ``reserve`` (a capacity-class policy — ``serving/admission.py``
+    ``CapacityLadder``) the stacked tables are laid out with SPARE
+    idle-masked slots beyond the tenants present, so attaching a tenant
+    lands in an existing slot (no shape change, the compiled round keeps
+    serving) and detaching one leaves its slot idle-resident; only
+    exhausting the class relays out. Without a reserve (the default) the
+    tables stay exactly tenant-count-sized, shrinking eagerly on removal
+    — the original offline behavior."""
+
+    def __init__(self, cfg: tgn.TGNConfig, use_kernels, params: dict,
+                 reserve=None):
         self.cfg = cfg
+        self.reserve = reserve      # capacity-class policy or None (exact)
         self.pipeline = pl.build_pipeline(cfg, use_kernels=use_kernels)
         #: resolved kernel tier — cohorts are keyed by (cfg, tier), so a
         #: fused-lane tenant and a staged-lane tenant of the SAME variant
@@ -217,39 +228,104 @@ class _Cohort:
 
     @property
     def capacity(self) -> int:
-        """Rows of the stacked tables. Equal to ``size`` here; the sharded
-        cohort pads to a multiple of the mesh tenant axis (extra slots are
-        idle-masked every round)."""
+        """Rows of the stacked tables: ``size`` plus any reserved
+        capacity-class spares and/or mesh padding (spare slots are
+        idle-masked every round — bitwise no-ops)."""
         return 0 if self.state is None else int(self.state.memory.shape[0])
 
+    @property
+    def spare(self) -> int:
+        """Idle reserved slots a fast-path attach can land in."""
+        return self.capacity - self.size
+
+    def _target_capacity(self, n: int) -> int:
+        """Stacked-table rows to lay out for ``n`` tenants (subclass hook:
+        the sharded cohort rounds up to a mesh tenant-axis multiple).
+        With a reserve policy this includes headroom slots so the next
+        attaches stay inside the existing compiled program."""
+        return n if self.reserve is None else self.reserve.capacity_for(n)
+
     def _fit(self, state):
-        """Lay out freshly grown/shrunk stacked tables (subclass hook:
-        pad to capacity and place on the mesh)."""
+        """Lay out freshly grown/shrunk stacked tables: pad the real
+        tenant rows up to the target capacity with idle init-state rows,
+        then place them (subclass hook: mesh placement)."""
+        n = int(state.memory.shape[0])
+        cap = self._target_capacity(len(self.tids))
+        if cap > n:
+            row = self.pipeline.init_state()
+            pads = jax.tree.map(lambda x: jnp.repeat(x[None], cap - n,
+                                                     axis=0), row)
+            state = jax.tree.map(lambda t, p: jnp.concatenate([t, p],
+                                                              axis=0),
+                                 state, pads)
+        return self._place(state)
+
+    def _place(self, state):
+        """Device placement of freshly laid-out tables (subclass hook:
+        the sharded cohort pins its PartitionSpecs)."""
         return state
 
-    def add(self, tid: str) -> None:
+    def ensure_capacity(self) -> None:
+        """Materialize the reserve capacity with ZERO tenants (a prewarmed
+        lane: the variant is resident in the compiled round before its
+        first tenant arrives, so that first attach is a fast path)."""
+        if self.state is None:
+            empty = jax.tree.map(lambda x: x[None][:0],
+                                 self.pipeline.init_state())
+            self.state = self._fit(empty)
+
+    def add(self, tid: str) -> bool:
+        """Attach a tenant. Returns True when the stacked tables were
+        relaid out (a shape change: the coalesced round must rebuild);
+        False when a reserved spare slot absorbed the attach in place —
+        the fast path live admission rides on."""
+        n = self.size
+        if self.reserve is not None and self.state is not None \
+                and self.capacity > n:
+            # fast path: the new tenant's init-state row overwrites an
+            # idle spare slot (spares already hold init rows, but a slot
+            # freed by a detach holds the departed tenant's stale rows)
+            row = self.pipeline.init_state()
+            self.state = self._place(jax.tree.map(
+                lambda t, r: t.at[n].set(r), self.state, row))
+            self.tids.append(tid)
+            return False
         row = jax.tree.map(lambda x: x[None], self.pipeline.init_state())
         if self.state is None:
             st = row
         else:
-            real = jax.tree.map(lambda x: x[:self.size], self.state)
+            real = jax.tree.map(lambda x: x[:n], self.state)
             st = jax.tree.map(lambda t, r: jnp.concatenate([t, r], axis=0),
                               real, row)
         self.tids.append(tid)
         self.state = self._fit(st)
+        return True
 
-    def remove(self, tid: str) -> None:
-        """Release the tenant's slot eagerly: the stacked tables shrink to
-        the remaining tenants (plus mesh padding in the sharded cohort) —
-        a departed tenant never leaves a dead row behind."""
+    def remove(self, tid: str) -> bool:
+        """Release the tenant's slot. Returns True when the tables were
+        relaid out. Without a reserve the slot is released eagerly: the
+        stacked tables shrink to the remaining tenants (plus mesh padding
+        in the sharded cohort) — a departed tenant never leaves a dead row
+        behind. With a reserve the LAST tenant's row swaps into the hole
+        and the freed slot stays resident idle-masked, so a detach never
+        changes the compiled layout."""
         i = self.tids.index(tid)
+        if self.reserve is not None:
+            last = len(self.tids) - 1
+            if i != last:
+                self.state = self._place(jax.tree.map(
+                    lambda x: x.at[i].set(x[last]), self.state))
+                self.tids[i] = self.tids[last]
+            self.tids.pop()
+            return False
         n = self.size
         self.tids.pop(i)
         if not self.tids:
             self.state = None
-            return
+            return True
         keep = np.array([j for j in range(n) if j != i])
         self.state = self._fit(jax.tree.map(lambda x: x[keep], self.state))
+        return True
 
     def launch(self, params: dict, stacked_batch: tuple, edge_feats,
                node_feats, commit: bool = False) -> tgn.BatchOut:
@@ -279,13 +355,23 @@ class SessionManager:
 
     def __init__(self, params: dict, edge_feats, node_feats=None, *,
                  model: tgn.TGNConfig | None = None, variant=None,
-                 use_kernels: bool = False, coalesce: bool = True, **dims):
+                 use_kernels: bool = False, coalesce: bool = True,
+                 reserve=None, **dims):
         if model is None:
             if variant is None:
                 raise TypeError("pass model=TGNConfig or variant= + dims")
             model = pl.variant_config(variant, **dims)
         elif variant is not None or dims:
             raise TypeError("model= is exclusive with variant=/dims")
+        if reserve is True:          # convenience: the default ladder
+            from repro.serving.admission import CapacityLadder
+            reserve = CapacityLadder()
+        #: capacity-class policy (``admission.CapacityLadder`` or any
+        #: object with ``capacity_for(n)``): cohorts hold spare
+        #: idle-masked lane slots so live attach/detach lands in the
+        #: existing compiled round. ``None`` (default) = exact-size
+        #: cohorts, eager shrink — the offline behavior.
+        self.reserve = reserve
         self.base_cfg = model
         self.use_kernels = use_kernels
         self.coalesce = coalesce
@@ -304,11 +390,25 @@ class SessionManager:
         self._coalesced: pl.CoalescedRound | None = None
         self._stager: _HostStager | None = None
         self._drained: tuple[int, float] | None = None   # summary() cache
+        #: fleet-layout rebuilds of the coalesced launch (a relayout means
+        #: the next round compiles a fresh program — the slow path the
+        #: reserve classes exist to avoid)
+        self.relayouts = 0
+        #: what the last add_tenant/remove_tenant did to the layout —
+        #: ``{"tid", "relayout", "new_cohort"}`` (read by the admission
+        #: controller to label fast vs slow admissions)
+        self.last_admission: dict | None = None
+        #: per-tenant serving counters fed by ``step`` (see tenant_stats)
+        self._tenant_stats: dict[str, dict] = {}
+        #: live queue-depth provider (``() -> {tid: rows}``) a serving
+        #: frontend registers, so ``summary()``/``tenant_stats()`` stay
+        #: the one source of truth for the stats endpoint
+        self.queue_depths = None
 
     # -- tenant lifecycle ----------------------------------------------
     def _make_cohort(self, cfg: tgn.TGNConfig, use_kernels) -> _Cohort:
         """Cohort factory (the sharded session swaps in mesh-placed ones)."""
-        return _Cohort(cfg, use_kernels, self.params)
+        return _Cohort(cfg, use_kernels, self.params, reserve=self.reserve)
 
     def _tenant_cfg(self, variant, reservoir_tau) -> tgn.TGNConfig:
         base = self.base_cfg
@@ -349,20 +449,73 @@ class SessionManager:
         if tid in self._tenant_cohort:
             raise ValueError(f"tenant {tid!r} already exists")
         cohort = self._cohorts.get((cfg, tier))
-        if cohort is None:
+        created = cohort is None
+        if created:
             cohort = self._cohorts[(cfg, tier)] = self._make_cohort(cfg,
                                                                     tier)
-        cohort.add(tid)
+        relayout = cohort.add(tid)
         self._tenant_cohort[tid] = cohort
-        self._coalesced = None           # fleet layout changed: relaunch
+        self._tenant_stats[tid] = {"rounds": 0, "rows": 0,
+                                   "last_flush_t": None}
+        self.last_admission = {"tid": tid, "relayout": relayout,
+                               "new_cohort": created}
+        if created or relayout:
+            self._coalesced = None       # fleet layout changed: relaunch
         return tid
 
+    def prewarm_cohort(self, variant=None, *,
+                       reservoir_tau: float | None = None,
+                       use_kernels=None) -> None:
+        """Materialize a variant's cohort with ZERO tenants at its reserve
+        capacity: the lane is compiled into the next round while empty, so
+        the FIRST tenant of that variant attaches on the fast path instead
+        of forcing a mid-serving relayout. Requires ``reserve``."""
+        if self.reserve is None:
+            raise ValueError("prewarm_cohort needs a reserve policy "
+                             "(SessionManager(reserve=...)); without spare "
+                             "lane slots an empty cohort cannot admit "
+                             "anything without a relayout anyway")
+        cfg = self._tenant_cfg(variant, reservoir_tau)
+        tier = pl.stages.resolved_tier(
+            cfg, self.use_kernels if use_kernels is None else use_kernels)
+        if (cfg, tier) in self._cohorts:
+            return
+        cohort = self._cohorts[(cfg, tier)] = self._make_cohort(cfg, tier)
+        cohort.ensure_capacity()
+        self._coalesced = None           # new lane: relaunch (once, now)
+
     def remove_tenant(self, tid: str) -> None:
-        cohort = self._tenant_cohort.pop(tid)
-        cohort.remove(tid)
-        if not cohort.tids:
+        cohort = self._tenant_cohort[tid]
+        # drain in-flight async rounds BEFORE releasing the lane slot:
+        # dispatched rounds still hold the cohort's stacked tables (and
+        # the pending per-round edge scalars in ``metrics`` reference
+        # them), so the slot's rows are shrunk/swapped away only after
+        # everything in flight has landed
+        self.sync()
+        self._tenant_cohort.pop(tid)
+        self._tenant_stats.pop(tid, None)
+        relayout = cohort.remove(tid)
+        if not cohort.tids and cohort.reserve is None:
+            # reserve-less cohorts tear down when empty; reserved lanes
+            # stay resident (capacity held) so re-attach is a fast path
             self._cohorts.pop((cohort.cfg, cohort.tier))
-        self._coalesced = None           # fleet layout changed: relaunch
+            relayout = True
+        self.last_admission = {"tid": tid, "relayout": relayout,
+                               "new_cohort": False}
+        if relayout:
+            self._coalesced = None       # fleet layout changed: relaunch
+
+    def compile_counters(self) -> dict:
+        """The zero-recompile guard's view: ``relayouts`` (coalesced
+        layouts built), ``round_traces`` (compiled executables of the
+        CURRENT round launch — one per new static widths vector), and
+        ``round_calls`` (executions dispatched through it). A live
+        attach/detach that landed in reserved slots leaves ``relayouts``
+        and ``round_traces`` exactly where they were."""
+        c = self._coalesced
+        return {"relayouts": self.relayouts,
+                "round_traces": 0 if c is None else c.traces,
+                "round_calls": 0 if c is None else c.calls}
 
     @property
     def tenants(self) -> tuple:
@@ -384,7 +537,8 @@ class SessionManager:
                                     cohort.state, st)
 
     def _cohort_info(self, c: _Cohort) -> dict:
-        return {"tenants": tuple(c.tids), **c.pipeline.describe()}
+        return {"tenants": tuple(c.tids), "capacity": c.capacity,
+                **c.pipeline.describe()}
 
     def describe(self) -> dict:
         """Cohort layout: variant -> (tenant ids, resolved stage backends).
@@ -460,6 +614,7 @@ class SessionManager:
     def _ensure_layout(self, width: int) -> pl.CoalescedRound:
         if self._coalesced is None:
             self._coalesced = self._make_coalesced()
+            self.relayouts += 1
         if self._stager is None or self._stager.rows != self._coalesced.rows:
             self._stager = self._make_stager(self._coalesced.rows, width)
         self._stager.ensure_width(width)
@@ -571,6 +726,12 @@ class SessionManager:
         self.metrics.append({
             "t0": t0, "latency_s": dt, "edges": edges,
             "launches": launches, "tenants_active": len(outs)})
+        for tid, b in batches.items():
+            rows = (b.src if isinstance(b, EdgeBatch) else b[0]).shape[0]
+            ts = self._tenant_stats[tid]
+            ts["rounds"] += 1
+            ts["rows"] += int(rows)
+            ts["last_flush_t"] = t0
         return outs
 
     def sync(self) -> None:
@@ -615,8 +776,20 @@ class SessionManager:
                 return
             yield batches, self.step(batches)
 
+    def tenant_stats(self) -> dict:
+        """Per-tenant serving metrics — ``{tid: {queue_depth, rounds,
+        rows, last_flush_t}}``: the frontend's live ingest-queue depth
+        (0 unless a frontend registered its ``queue_depths`` provider),
+        rounds participated, rows submitted (padding included), and the
+        wall clock of the last round the tenant joined. This is the one
+        source of truth the frontend's stats endpoint reads."""
+        qd = dict(self.queue_depths()) if self.queue_depths else {}
+        return {tid: {"queue_depth": int(qd.get(tid, 0)), **st}
+                for tid, st in self._tenant_stats.items()}
+
     def summary(self) -> dict:
-        """Aggregate round metrics (first round skipped: jit warmup).
+        """Aggregate round metrics (first round skipped: jit warmup),
+        plus ``per_tenant`` serving counters (``tenant_stats``).
 
         Steps are async, so per-round walls are reconstructed from the
         dispatch timestamps — ``wall(k) = t0(k+1) - t0(k)``, with the last
@@ -644,4 +817,5 @@ class SessionManager:
             "p99_round_ms": float(np.percentile(walls, 99) * 1e3),
             "throughput_eps": (float(edges / walls.sum())
                                if walls.sum() > 0 else 0.0),
+            "per_tenant": self.tenant_stats(),
         }

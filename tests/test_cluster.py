@@ -346,6 +346,37 @@ def test_sharded_capacity_shrinks_eagerly(small_graph):
     assert set(out) == set(tids[1:])
 
 
+def test_sharded_reserve_live_admission(small_graph):
+    """Capacity classes compose with mesh padding: a reserve-enabled
+    sharded fleet fast-path attaches/detaches into mesh-aligned spare
+    slots (no relayout), stays mesh-sharded, and serves bitwise like the
+    exact-size sharded fleet."""
+    g = small_graph
+    cfg, params, ef = _setup(g, key=5)
+    mgr = cl.ShardedSessionManager(params, ef, model=cfg, mesh="tenant=2",
+                                   reserve=True)
+    a = mgr.add_tenant()
+    cohort = mgr.cohort_of(a)
+    # ladder says 2, the tenant axis keeps it 2 (already a multiple)
+    assert cohort.capacity == 2
+    b = mgr.add_tenant()                     # spare slot: fast path
+    assert not mgr.last_admission["relayout"]
+    assert cohort.capacity == 2
+    assert cohort.state.memory.sharding.spec[0] == "tenant"
+    feeds = _feeds(g, [a, b], rounds=2)
+    for r in range(2):
+        mgr.step({t: feeds[t][r] for t in (a, b)})
+    mgr.remove_tenant(b)                     # swap-remove: slot idles
+    assert not mgr.last_admission["relayout"]
+    assert cohort.capacity == 2 and cohort.size == 1
+    # survivor bitwise vs the exact-size sharded fleet
+    ref = cl.ShardedSessionManager(params, ef, model=cfg, mesh="tenant=2")
+    ra, rb = ref.add_tenant(), ref.add_tenant()
+    for r in range(2):
+        ref.step({ra: feeds[a][r], rb: feeds[b][r]})
+    _assert_state_equal(mgr.state_of(a), ref.state_of(ra), msg="survivor")
+
+
 def test_snapshot_crash_mid_write_recovers(small_graph, tmp_path):
     """A torn write (tmp dir with partial payloads) is invisible to
     restore and garbage-collected by the next snapshot."""

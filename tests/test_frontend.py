@@ -1,0 +1,410 @@
+"""Online serving front-end: deadline batching, backpressure, and LIVE
+tenant admission. The acceptance criterion: attach AND detach a tenant
+mid-stream and (a) the coalesced launch is never recompiled (the
+relayout/trace counters hold) while (b) the surviving tenants'
+trajectories stay bitwise-identical to the offline ``SessionManager``
+driver replaying the same flushed batches."""
+import asyncio
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import pipeline as pl, tgn
+from repro.data import temporal_graph as tgd
+from repro.serving.admission import AdmissionController, CapacityLadder
+from repro.serving.frontend import (DeadlineBatcher, FrontendConfig,
+                                    RetryAfter, ServingFrontend,
+                                    serve_jsonl)
+from repro.serving.session import SessionManager
+
+BASE = "sat+lut+np4"
+OTHER = "sat+lut+np4+reservoir"    # second cohort, same shared params
+
+
+@pytest.fixture(scope="module")
+def small_graph():
+    return tgd.wikipedia_like(n_edges=500)
+
+
+@pytest.fixture(scope="module")
+def setup(small_graph):
+    g = small_graph
+    dims = dict(n_nodes=g.cfg.n_nodes, n_edges=g.n_edges, f_edge=172,
+                f_mem=16, f_time=16, f_emb=16, m_r=10)
+    cfg = pl.variant_config(BASE, **dims)
+    params = tgn.init_params(jax.random.key(0), cfg)
+    return g, cfg, params, jnp.asarray(g.edge_feats)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+def _feed(fe, g, tids, i0, n):
+    """Submit n consecutive graph edges to every tenant in tids."""
+    for i in range(i0, i0 + n):
+        for tid in tids:
+            fe.submit(tid, int(g.src[i]), int(g.dst[i]), i,
+                      float(g.ts[i]), int(g.dst[(i + 7) % g.n_edges]))
+
+
+def _assert_state_equal(a, b, msg=""):
+    for f in a._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(a, f)),
+                                      np.asarray(getattr(b, f)),
+                                      err_msg=f"{msg}:{f}")
+
+
+# ---------------------------------------------------------------------------
+# capacity ladder (pure policy)
+# ---------------------------------------------------------------------------
+
+
+def test_capacity_ladder_headroom():
+    lad = CapacityLadder()
+    assert lad.capacity_for(0) == 2       # prewarm still reserves a class
+    assert lad.capacity_for(1) == 2
+    assert lad.capacity_for(2) == 4       # 2 tenants + headroom 1 -> 4
+    assert lad.capacity_for(4) == 8
+    assert lad.capacity_for(64) == 128    # geometric past the ladder top
+    # the headroom invariant: after laying out for n there is ALWAYS a
+    # spare slot, so the next attach is fast-path
+    for n in range(0, 100):
+        assert lad.capacity_for(n) > n
+
+
+def test_capacity_ladder_validation():
+    with pytest.raises(ValueError):
+        CapacityLadder(classes=(4, 2))
+    with pytest.raises(ValueError):
+        CapacityLadder(headroom=0)
+
+
+# ---------------------------------------------------------------------------
+# deadline batching + backpressure (pure host, fake clock)
+# ---------------------------------------------------------------------------
+
+
+def test_flush_on_deadline():
+    clk = FakeClock()
+    b = DeadlineBatcher(FrontendConfig(max_wait_s=0.010, max_rows=100),
+                        clock=clk)
+    b.add_tenant("a")
+    b.submit("a", 1, 2, 0, 0.0)
+    assert not b.due()                    # fresh event: not due yet
+    clk.advance(0.009)
+    assert not b.due()
+    clk.advance(0.002)                    # oldest now 11ms old
+    assert b.due()
+    batches, arrivals = b.take()
+    assert set(batches) == {"a"} and len(arrivals) == 1
+    assert batches["a"].src.shape == (1,)
+    assert not b.due()                    # drained
+
+
+def test_flush_on_full_with_leftovers():
+    clk = FakeClock()
+    b = DeadlineBatcher(FrontendConfig(max_wait_s=10.0, max_rows=4),
+                        clock=clk)
+    b.add_tenant("a")
+    for i in range(6):
+        b.submit("a", i, i + 10, i, float(i))
+    assert b.due()                        # size trigger, no time passed
+    batches, _ = b.take()
+    np.testing.assert_array_equal(batches["a"].src, [0, 1, 2, 3])
+    assert b.depths() == {"a": 2}         # FIFO leftovers stay queued
+    batches, _ = b.take()
+    np.testing.assert_array_equal(batches["a"].src, [4, 5])
+
+
+def test_reject_when_queue_full():
+    clk = FakeClock()
+    b = DeadlineBatcher(FrontendConfig(max_wait_s=10.0, max_rows=100,
+                                       queue_rows=3, retry_after_s=0.25),
+                        clock=clk)
+    b.add_tenant("a")
+    for i in range(3):
+        b.submit("a", i, i, i, float(i))
+    with pytest.raises(RetryAfter) as e:
+        b.submit("a", 9, 9, 9, 9.0)
+    assert e.value.seconds == 0.25 and e.value.depth == 3
+    assert b.rejected == 1 and b.accepted == 3
+    b.take()                              # drain frees the queue
+    assert b.submit("a", 9, 9, 9, 9.0) == 1
+
+
+def test_pad_quantum_masks_padding():
+    clk = FakeClock()
+    b = DeadlineBatcher(FrontendConfig(max_wait_s=0.0, max_rows=8,
+                                       pad_quantum=8), clock=clk)
+    b.add_tenant("a")
+    for i in range(3):
+        b.submit("a", i, i, i, float(i))
+    batches, _ = b.take()
+    eb = batches["a"]
+    assert eb.src.shape == (8,)           # padded to the quantum
+    np.testing.assert_array_equal(eb.valid,
+                                  [True] * 3 + [False] * 5)
+    np.testing.assert_array_equal(eb.src[3:], [2] * 5)  # repeat-last
+
+
+# ---------------------------------------------------------------------------
+# live admission over the reserve ladder (device, no frontend yet)
+# ---------------------------------------------------------------------------
+
+
+def test_reserve_attach_detach_is_fast_path(setup):
+    """After the first relayout of a cohort, attaches landing in spare
+    slots and EVERY detach leave the compiled layout untouched."""
+    g, cfg, params, ef = setup
+    mgr = SessionManager(params, ef, model=cfg, reserve=True)
+    adm = AdmissionController(mgr)
+    a = adm.attach()                      # new cohort: relayout
+    assert not adm.log[-1].fast
+    b = adm.attach()                      # lands in the spare slot
+    assert adm.log[-1].fast and adm.log[-1].capacity == 2
+    c = adm.attach()                      # class exhausted: relayout to 4
+    assert not adm.log[-1].fast and adm.log[-1].capacity == 4
+    for tid in (c, b):
+        adm.detach(tid)                   # reserve detach NEVER relays out
+        assert adm.log[-1].fast
+    cohort = mgr.cohort_of(a)
+    assert cohort.size == 1 and cohort.capacity == 4
+    s = adm.stats()
+    assert s["fast"] == 3 and s["relayouts"] == 2
+
+
+def test_reserve_detach_swaps_last_slot(setup):
+    """Swap-remove keeps surviving rows aligned with their tids."""
+    g, cfg, params, ef = setup
+    mgr = SessionManager(params, ef, model=cfg, reserve=True)
+    tids = [mgr.add_tenant() for _ in range(3)]
+    marks = {}
+    for k, tid in enumerate(tids):
+        st = mgr.state_of(tid)
+        marks[tid] = st._replace(memory=st.memory + (k + 1.0))
+        mgr.set_state(tid, marks[tid])
+    mgr.remove_tenant(tids[0])            # last tenant swaps into slot 0
+    for tid in tids[1:]:
+        _assert_state_equal(mgr.state_of(tid), marks[tid], msg=tid)
+
+
+def test_empty_reserved_cohort_stays_resident(setup):
+    g, cfg, params, ef = setup
+    mgr = SessionManager(params, ef, model=cfg, reserve=True)
+    a = mgr.add_tenant()
+    cohort = mgr.cohort_of(a)
+    mgr.remove_tenant(a)
+    assert not mgr.last_admission["relayout"]
+    assert cohort.capacity == 2 and cohort.size == 0
+    b = mgr.add_tenant()                  # re-attach: fast path again
+    assert not mgr.last_admission["relayout"]
+    assert mgr.cohort_of(b) is cohort
+
+
+def test_prewarm_makes_first_attach_fast(setup):
+    g, cfg, params, ef = setup
+    mgr = SessionManager(params, ef, model=cfg, reserve=True)
+    mgr.prewarm_cohort(OTHER)
+    tid = mgr.add_tenant(OTHER)
+    assert not mgr.last_admission["relayout"]
+    assert mgr.cohort_of(tid).capacity == 2
+    # without a reserve, prewarm is meaningless and refuses
+    legacy = SessionManager(params, ef, model=cfg)
+    with pytest.raises(ValueError):
+        legacy.prewarm_cohort(OTHER)
+
+
+def test_reserve_spares_are_bitwise_noops(setup):
+    """A reserve-mode fleet (idle spare slots in every cohort) serves the
+    SAME trajectories as the exact-size legacy session, bitwise."""
+    g, cfg, params, ef = setup
+    mgr_r = SessionManager(params, ef, model=cfg, reserve=True)
+    mgr_l = SessionManager(params, ef, model=cfg)
+    tids = {}
+    for v in (None, OTHER):
+        tr = mgr_r.add_tenant(v)
+        tl = mgr_l.add_tenant(v)
+        tids[tr] = tl
+    from repro.data import stream as stream_mod
+    streams = {t: stream_mod.fixed_count(g, 20, window=slice(0, 100),
+                                         seed=i)
+               for i, t in enumerate(tids)}
+    for batches in zip(*[[(t, b) for b in s] for t, s in streams.items()]):
+        round_r = dict(batches)
+        outs_r = mgr_r.step(round_r)
+        outs_l = mgr_l.step({tids[t]: b for t, b in round_r.items()})
+        for t in round_r:
+            np.testing.assert_array_equal(
+                np.asarray(outs_r[t].emb_src),
+                np.asarray(outs_l[tids[t]].emb_src), err_msg=t)
+    for tr, tl in tids.items():
+        _assert_state_equal(mgr_r.state_of(tr), mgr_l.state_of(tl),
+                            msg=tr)
+
+
+# ---------------------------------------------------------------------------
+# THE acceptance test: live attach + detach mid-stream, zero recompiles,
+# survivors bitwise-identical to the offline driver
+# ---------------------------------------------------------------------------
+
+
+def test_live_admission_zero_recompile_bitwise(setup):
+    g, cfg, params, ef = setup
+    mgr = SessionManager(params, ef, model=cfg, reserve=True)
+    a = mgr.add_tenant()          # cohort 1
+    b = mgr.add_tenant(OTHER)     # cohort 2
+    clk = FakeClock()
+    fe = ServingFrontend(
+        mgr, FrontendConfig(max_wait_s=0.010, max_rows=8, queue_rows=64,
+                            pad_quantum=8),
+        clock=clk, record_rounds=True)
+
+    # warm up: both cohorts active, the round compiles once
+    for r in range(3):
+        _feed(fe, g, (a, b), r * 8, 8)
+        assert fe.pump(force=True)
+    mgr.sync()
+    c0 = mgr.compile_counters()
+    assert c0["round_traces"] == 1 and c0["round_calls"] == 3
+
+    # live attach into cohort 1's spare slot (fast path)
+    c = fe.attach(name="live")
+    assert not mgr.last_admission["relayout"]
+    for r in range(3, 6):
+        _feed(fe, g, (a, b, c), r * 8, 8)
+        assert fe.pump(force=True)
+
+    # live detach mid-stream (swap-remove; slot idles, no relayout)
+    fe.detach(c)
+    assert not mgr.last_admission["relayout"]
+    for r in range(6, 9):
+        _feed(fe, g, (a, b), r * 8, 8)
+        assert fe.pump(force=True)
+    mgr.sync()
+
+    # (a) ZERO recompiles across attach + detach: same layout, same
+    # compiled executable, only the call count moved
+    c1 = mgr.compile_counters()
+    assert c1["relayouts"] == c0["relayouts"]
+    assert c1["round_traces"] == c0["round_traces"]
+    assert c1["round_calls"] == 9
+    assert mgr.summary()["per_tenant"][a]["rounds"] == 9
+
+    # (b) survivors bitwise-identical to the OFFLINE driver (legacy
+    # exact-size SessionManager) replaying the same flushed batches
+    offline = SessionManager(params, ef, model=cfg)
+    names = {}
+    variants = {a: None, b: OTHER, c: None}
+    for round_batches in fe.round_log:
+        for tid in round_batches:
+            if tid not in names:
+                names[tid] = offline.add_tenant(variants[tid])
+        offline.step({names[tid]: eb for tid, eb in round_batches.items()})
+    for tid in (a, b):
+        _assert_state_equal(mgr.state_of(tid),
+                            offline.state_of(names[tid]), msg=tid)
+
+
+# ---------------------------------------------------------------------------
+# frontend serving loop details
+# ---------------------------------------------------------------------------
+
+
+def test_frontend_deadline_pump_and_stats(setup):
+    g, cfg, params, ef = setup
+    mgr = SessionManager(params, ef, model=cfg, reserve=True)
+    a = mgr.add_tenant()
+    clk = FakeClock()
+    fe = ServingFrontend(mgr, FrontendConfig(max_wait_s=0.010, max_rows=64),
+                         clock=clk)
+    _feed(fe, g, (a,), 0, 4)
+    assert fe.pump() == {}                # deadline not reached
+    clk.advance(0.011)
+    outs = fe.pump()                      # deadline flush
+    assert set(outs) == {a}
+    st = fe.stats()
+    assert st["rounds"] == 1 and st["events"] == 4
+    assert st["latency_p50_s"] == pytest.approx(0.011)
+    per = mgr.tenant_stats()              # satellite: one source of truth
+    assert per[a]["rows"] == 4 and per[a]["rounds"] == 1
+    assert per[a]["queue_depth"] == 0
+    assert per[a]["last_flush_t"] is not None
+
+
+def test_frontend_detach_flushes_pending(setup):
+    """No accepted event is dropped: detach flushes the tenant's queue
+    into one last round before the slot is released."""
+    g, cfg, params, ef = setup
+    mgr = SessionManager(params, ef, model=cfg, reserve=True)
+    a = mgr.add_tenant()
+    b = mgr.add_tenant()
+    clk = FakeClock()
+    fe = ServingFrontend(mgr, FrontendConfig(max_wait_s=10.0, max_rows=64),
+                         clock=clk)
+    _feed(fe, g, (a, b), 0, 5)
+    fe.detach(b)
+    assert b not in mgr.tenants
+    assert mgr.tenant_stats()[a]["rows"] == 5   # flushed alongside b
+    assert fe.rounds == 1
+
+
+def test_jsonl_server_roundtrip(setup):
+    """The wire transport: ingest / stats / backpressure / live attach
+    over newline-delimited JSON on an ephemeral port."""
+    g, cfg, params, ef = setup
+    mgr = SessionManager(params, ef, model=cfg, reserve=True)
+    mgr.add_tenant(name="t0")
+    fe = ServingFrontend(mgr, FrontendConfig(max_wait_s=0.002, max_rows=16,
+                                             queue_rows=8))
+
+    async def scenario():
+        await fe.start()
+        server = await serve_jsonl(fe, "127.0.0.1", 0)
+        port = server.sockets[0].getsockname()[1]
+        reader, writer = await asyncio.open_connection("127.0.0.1", port)
+
+        async def rpc(req):
+            writer.write(json.dumps(req).encode() + b"\n")
+            await writer.drain()
+            return json.loads(await reader.readline())
+
+        for i in range(4):
+            r = await rpc({"op": "ingest", "tid": "t0",
+                           "src": int(g.src[i]), "dst": int(g.dst[i]),
+                           "eid": i, "ts": float(g.ts[i])})
+            assert r["ok"], r
+        r = await rpc({"op": "attach", "name": "live"})
+        assert r["ok"] and r["tid"] == "live"
+        assert not r["admission"]["relayout"]     # spare slot absorbed it
+        r = await rpc({"op": "ingest", "tid": "nope", "src": 1, "dst": 2,
+                       "ts": 0.0})
+        assert r["error"] == "unknown_tenant"
+        r = await rpc({"op": "flush"})
+        assert r["ok"]
+        r = await rpc({"op": "stats"})
+        assert r["stats"]["rounds"] >= 1
+        assert "t0" in r["stats"]["queue_depths"]
+        r = await rpc({"op": "detach", "tid": "live"})
+        assert r["ok"]
+        writer.write(b"{not json\n")
+        await writer.drain()
+        assert json.loads(await reader.readline())["error"] == "bad_json"
+
+        writer.close()
+        server.close()
+        await server.wait_closed()
+        await fe.stop()
+
+    asyncio.run(scenario())
+    assert fe.stats()["tenants"] == ["t0"]

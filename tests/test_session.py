@@ -224,6 +224,42 @@ def test_remove_tenant_releases_slots_eagerly(small_graph):
     assert cohort.capacity == 0
 
 
+def test_remove_tenant_drains_inflight_rounds(small_graph):
+    """Hardening regression: steps are async, so ``remove_tenant`` must
+    drain the fleet (``sync``) BEFORE the lane slot is released — a
+    dispatched round still reads the stacked tables it launched with.
+    Guards both the ordering (drain strictly precedes the slot release)
+    and the outcome (survivors of a remove issued right behind
+    un-synced steps stay bitwise-correct)."""
+    g = small_graph
+    dims = _dims(g, f=8)
+    cfg = pl.variant_config("sat+lut+np4", **dims)
+    params = tgn.init_params(jax.random.key(7), cfg)
+    ef = jnp.asarray(g.edge_feats)
+    mgr = SessionManager(params, ef, model=cfg)
+    tids = [mgr.add_tenant() for _ in range(3)]
+    its = {t: iter(_tenant_stream(g, i, rounds=2))
+           for i, t in enumerate(tids)}
+    for _ in range(2):       # dispatch rounds, never sync: still in flight
+        mgr.step({t: next(it) for t, it in its.items()})
+    order = []
+    cohort = mgr.cohort_of(tids[1])
+    orig_sync, orig_remove = mgr.sync, cohort.remove
+    mgr.sync = lambda: (order.append("drain"), orig_sync())[-1]
+    cohort.remove = lambda t: (order.append("release"),
+                               orig_remove(t))[-1]
+    mgr.remove_tenant(tids[1])
+    mgr.sync, cohort.remove = orig_sync, orig_remove
+    assert order == ["drain", "release"]
+    for i, t in ((0, tids[0]), (2, tids[2])):
+        eng = StreamingEngine.from_variant("sat+lut+np4", params, ef,
+                                           use_kernels=False, **dims)
+        for batch in _tenant_stream(g, i, rounds=2):
+            eng.process(batch)
+        _assert_state_equal(mgr.state_of(t), eng.state,
+                            msg=f"survivor {t}")
+
+
 def test_tenant_lifecycle_and_errors(small_graph):
     g = small_graph
     dims = _dims(g, f=8)
