@@ -19,17 +19,20 @@
 #                     _HostStager ring buffers (no jnp.pad/jnp.stack/...
 #                     per-tenant staging regressions) AND the fused step
 #                     path never re-materializes neighbor gathers/concats
+#   make coverage     line-coverage floor over the serving stack
+#                     (pytest-cov when installed, else an in-process
+#                      settrace fallback; tools/coverage_gate.py)
 #   make lint         pyflakes over src/ tests/ benchmarks/ examples/
 #                     (falls back to a bytecode-compile check when
 #                      pyflakes is not installed; see requirements-dev.txt)
 #                     + docs-check + session-lint + serve-smoke +
-#                     test-sharded + test-kernels preflight
+#                     test-sharded + test-kernels + coverage preflight
 
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: test test-sharded test-kernels bench-smoke serve-smoke lint \
-	docs-check session-lint
+	docs-check session-lint coverage
 
 test:
 	$(PY) -m pytest -x -q
@@ -63,7 +66,10 @@ docs-check:
 session-lint:
 	$(PY) tools/session_lint.py
 
-lint: docs-check session-lint serve-smoke test-sharded test-kernels
+coverage:
+	$(PY) tools/coverage_gate.py
+
+lint: docs-check session-lint serve-smoke test-sharded test-kernels coverage
 	@if $(PY) -c "import pyflakes" 2>/dev/null; then \
 	    $(PY) -m pyflakes src benchmarks examples tests/*.py; \
 	else \

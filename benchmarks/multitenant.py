@@ -29,9 +29,10 @@ from repro.data import temporal_graph as tgd
 from repro.serving.engine import StreamingEngine
 from repro.serving.session import SessionManager
 
-#: Cohort ladder of the mixed fleets: the prune axis plus a sampler cohort
-#: (a session shares one parameter set, so attention+encoder are fixed and
-#: fleets mix the per-tenant axes: prune_k and the sampler backend).
+#: Cohort ladder of the mixed fleets on the DEFAULT parameter set: the
+#: prune axis plus a sampler cohort (tenants without their own registered
+#: weights must match the session's attention+encoder; ``mixed_models``
+#: below benchmarks the fleets that bring their own — teacher vs student).
 MIXED_VARIANTS = ("sat+lut+np4", "sat+lut+np2", "sat+lut+np4+reservoir",
                   "sat+lut+np4+uniform", "sat+lut+np6")
 
@@ -119,6 +120,60 @@ def mixed_fleet(batch: int = 100, rounds: int = 6, n_edges: int = 3000,
     return {"cohorts": len(mgr.describe()), **mgr.summary()}
 
 
+def mixed_models(batch: int = 100, rounds: int = 8, n_edges: int = 3000,
+                 f_mem: int = 32, students: int = 2):
+    """The A/B-serving fleet: one teacher lane (vanilla+cosine, its own
+    weights) + ``students`` re-distilled student lanes on per-lane
+    registered parameter sets, all advancing in ONE coalesced launch per
+    round — vs the same fleet as separate per-model sessions (one launch
+    per model per round)."""
+    g = tgd.wikipedia_like(n_edges=n_edges)
+    dims = _dims(g, f_mem)
+    cfg = pl.variant_config("sat+lut+np4", **dims)
+    tcfg = pl.variant_config("teacher", **dims)
+    params = tgn.init_params(jax.random.key(0), cfg)
+    ef = jnp.asarray(g.edge_feats)
+    lanes = [("sat+lut+np4", None, cfg, params),
+             ("teacher", "teacher-v1", tcfg,
+              tgn.init_params(jax.random.key(1), tcfg))]
+    for s in range(students):
+        lanes.append(("sat+lut+np4", f"student-{s}", cfg,
+                      tgn.init_params(jax.random.key(2 + s), cfg)))
+    feeds = [_tenant_batches(g, i, batch, rounds)
+             for i in range(len(lanes))]
+
+    mgr = SessionManager(params, ef, model=cfg)
+    for _v, pname, _c, p in lanes[1:]:
+        mgr.register_params(pname, p)
+    tids = [mgr.add_tenant(v, params=pname) for v, pname, _c, _p in lanes]
+    dt_one = _time_rounds(
+        lambda r: mgr.step({t: feeds[i][r] for i, t in enumerate(tids)}),
+        rounds, warmup=2, sync=mgr.sync)
+    launches = {m["launches"] for m in mgr.metrics[2:]}
+
+    # baseline: one separate session per model (per-model launches)
+    sessions = []
+    for i, (v, _pname, c, p) in enumerate(lanes):
+        m = SessionManager(p, ef, model=c)
+        sessions.append((m, m.add_tenant(v if c is cfg else None)))
+
+    def sep_round(r):
+        for i, (m, t) in enumerate(sessions):
+            m.step({t: feeds[i][r]})
+
+    dt_sep = _time_rounds(sep_round, rounds, warmup=2,
+                          sync=lambda: [m.sync() for m, _t in sessions])
+    timed = (rounds - 2) * batch * len(lanes)
+    return {
+        "models": len(lanes), "batch": batch,
+        "param_sets": len(mgr.param_store.names()),
+        "launches_per_round": sorted(launches),
+        "coalesced_eps": round(timed / dt_one),
+        "per_model_eps": round(timed / dt_sep),
+        "speedup": round(dt_sep / dt_one, 2),
+    }
+
+
 def coalesced_sweep(tenant_counts=(2, 4, 8, 16), cohort_counts=(1, 2, 3),
                     batch: int = 25, rounds: int = 22, n_edges: int = 4000,
                     f_mem: int = 32):
@@ -172,7 +227,11 @@ def main(full: bool = False):
               f"speedup={r['speedup']:.2f}x")
     mixed = mixed_fleet()
     print(f"-- mixed-sampler fleet (np4 x2 / uniform / reservoir): {mixed}")
-    save_json("multitenant.json", {"sweep": rows, "mixed": mixed})
+    models = mixed_models()
+    print(f"-- mixed-MODEL fleet (teacher + {models['models'] - 2} "
+          f"students + default): {models}")
+    save_json("multitenant.json", {"sweep": rows, "mixed": mixed,
+                                   "mixed_models": models})
 
     print("== coalesced round (one launch) vs per-cohort launches ==")
     crows = coalesced_sweep()

@@ -28,7 +28,7 @@ step function. Invalid specs raise with the full token menu
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
+from typing import Mapping, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -378,6 +378,16 @@ class CoalescedRound:
     ring insert make them bitwise no-ops, so per-tenant trajectories are
     identical to the per-cohort launches.
 
+    **Per-lane parameter sets.** ``params`` is a tuple aligned with the
+    segments, exactly like ``states``: each segment's vmapped step
+    consumes ITS cohort's resident parameter set as a traced operand —
+    the same position ``batched_step`` passes it — so a teacher lane and
+    two distilled-student lanes (different weights, even different
+    attention/encoder pytrees) advance in the SAME compiled launch while
+    every segment program stays shape-identical to its per-cohort
+    launch (the bitwise contract). A single mapping broadcasts to every
+    lane (the shared-params fleet, the pre-param-store behavior).
+
     **Reserved lane slots (live admission).** A segment's ``rows`` is a
     *capacity*, not a head-count: the serving session may lay a cohort
     out with spare idle-masked slots (``serving/admission.py`` capacity
@@ -395,6 +405,7 @@ class CoalescedRound:
         outs, edges = round(params, states, superbatch, edge_feats,
                             node_feats)
 
+    ``params`` is a per-cohort tuple (or one mapping, broadcast);
     ``outs`` is a per-cohort tuple of ``BatchOut`` (tenant axis leading);
     ``edges`` is the round's valid-edge count summed INSIDE the launch —
     a device scalar the caller can keep pending, so steady-state serving
@@ -443,15 +454,16 @@ class CoalescedRound:
         def round_fn(params, states, batch, ef, nf, widths):
             self.traces += 1          # trace time == compile time, not per call
             outs = []
-            for (lo, hi), (step, aux), state, w in zip(segs, steps, states,
-                                                       widths):
+            for (lo, hi), (step, aux), p, state, w in zip(segs, steps,
+                                                          params, states,
+                                                          widths):
                 seg = tuple(x[lo:hi, :w] for x in batch)
 
-                def one(p, s, b, e, n, _step=step, _aux=aux):
-                    return _step(p, _aux, s, b, e, n)
+                def one(pp, s, b, e, n, _step=step, _aux=aux):
+                    return _step(pp, _aux, s, b, e, n)
 
                 outs.append(jax.vmap(one, in_axes=(None, 0, 0, None, None))(
-                    params, state, seg, ef, nf))
+                    p, state, seg, ef, nf))
             return tuple(outs), jnp.sum(batch[4])
 
         kw = {}
@@ -467,6 +479,8 @@ class CoalescedRound:
                  edge_feats, node_feats=None, *, widths: tuple | None = None):
         if widths is None:
             widths = (superbatch[0].shape[1],) * len(self.parts)
+        if isinstance(params, Mapping):      # shared-params fleet: broadcast
+            params = (params,) * len(self.parts)
         self.calls += 1
         return self._fn(params, states, superbatch, edge_feats, node_feats,
                         tuple(int(w) for w in widths))

@@ -74,6 +74,20 @@ def _leaf_paths(tree: PyTree) -> list[str]:
     return out
 
 
+def tree_digest(tree: PyTree) -> str:
+    """Order-stable crc32 digest over a pytree's leaf paths AND values —
+    the identity a snapshot manifest records for the parameter set a
+    tenant was serving on (cheap content fingerprint, not cryptographic).
+    Two sets digest equal iff every leaf path and every byte match, so a
+    restore can verify it is resuming on the SAME weights."""
+    crc = 0
+    for path, leaf in zip(_leaf_paths(tree), jax.tree.leaves(tree)):
+        arr, _ = _to_saveable(np.asarray(jax.device_get(leaf)))
+        crc = zlib.crc32(path.encode(), crc)
+        crc = zlib.crc32(np.ascontiguousarray(arr).tobytes(), crc)
+    return f"{crc:08x}"
+
+
 def save(root: str, step: int, tree: PyTree, *, meta: dict | None = None,
          keep: int = 3) -> str:
     """Blocking save. Returns the final checkpoint directory."""

@@ -145,6 +145,42 @@ def _tenant_variants(args) -> list:
             if args.tenant_variants else [args.variant] * args.tenants)
 
 
+def _tenant_params(args, n: int) -> list:
+    """--tenant-params names aligned with the tenant list, padded with
+    the session default set (empty entries mean "default" too)."""
+    names = ([p.strip() for p in args.tenant_params.split(",")]
+             if args.tenant_params else [])
+    if len(names) > n:
+        raise SystemExit(f"--tenant-params lists {len(names)} sets for "
+                         f"{n} tenants")
+    names += [""] * (n - len(names))
+    return [p or "default" for p in names]
+
+
+def _ensure_param_sets(mgr, variants, pnames) -> None:
+    """Register every named (non-default) set the fleet asks for.
+
+    The CLI has no weight files to load, so a name maps to a
+    deterministic name-seeded init for that tenant's variant config —
+    the same name always yields the same weights (and so the same
+    snapshot digest across runs). A real deployment would register
+    trained checkpoints here instead.
+    """
+    import zlib
+
+    from repro.core import tgn
+
+    for v, pname in zip(variants, pnames):
+        if pname == "default" or pname in mgr.param_store:
+            continue
+        cfg = mgr._tenant_cfg(v, None, pname)
+        seed = zlib.crc32(pname.encode())
+        mgr.register_params(pname,
+                            tgn.init_params(jax.random.key(seed), cfg))
+        print(f"registered param set {pname!r} "
+              f"(digest {mgr.param_store.digest(pname)}, seed {seed})")
+
+
 def run_frontend(args):
     """--listen: the online serving front-end (serving/frontend.py).
 
@@ -163,8 +199,11 @@ def run_frontend(args):
     _g, cfg, params, edge_feats, node_feats = _tgn_setup(args)
     mgr = SessionManager(params, edge_feats, node_feats, model=cfg,
                          use_kernels=args.kernels, reserve=CapacityLadder())
-    for i, v in enumerate(_tenant_variants(args)):
-        mgr.add_tenant(v, name=f"t{i}")
+    variants = _tenant_variants(args)
+    pnames = _tenant_params(args, len(variants))
+    _ensure_param_sets(mgr, variants, pnames)
+    for i, (v, p) in enumerate(zip(variants, pnames)):
+        mgr.add_tenant(v, name=f"t{i}", params=p)
     fcfg = FrontendConfig(max_wait_s=args.deadline_ms / 1e3,
                           max_rows=args.max_rows,
                           queue_rows=args.queue_rows,
@@ -222,11 +261,13 @@ def run_tgn(args):
                                  use_kernels=args.kernels, coalesce=coalesce)
         snapshots = (_SnapshotHooks(mgr, args) if args.snapshot_dir
                      else None)
+        pnames = _tenant_params(args, len(tenant_variants))
+        _ensure_param_sets(mgr, tenant_variants, pnames)
         tids = []
-        for i, v in enumerate(tenant_variants):
+        for i, (v, p) in enumerate(zip(tenant_variants, pnames)):
             tid = snapshots.restore(v, f"t{i}") if snapshots else None
             tids.append(tid if tid is not None else
-                        mgr.add_tenant(v, name=f"t{i}"))
+                        mgr.add_tenant(v, name=f"t{i}", params=p))
         print("session cohorts:", {v: i["tenants"]
                                    for v, i in mgr.describe().items()
                                    if isinstance(i, dict)
@@ -310,7 +351,16 @@ def main():
     ap.add_argument("--tenant-variants", default="",
                     help="comma-separated per-tenant variant specs "
                          "(overrides --tenants; attention+encoder must "
-                         "match --variant, sampler/pruning may differ)")
+                         "match --variant, sampler/pruning may differ — "
+                         "unless the tenant also names its own param set "
+                         "via --tenant-params)")
+    ap.add_argument("--tenant-params", default="",
+                    help="comma-separated per-tenant parameter-set names "
+                         "aligned with the tenant list (shorter lists pad "
+                         "with the default set). Unknown names are "
+                         "registered from a deterministic name-seeded "
+                         "init; tenants with different sets serve in "
+                         "separate lanes of the SAME coalesced launch")
     ap.add_argument("--kernels", default="staged",
                     choices=("ref", "staged", "fused"),
                     help="kernel tier: jnp references, one Pallas kernel "

@@ -128,10 +128,10 @@ class AdmissionController:
 
     def attach(self, variant=None, *, name: str | None = None,
                reservoir_tau: float | None = None,
-               use_kernels=None) -> str:
+               use_kernels=None, params: str | None = None) -> str:
         tid = self.mgr.add_tenant(variant, name=name,
                                   reservoir_tau=reservoir_tau,
-                                  use_kernels=use_kernels)
+                                  use_kernels=use_kernels, params=params)
         self._record(tid, "attach")
         return tid
 
@@ -141,11 +141,11 @@ class AdmissionController:
 
     def prewarm(self, variant=None, *,
                 reservoir_tau: float | None = None,
-                use_kernels=None) -> None:
+                use_kernels=None, params: str | None = None) -> None:
         """Materialize a variant lane at reserve capacity with zero
         tenants, so its first tenant attaches fast-path."""
         self.mgr.prewarm_cohort(variant, reservoir_tau=reservoir_tau,
-                                use_kernels=use_kernels)
+                                use_kernels=use_kernels, params=params)
         self.log.append(Admission(tid=None, action="prewarm", fast=False,
                                   relayout=True, new_cohort=True,
                                   size=0, capacity=0))

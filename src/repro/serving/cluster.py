@@ -50,16 +50,17 @@ from jax.sharding import Mesh, NamedSharding
 from repro.core import mailbox, pipeline as pl, tgn
 from repro.distributed import checkpoint as ckpt
 from repro.distributed import tgn_sharding as tsh
-from repro.serving.session import SessionManager, _Cohort
+from repro.serving.session import DEFAULT_PARAMS, SessionManager, _Cohort
 
 
 class _ShardedCohort(_Cohort):
     """A cohort whose stacked tables live sharded on the fabric mesh."""
 
     def __init__(self, cfg: tgn.TGNConfig, use_kernels: bool, params: dict,
-                 mesh: Mesh, reserve=None):
+                 mesh: Mesh, reserve=None, param_set: str = DEFAULT_PARAMS):
         self.mesh = mesh
-        super().__init__(cfg, use_kernels, params, reserve=reserve)
+        super().__init__(cfg, use_kernels, params, reserve=reserve,
+                         param_set=param_set)
 
     def _build_launches(self) -> None:
         super()._build_launches()        # keeps the unsharded _vstep1 peek
@@ -89,10 +90,11 @@ class _ShardedCohort(_Cohort):
         """Place every leaf with its PartitionSpec."""
         return jax.device_put(state, self.state_shardings)
 
-    def launch(self, params, stacked_batch, edge_feats, node_feats,
+    def launch(self, stacked_batch, edge_feats, node_feats,
                commit: bool = False) -> tgn.BatchOut:
         fn = self._vstep_commit if commit else self._vstep
-        return fn(params, self.state, stacked_batch, edge_feats, node_feats)
+        return fn(self.params, self.state, stacked_batch, edge_feats,
+                  node_feats)
 
 
 class ShardedSessionManager(SessionManager):
@@ -112,16 +114,23 @@ class ShardedSessionManager(SessionManager):
         if not isinstance(mesh, Mesh):
             mesh = tsh.make_tenant_mesh(mesh)
         self.mesh = mesh
+        # the ParamStore places every registered set via _place_params, so
+        # the default set (and any later register_params) replicate here
         super().__init__(params, edge_feats, node_feats, **kw)
         rep = tsh.replicated(mesh)
-        self.params = jax.device_put(self.params, rep)
         self.edge_feats = jax.device_put(self.edge_feats, rep)
         if self.node_feats is not None:
             self.node_feats = jax.device_put(self.node_feats, rep)
 
-    def _make_cohort(self, cfg: tgn.TGNConfig, use_kernels) -> _ShardedCohort:
-        return _ShardedCohort(cfg, use_kernels, self.params, self.mesh,
-                              reserve=self.reserve)
+    def _place_params(self, params: dict) -> dict:
+        """Replicate a registered parameter set across the fabric mesh."""
+        return jax.device_put(params, tsh.replicated(self.mesh))
+
+    def _make_cohort(self, cfg: tgn.TGNConfig, use_kernels,
+                     param_set: str = DEFAULT_PARAMS) -> _ShardedCohort:
+        return _ShardedCohort(cfg, use_kernels,
+                              self.param_store.get(param_set), self.mesh,
+                              reserve=self.reserve, param_set=param_set)
 
     def _batch_shardings(self) -> tuple:
         return tuple(NamedSharding(self.mesh, s)
@@ -136,6 +145,8 @@ class ShardedSessionManager(SessionManager):
         axis), and the in-launch edge count replicates."""
         cohorts = list(self._cohorts.values())
         rep = tsh.replicated(self.mesh)
+        # position 0 is the per-lane params TUPLE; a single replicated
+        # sharding is a valid pytree prefix, broadcasting to every set
         in_sh = (rep, tuple(c.state_shardings for c in cohorts),
                  self._batch_shardings(), rep, None)
         out_sh = (tuple(c.out_shardings for c in cohorts), rep)
@@ -174,7 +185,13 @@ def _capture_tenant(mgr: SessionManager, tid: str,
             # the TENANT's resolved kernel tier, not the session default:
             # lanes pick tiers independently (add_tenant(use_kernels=...))
             # and a restore must resume on the same numerics
-            "use_kernels": cohort.tier}
+            "use_kernels": cohort.tier,
+            # the parameter set the tenant was serving on + its content
+            # digest: a restore must resume on the SAME weights (a
+            # trajectory is meaningless under different parameters), so
+            # restore_tenant re-binds by name and verifies the digest
+            "param_set": cohort.param_set,
+            "params_digest": mgr.param_store.digest(cohort.param_set)}
     if extra_meta:
         meta.update(extra_meta)
     return st._asdict(), meta
@@ -289,7 +306,8 @@ def list_snapshots(root: str) -> dict:
 
 
 def restore_tenant(mgr: SessionManager, root: str, tid: str, *,
-                   name: str | None = None, step: int | None = None) -> str:
+                   name: str | None = None, step: int | None = None,
+                   params: str | None = None) -> str:
     """Restore a snapshotted tenant into ``mgr`` and return its id.
 
     The target may be a different cohort, a different mesh shape, or the
@@ -298,16 +316,35 @@ def restore_tenant(mgr: SessionManager, root: str, tid: str, *,
     must match the config the target resolves for its variant; mismatch
     raises before any state is touched. Loads are crc-verified by
     ``checkpoint.restore``.
+
+    The tenant resumes on the parameter set the manifest records
+    (``param_set``): the target session must have it registered under the
+    same name with the SAME content — the recorded ``params_digest`` is
+    verified, so a trajectory never silently continues under different
+    weights. Pass ``params=<name>`` to REBIND explicitly onto another
+    registered set instead (an A/B promotion: the caller owns the
+    numerics break, so the digest check is skipped).
     """
     d = os.path.join(root, tid)
     meta = snapshot_meta(root, tid, step=step)
     want = meta["config"]
+    pname = params if params is not None else meta.get("param_set",
+                                                       DEFAULT_PARAMS)
+    try:
+        mgr.param_store.get(pname)
+    except ValueError as e:
+        raise ValueError(
+            f"snapshot {tid!r} is bound to param set {pname!r} which this "
+            f"session has not registered — register_params({pname!r}, ...) "
+            "with the original weights before restoring, or pass params= "
+            f"to rebind explicitly ({e})") from None
     # resume on the tier the tenant was serving with (older manifests
     # recorded the session default — same key, still honored); missing
     # key = let the target session pick its default
     new = mgr.add_tenant(meta["variant"], name=name or tid,
                          reservoir_tau=want.get("reservoir_tau"),
-                         use_kernels=meta.get("use_kernels"))
+                         use_kernels=meta.get("use_kernels"),
+                         params=pname)
     cohort = mgr.cohort_of(new)
     got = dataclasses.asdict(cohort.cfg)
     if got != want:
@@ -319,6 +356,16 @@ def restore_tenant(mgr: SessionManager, root: str, tid: str, *,
             f"{ {k: want.get(k) for k in diff} } but this session resolves "
             f"{ {k: got.get(k) for k in diff} } — shared parameter axes and "
             "table dims must match to continue the trajectory")
+    if params is None and meta.get("params_digest") is not None:
+        have = mgr.param_store.digest(pname)
+        if have != meta["params_digest"]:
+            mgr.remove_tenant(new)
+            raise ValueError(
+                f"snapshot {tid!r} records param set {pname!r} with digest "
+                f"{meta['params_digest']} but this session's {pname!r} "
+                f"digests {have} — the trajectory would continue under "
+                "different weights; register the original parameters, or "
+                "pass params= to rebind explicitly")
     tree_like = cohort.pipeline.init_state()._asdict()
     state, _ = ckpt.restore(d, tree_like, step=step)
     mgr.set_state(new, mailbox.VertexState(**state))

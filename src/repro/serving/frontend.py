@@ -249,9 +249,9 @@ class ServingFrontend:
         return outs
 
     def attach(self, variant=None, *, name: str | None = None,
-               use_kernels=None) -> str:
+               use_kernels=None, params: str | None = None) -> str:
         tid = self.mgr.add_tenant(variant, name=name,
-                                  use_kernels=use_kernels)
+                                  use_kernels=use_kernels, params=params)
         self.batcher.add_tenant(tid)
         return tid
 
@@ -287,8 +287,13 @@ class ServingFrontend:
         """One request dict -> one response dict (the wire protocol).
 
         ops: ``ingest`` (tid, src, dst, eid, ts[, neg_dst]) |
-        ``attach`` ([variant][, name][, use_kernels]) | ``detach`` (tid) |
-        ``stats`` | ``flush`` (force a round now).
+        ``attach`` ([variant][, name][, use_kernels][, params]) |
+        ``detach`` (tid) | ``stats`` | ``flush`` (force a round now).
+
+        ``attach.params`` names a parameter set already registered via
+        ``SessionManager.register_params``; an unknown name is rejected
+        with ``invalid_request`` BEFORE any lane state changes — the
+        wire protocol carries names, never weights.
         """
         try:
             op = req.get("op")
@@ -300,7 +305,8 @@ class ServingFrontend:
             if op == "attach":
                 tid = self.attach(req.get("variant"),
                                   name=req.get("name"),
-                                  use_kernels=req.get("use_kernels"))
+                                  use_kernels=req.get("use_kernels"),
+                                  params=req.get("params"))
                 return {"ok": True, "tid": tid,
                         "admission": dict(self.mgr.last_admission or {})}
             if op == "detach":
@@ -319,6 +325,12 @@ class ServingFrontend:
                     "depth": e.depth}
         except KeyError as e:
             return {"ok": False, "error": "unknown_tenant",
+                    "detail": str(e)}
+        except ValueError as e:
+            # e.g. attach naming an unregistered param set — rejected by
+            # the manager before any lane mutation, so compile counters
+            # and resident tenants are untouched
+            return {"ok": False, "error": "invalid_request",
                     "detail": str(e)}
 
     # ----------------------------------------------------- asyncio shell

@@ -3,17 +3,23 @@
 The paper's accelerator serves ONE chronological edge stream. A production
 deployment (ROADMAP north star; StreamTGN's framing in PAPERS.md) serves
 many concurrent, independent streams — per-customer transaction feeds,
-per-region event streams — over one shared parameter set. ``SessionManager``
+per-region event streams — over a registry of named parameter sets (the
+teacher, its distilled students, per-tenant fine-tunes). ``SessionManager``
 hosts those streams as *tenants*:
 
   * every tenant owns an independent ``VertexState`` pytree (its own memory
     table, mailbox, and neighbor ring buffer) and picks its own pipeline
     variant — sampler backends included, e.g. one tenant on
     ``sat+lut+np4`` and another on ``sat+lut+np4+reservoir``;
-  * tenants with the SAME variant form a *cohort*: their states are stacked
-    along a leading tenant axis and one ``jax.jit(jax.vmap(step))`` launch
-    advances the whole cohort — batched gathers/scatters over the stacked
-    tables, per-tenant chronological last-write-wins commits preserved;
+  * tenants with the SAME variant, kernel tier AND parameter set form a
+    *cohort*: their states are stacked along a leading tenant axis and one
+    ``jax.jit(jax.vmap(step))`` launch advances the whole cohort — batched
+    gathers/scatters over the stacked tables, per-tenant chronological
+    last-write-wins commits preserved;
+  * named parameter sets (``register_params`` / ``ParamStore``) give each
+    lane its OWN device-resident weights — ``add_tenant(..., params=
+    "studentB")`` lands a tenant on that set, so a vanilla+cosine teacher
+    and its sat+lut students A/B-serve in ONE coalesced launch;
   * tenants that submit no batch in a round are masked (an all-``valid=False``
     batch): the launch still has a fixed shape, and the LWW committer plus
     the OOB-redirected ring-buffer insert make a fully-masked step a bitwise
@@ -44,6 +50,7 @@ per cohort (per round, when coalesced).
 """
 from __future__ import annotations
 
+import functools
 import time
 from typing import Iterable, Mapping
 
@@ -171,9 +178,113 @@ def _idle_dev(B: int) -> tuple:
     return (zi, zi, zi, jnp.zeros((B,), jnp.float32), jnp.zeros((B,), bool))
 
 
+#: the parameter-set name every tenant serves on unless it names another.
+DEFAULT_PARAMS = "default"
+
+
+def _tree_signature(tree) -> dict:
+    """``{leaf path: (shape, dtype)}`` of a pytree — works on real arrays
+    and on ``jax.eval_shape`` ShapeDtypeStructs alike."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return {jax.tree_util.keystr(kp): (tuple(v.shape), str(v.dtype))
+            for kp, v in flat}
+
+
+@functools.lru_cache(maxsize=64)
+def _cfg_param_signature(cfg: tgn.TGNConfig) -> dict:
+    """The parameter signature ``cfg``'s step consumes (abstract init —
+    no weights are materialized). Cached per config: ``add_tenant``
+    validates every named-set binding against this."""
+    want = jax.eval_shape(lambda: tgn.init_params(jax.random.key(0), cfg))
+    return _tree_signature(want)
+
+
+class ParamStore:
+    """Named, device-resident parameter sets — the registry behind the
+    coalesced round's per-lane params dimension.
+
+    One set is registered at construction under ``DEFAULT_PARAMS``; more
+    arrive via ``register`` (``SessionManager.register_params``). Sets are
+    immutable once registered: re-registering a name with byte-identical
+    content is a no-op, with different content an error — a lane's
+    resident weights never change out from under its serving tenants
+    (swap = register a new name, attach tenants to it, drain the old).
+    ``digest`` (crc32 over leaf paths + bytes, ``checkpoint.tree_digest``)
+    is the identity snapshot manifests record so a restore can verify it
+    resumes on the same weights.
+
+    ``place`` is the device-placement hook (the sharded session replicates
+    every set across its mesh); the default leaves arrays where they are.
+    """
+
+    def __init__(self, default_params: dict, *, place=None):
+        self._place = place if place is not None else (lambda p: p)
+        self._sets: dict[str, dict] = {}
+        self._digests: dict[str, str] = {}
+        self.register(DEFAULT_PARAMS, default_params)
+
+    def register(self, name: str, params: dict) -> dict:
+        """Register (and place) a named set; returns the resident pytree."""
+        if not isinstance(name, str) or not name:
+            raise ValueError("param-set name must be a non-empty string, "
+                             f"got {name!r}")
+        from repro.distributed.checkpoint import tree_digest
+        digest = tree_digest(params)
+        if name in self._sets:
+            if digest != self._digests[name]:
+                raise ValueError(
+                    f"param set {name!r} is already registered with "
+                    f"different content (digest {self._digests[name]} vs "
+                    f"{digest}); registered sets are immutable — register "
+                    "the new weights under a new name and attach tenants "
+                    "to that")
+            return self._sets[name]          # idempotent re-register
+        self._sets[name] = self._place(params)
+        self._digests[name] = digest
+        return self._sets[name]
+
+    def get(self, name: str) -> dict:
+        if name not in self._sets:
+            raise ValueError(
+                f"unknown param set {name!r}; registered: "
+                f"{sorted(self._sets)}. Register it first "
+                "(SessionManager.register_params(name, params)) — "
+                "admission never invents weights")
+        return self._sets[name]
+
+    def digest(self, name: str) -> str:
+        self.get(name)
+        return self._digests[name]
+
+    def names(self) -> tuple:
+        return tuple(self._sets)
+
+    def __contains__(self, name) -> bool:
+        return name in self._sets
+
+    def check_binding(self, name: str, cfg: tgn.TGNConfig) -> None:
+        """Validate that the named set structurally fits ``cfg``'s step —
+        pytree structure, leaf shapes and dtypes must match what
+        ``tgn.init_params`` would produce for that config (a teacher set
+        cannot drive a SAT lane and vice versa). Raises with the exact
+        leaf-level diff; never touches device data."""
+        got = _tree_signature(self.get(name))
+        want = _cfg_param_signature(cfg)
+        if got == want:
+            return
+        diff = sorted(k for k in set(want) | set(got)
+                      if want.get(k) != got.get(k))
+        raise ValueError(
+            f"param set {name!r} does not fit a "
+            f"{pl.variant_name(cfg)!r} lane: mismatched leaves "
+            f"{ {k: {'want': want.get(k), 'got': got.get(k)} for k in diff} }"
+            " — the set must be initialized/trained for the tenant's "
+            "attention+encoder and table dims")
+
+
 class _Cohort:
-    """Tenants sharing one variant + kernel tier: stacked states + one
-    vmapped step.
+    """Tenants sharing one variant + kernel tier + parameter set: stacked
+    states + one vmapped step over the cohort's OWN resident params.
 
     With a ``reserve`` (a capacity-class policy — ``serving/admission.py``
     ``CapacityLadder``) the stacked tables are laid out with SPARE
@@ -185,14 +296,19 @@ class _Cohort:
     — the original offline behavior."""
 
     def __init__(self, cfg: tgn.TGNConfig, use_kernels, params: dict,
-                 reserve=None):
+                 reserve=None, param_set: str = DEFAULT_PARAMS):
         self.cfg = cfg
         self.reserve = reserve      # capacity-class policy or None (exact)
         self.pipeline = pl.build_pipeline(cfg, use_kernels=use_kernels)
-        #: resolved kernel tier — cohorts are keyed by (cfg, tier), so a
-        #: fused-lane tenant and a staged-lane tenant of the SAME variant
-        #: form two lanes of the coalesced round.
+        #: resolved kernel tier — cohorts are keyed by (cfg, tier,
+        #: param_set), so a fused-lane tenant and a staged-lane tenant of
+        #: the SAME variant form two lanes of the coalesced round.
         self.tier = self.pipeline.tier
+        #: the cohort's resident parameter set + its registry name: every
+        #: launch of this lane consumes THESE weights (the coalesced
+        #: round's per-lane params dimension).
+        self.params = params
+        self.param_set = param_set
         # folded/packed tables prepared once per cohort; closed over (not a
         # jit argument) because the packed layouts carry static metadata.
         self.aux = self.pipeline.prepare(params)
@@ -327,20 +443,22 @@ class _Cohort:
         self.state = self._fit(jax.tree.map(lambda x: x[keep], self.state))
         return True
 
-    def launch(self, params: dict, stacked_batch: tuple, edge_feats,
-               node_feats, commit: bool = False) -> tgn.BatchOut:
-        """One device launch advancing every tenant slot of this cohort.
-        ``commit`` marks launches whose returned state will replace
-        ``self.state`` (the sharded cohort donates the old buffers then)."""
-        return self._vstep(params, self.state, stacked_batch, edge_feats,
-                           node_feats)
+    def launch(self, stacked_batch: tuple, edge_feats, node_feats,
+               commit: bool = False) -> tgn.BatchOut:
+        """One device launch advancing every tenant slot of this cohort,
+        on the cohort's OWN resident parameter set. ``commit`` marks
+        launches whose returned state will replace ``self.state`` (the
+        sharded cohort donates the old buffers then)."""
+        return self._vstep(self.params, self.state, stacked_batch,
+                           edge_feats, node_feats)
 
 
 class SessionManager:
     """Batched multi-tenant serving over the TGNPipeline registry.
 
-    One parameter set, many independent tenant streams. Tenants are grouped
-    into cohorts by variant; each round, one vmapped launch per cohort
+    Many independent tenant streams over a registry of named parameter
+    sets. Tenants are grouped into cohorts by (variant config, kernel
+    tier, parameter set); each round, one vmapped launch per cohort
     advances every tenant (idle tenants masked). See the module docstring
     for the numerics contract.
 
@@ -349,8 +467,16 @@ class SessionManager:
         mgr = SessionManager(params, edge_feats, model=cfg)
         a = mgr.add_tenant()                        # base variant
         b = mgr.add_tenant("sat+lut+np4+reservoir")  # same params, new policy
-        outs = mgr.step({a: batch_a, b: batch_b})    # {tid: BatchOut}
+        mgr.register_params("teacher-v1", teacher_params)
+        c = mgr.add_tenant("teacher", params="teacher-v1")  # own weights
+        outs = mgr.step({a: b1, b: b2, c: b3})       # {tid: BatchOut}
         mgr.state_of(a)                              # tenant's VertexState
+
+    Tenants on the DEFAULT set must share the session's attention+encoder
+    axes (one set cannot drive two parameter pytrees); a tenant on a
+    NAMED set brings its own weights, so any registry variant may serve —
+    the teacher/student A/B lanes above still advance as ONE coalesced
+    launch per round.
     """
 
     def __init__(self, params: dict, edge_feats, node_feats=None, *,
@@ -375,13 +501,17 @@ class SessionManager:
         self.base_cfg = model
         self.use_kernels = use_kernels
         self.coalesce = coalesce
-        self.params = params
+        #: named, device-resident parameter sets; ``params`` becomes the
+        #: DEFAULT_PARAMS entry, more arrive via ``register_params``
+        self.param_store = ParamStore(params, place=self._place_params)
+        self.params = self.param_store.get(DEFAULT_PARAMS)
         self.edge_feats = jnp.asarray(edge_feats)
         self.node_feats = (jnp.asarray(node_feats)
                            if node_feats is not None else None)
-        # keyed by (cfg, resolved kernel tier): tenants may pick a kernel
-        # tier per lane (add_tenant(use_kernels=...)), defaulting to the
-        # session-wide setting
+        # keyed by (cfg, resolved kernel tier, param-set name): tenants
+        # may pick a kernel tier (add_tenant(use_kernels=...)) and a
+        # parameter set (add_tenant(params=...)) per lane, defaulting to
+        # the session-wide setting / DEFAULT_PARAMS
         self._cohorts: dict[tuple, _Cohort] = {}
         self._tenant_cohort: dict[str, _Cohort] = {}
         self._next_id = 0
@@ -406,31 +536,72 @@ class SessionManager:
         self.queue_depths = None
 
     # -- tenant lifecycle ----------------------------------------------
-    def _make_cohort(self, cfg: tgn.TGNConfig, use_kernels) -> _Cohort:
-        """Cohort factory (the sharded session swaps in mesh-placed ones)."""
-        return _Cohort(cfg, use_kernels, self.params, reserve=self.reserve)
+    def _place_params(self, params: dict) -> dict:
+        """Device placement of a registered parameter set (subclass hook:
+        the sharded session replicates it across the mesh)."""
+        return params
 
-    def _tenant_cfg(self, variant, reservoir_tau) -> tgn.TGNConfig:
+    def register_params(self, name: str, params: dict) -> str:
+        """Register a NAMED parameter set (device-placed, immutable) for
+        tenants to serve on: ``add_tenant(..., params=name)`` lands its
+        tenant in a lane resident on THESE weights. Registration alone
+        never touches the fleet layout — no relayout, no recompile; the
+        teacher/student A/B flow is register -> (prewarm ->) attach.
+        Returns ``name``."""
+        self.param_store.register(name, params)
+        return name
+
+    def _make_cohort(self, cfg: tgn.TGNConfig, use_kernels,
+                     param_set: str = DEFAULT_PARAMS) -> _Cohort:
+        """Cohort factory (the sharded session swaps in mesh-placed ones)."""
+        return _Cohort(cfg, use_kernels, self.param_store.get(param_set),
+                       reserve=self.reserve, param_set=param_set)
+
+    def _tenant_cfg(self, variant, reservoir_tau,
+                    param_set: str = DEFAULT_PARAMS) -> tgn.TGNConfig:
         base = self.base_cfg
         if variant is None:
             cfg = base
         else:
             v = pl.resolve_variant(variant)
             if (v.attention, v.encoder) != (base.attention, base.encoder):
-                raise ValueError(
-                    f"tenant variant {pl.variant_name(v)!r} needs "
-                    f"{v.attention}+{v.encoder} parameters but this session "
-                    f"shares {base.attention}+{base.encoder} parameters; "
-                    "prune_k and sampler may vary per tenant, the "
-                    "parameterized axes may not")
-            cfg = base.replace(prune_k=v.prune_k, sampler=v.sampler)
+                if param_set == DEFAULT_PARAMS:
+                    raise ValueError(
+                        f"tenant variant {pl.variant_name(v)!r} needs "
+                        f"{v.attention}+{v.encoder} parameters but this "
+                        f"session shares {base.attention}+{base.encoder} "
+                        "parameters; prune_k and sampler may vary per "
+                        "tenant, the parameterized axes may not — unless "
+                        "the tenant brings its own weights "
+                        "(register_params + add_tenant(..., params=name))")
+                # a named set brings its own weights: the tenant may pick
+                # ANY registry variant; table/feature dims stay the
+                # session's (one edge-feature store, one vertex universe)
+                cfg = base.replace(attention=v.attention, encoder=v.encoder,
+                                   prune_k=v.prune_k, sampler=v.sampler)
+            else:
+                cfg = base.replace(prune_k=v.prune_k, sampler=v.sampler)
         if reservoir_tau is not None:
             cfg = cfg.replace(reservoir_tau=reservoir_tau)
         return cfg
 
+    def _resolve_lane(self, variant, reservoir_tau, use_kernels,
+                      params) -> tuple:
+        """Resolve an admission request to its lane key ``(cfg, tier,
+        param-set name)``, validating the param-set binding BEFORE any
+        fleet mutation (an unknown or ill-fitting set rejects cleanly —
+        compile counters and the serving layout are untouched)."""
+        pname = DEFAULT_PARAMS if params is None else params
+        self.param_store.get(pname)          # unknown set: reject here
+        cfg = self._tenant_cfg(variant, reservoir_tau, pname)
+        self.param_store.check_binding(pname, cfg)
+        tier = pl.stages.resolved_tier(
+            cfg, self.use_kernels if use_kernels is None else use_kernels)
+        return cfg, tier, pname
+
     def add_tenant(self, variant=None, *, name: str | None = None,
                    reservoir_tau: float | None = None,
-                   use_kernels=None) -> str:
+                   use_kernels=None, params: str | None = None) -> str:
         """Register a tenant stream; returns its id.
 
         ``variant`` is any registry spec sharing the session's parameterized
@@ -438,21 +609,24 @@ class SessionManager:
         differ per tenant, and so may the kernel tier (``use_kernels``:
         ``"ref"``/``"staged"``/``"fused"`` or a bool; ``None`` = the
         session default) — lanes of the coalesced round select their tier
-        independently. Adding a tenant grows its cohort's stacked state
-        (next launch recompiles for the new tenant count).
+        independently. ``params`` names a registered parameter set
+        (``register_params``): the tenant serves on THOSE weights, and may
+        then pick any attention+encoder (teacher/student A/B lanes).
+        Adding a tenant grows its cohort's stacked state (next launch
+        recompiles for the new tenant count) unless a reserved spare slot
+        absorbs it.
         """
-        cfg = self._tenant_cfg(variant, reservoir_tau)
-        tier = pl.stages.resolved_tier(
-            cfg, self.use_kernels if use_kernels is None else use_kernels)
+        cfg, tier, pname = self._resolve_lane(variant, reservoir_tau,
+                                              use_kernels, params)
         tid = name if name is not None else f"t{self._next_id}"
         self._next_id += 1
         if tid in self._tenant_cohort:
             raise ValueError(f"tenant {tid!r} already exists")
-        cohort = self._cohorts.get((cfg, tier))
+        cohort = self._cohorts.get((cfg, tier, pname))
         created = cohort is None
         if created:
-            cohort = self._cohorts[(cfg, tier)] = self._make_cohort(cfg,
-                                                                    tier)
+            cohort = self._cohorts[(cfg, tier, pname)] = \
+                self._make_cohort(cfg, tier, pname)
         relayout = cohort.add(tid)
         self._tenant_cohort[tid] = cohort
         self._tenant_stats[tid] = {"rounds": 0, "rows": 0,
@@ -465,22 +639,24 @@ class SessionManager:
 
     def prewarm_cohort(self, variant=None, *,
                        reservoir_tau: float | None = None,
-                       use_kernels=None) -> None:
+                       use_kernels=None, params: str | None = None) -> None:
         """Materialize a variant's cohort with ZERO tenants at its reserve
         capacity: the lane is compiled into the next round while empty, so
-        the FIRST tenant of that variant attaches on the fast path instead
-        of forcing a mid-serving relayout. Requires ``reserve``."""
+        the FIRST tenant of that variant (and parameter set — ``params``
+        names a registered set, e.g. a freshly distilled student about to
+        be canaried) attaches on the fast path instead of forcing a
+        mid-serving relayout. Requires ``reserve``."""
         if self.reserve is None:
             raise ValueError("prewarm_cohort needs a reserve policy "
                              "(SessionManager(reserve=...)); without spare "
                              "lane slots an empty cohort cannot admit "
                              "anything without a relayout anyway")
-        cfg = self._tenant_cfg(variant, reservoir_tau)
-        tier = pl.stages.resolved_tier(
-            cfg, self.use_kernels if use_kernels is None else use_kernels)
-        if (cfg, tier) in self._cohorts:
+        cfg, tier, pname = self._resolve_lane(variant, reservoir_tau,
+                                              use_kernels, params)
+        if (cfg, tier, pname) in self._cohorts:
             return
-        cohort = self._cohorts[(cfg, tier)] = self._make_cohort(cfg, tier)
+        cohort = self._cohorts[(cfg, tier, pname)] = \
+            self._make_cohort(cfg, tier, pname)
         cohort.ensure_capacity()
         self._coalesced = None           # new lane: relaunch (once, now)
 
@@ -498,7 +674,7 @@ class SessionManager:
         if not cohort.tids and cohort.reserve is None:
             # reserve-less cohorts tear down when empty; reserved lanes
             # stay resident (capacity held) so re-attach is a fast path
-            self._cohorts.pop((cohort.cfg, cohort.tier))
+            self._cohorts.pop((cohort.cfg, cohort.tier, cohort.param_set))
             relayout = True
         self.last_admission = {"tid": tid, "relayout": relayout,
                                "new_cohort": False}
@@ -538,14 +714,14 @@ class SessionManager:
 
     def _cohort_info(self, c: _Cohort) -> dict:
         return {"tenants": tuple(c.tids), "capacity": c.capacity,
-                **c.pipeline.describe()}
+                "param_set": c.param_set, **c.pipeline.describe()}
 
     def describe(self) -> dict:
-        """Cohort layout: variant -> (tenant ids, resolved stage backends).
-        Cohorts that differ only in ``reservoir_tau`` or kernel tier share
-        a variant name; the later ones are disambiguated with ``@tau=`` /
-        ``@<tier>`` suffixes so no cohort's entry is silently
-        overwritten."""
+        """Cohort layout: variant -> (tenant ids, parameter set, resolved
+        stage backends). Cohorts that differ only in ``reservoir_tau``,
+        parameter set, or kernel tier share a variant name; the later ones
+        are disambiguated with ``@tau=`` / ``@params=`` / ``@<tier>``
+        suffixes so no cohort's entry is silently overwritten."""
         out, holders = {}, {}
         for c in self._cohorts.values():
             key = base = c.pipeline.variant
@@ -553,6 +729,8 @@ class SessionManager:
                 first = holders[base]
                 if c.cfg.reservoir_tau != first.cfg.reservoir_tau:
                     key = f"{base}@tau={c.cfg.reservoir_tau:g}"
+                if key in out and c.param_set != first.param_set:
+                    key = f"{key}@params={c.param_set}"
                 if key in out:
                     key = f"{key}@{c.tier}"
             holders.setdefault(base, c)
@@ -569,8 +747,8 @@ class SessionManager:
         devs += [_idle_dev(B)] * (cohort.capacity - len(devs))
         stacked = tuple(jnp.stack([d[j] for d in devs])
                         for j in range(5))
-        return cohort.launch(self.params, stacked, self.edge_feats,
-                             self.node_feats, commit=commit)
+        return cohort.launch(stacked, self.edge_feats, self.node_feats,
+                             commit=commit)
 
     @staticmethod
     def _slice_out(out: tgn.BatchOut, i: int, b: int,
@@ -645,9 +823,11 @@ class SessionManager:
         # per-segment padded widths (static): each cohort steps at ITS
         # round-max batch size — the exact B the per-cohort launch would
         # use, which the bitwise contract requires (idle cohorts run a
-        # width-1 masked no-op lane)
-        outs_t, edges = launch(self.params, states, superbatch,
-                               self.edge_feats, self.node_feats,
+        # width-1 masked no-op lane). Params are per-lane too: each
+        # segment consumes its cohort's resident set (teacher/student
+        # A/B lanes in the same launch).
+        outs_t, edges = launch(tuple(c.params for c in cohorts), states,
+                               superbatch, self.edge_feats, self.node_feats,
                                widths=tuple(widths.get(id(c), 1)
                                             for c in cohorts))
         outs: dict[str, tgn.BatchOut] = {}
@@ -750,7 +930,7 @@ class SessionManager:
         cohort = self._tenant_cohort[tid]
         dev = _as_device_tuple(batch)
         if cohort.size == 1 and cohort.capacity == 1:
-            return cohort._vstep1(self.params, cohort.state, dev,
+            return cohort._vstep1(cohort.params, cohort.state, dev,
                                   self.edge_feats, self.node_feats)
         out = self._cohort_round(cohort, {tid: dev})
         return self._slice_out(out, cohort.tids.index(tid),

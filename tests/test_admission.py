@@ -1,0 +1,189 @@
+"""Property-based admission tests: the CapacityLadder invariants every
+zero-recompile guarantee rests on (headroom, monotonicity, geometric
+growth past the top class) and AdmissionController audit-log consistency
+under random attach/detach sequences.
+
+Runs under real hypothesis when installed, else the deterministic
+``tests/_vendor`` shim (conftest.py wires it up) — strategies are kept
+inside the shim's supported surface (integers/tuples/lists/sampled_from,
+zero-arg ``@given`` wrappers, so no pytest fixtures in property tests).
+"""
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.serving.admission import AdmissionController, CapacityLadder
+
+# ---------------------------------------------------------------------------
+# CapacityLadder: pure invariants
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(min_value=0, max_value=500),
+       st.integers(min_value=1, max_value=5))
+def test_capacity_always_leaves_headroom(n, headroom):
+    """capacity_for(n) > n strictly: immediately after ANY relayout there
+    are at least ``headroom`` spare slots, so the next attach is
+    guaranteed fast-path."""
+    lad = CapacityLadder(headroom=headroom)
+    cap = lad.capacity_for(n)
+    assert cap >= n + headroom > n
+
+
+@given(st.integers(min_value=0, max_value=300),
+       st.integers(min_value=0, max_value=300))
+def test_capacity_is_monotone(a, b):
+    """More tenants never need fewer rows (growth never shrinks a lane
+    out from under its residents)."""
+    lad = CapacityLadder()
+    lo, hi = sorted((a, b))
+    assert lad.capacity_for(lo) <= lad.capacity_for(hi)
+
+
+@given(st.integers(min_value=0, max_value=4096))
+def test_capacity_is_a_ladder_class_or_doubling(n):
+    """Every capacity is an explicit class, or the top class doubled k
+    times (geometric growth past the ladder) — and it is MINIMAL: the
+    next class down would not fit n + headroom."""
+    lad = CapacityLadder()
+    cap = lad.capacity_for(n)
+    need = max(n + lad.headroom, lad.classes[0])
+    top = lad.classes[-1]
+    if cap <= top:
+        assert cap in lad.classes
+        smaller = [c for c in lad.classes if c < cap]
+        if smaller:
+            assert smaller[-1] < need          # minimality within the ladder
+    else:
+        c = cap
+        while c > top:
+            assert c % 2 == 0
+            c //= 2
+        assert c == top
+        assert cap // 2 < need                 # minimality past the top
+
+
+@given(st.integers(min_value=0, max_value=128))
+def test_custom_ladder_respects_its_classes(n):
+    lad = CapacityLadder(classes=(3, 7, 20), headroom=2)
+    cap = lad.capacity_for(n)
+    assert cap >= max(n + 2, 3)
+    if cap <= 20:
+        assert cap in (3, 7, 20)
+
+
+def test_invalid_ladders_are_rejected():
+    with pytest.raises(ValueError, match="strictly increasing"):
+        CapacityLadder(classes=(4, 2))
+    with pytest.raises(ValueError, match="strictly increasing"):
+        CapacityLadder(classes=(2, 2, 4))
+    with pytest.raises(ValueError, match="strictly increasing"):
+        CapacityLadder(classes=())
+    with pytest.raises(ValueError, match="headroom"):
+        CapacityLadder(headroom=0)
+
+
+# ---------------------------------------------------------------------------
+# AdmissionController: audit-log consistency under random sequences
+# ---------------------------------------------------------------------------
+
+_VARIANTS = ("sat+lut+np4", "sat+lut+np2", "sat+lut+np4+uniform")
+_SETUP: dict = {}
+
+
+def _fresh_manager():
+    """A reserve-enabled SessionManager over a cached tiny graph (module
+    cache, not a fixture: the shim's @given wrappers take zero args)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import pipeline as pl, tgn
+    from repro.data import temporal_graph as tgd
+    from repro.serving.session import SessionManager
+
+    if not _SETUP:
+        g = tgd.wikipedia_like(n_edges=200)
+        cfg = pl.variant_config(
+            "sat+lut+np4", n_nodes=g.cfg.n_nodes, n_edges=g.n_edges,
+            f_edge=172, f_mem=8, f_time=8, f_emb=8, m_r=10)
+        _SETUP.update(cfg=cfg,
+                      params=tgn.init_params(jax.random.key(0), cfg),
+                      ef=jnp.asarray(g.edge_feats))
+    return SessionManager(_SETUP["params"], _SETUP["ef"],
+                          model=_SETUP["cfg"], reserve=CapacityLadder())
+
+
+@settings(max_examples=8)
+@given(st.lists(st.tuples(st.sampled_from(("attach", "detach")),
+                          st.integers(min_value=0, max_value=2)),
+                min_size=1, max_size=10))
+def test_audit_log_consistent_under_random_sequences(ops):
+    """Whatever the admission sequence: one log record per operation,
+    ``fast`` is exactly ¬(relayout ∨ new_cohort), sizes/capacities in the
+    record match the live cohort, every capacity respects the ladder's
+    headroom contract, and the attach/detach ledger balances the live
+    tenant count."""
+    mgr = _fresh_manager()
+    adm = AdmissionController(mgr)
+    ladder = mgr.reserve
+    live: list = []
+    performed = 0
+    for op, i in ops:
+        if op == "attach":
+            tid = adm.attach(_VARIANTS[i])
+            live.append(tid)
+            rec = adm.log[-1]
+            assert rec.action == "attach" and rec.tid == tid
+            cohort = mgr.cohort_of(tid)
+            assert rec.size == cohort.size
+            assert rec.capacity == cohort.capacity
+            # a relayout lands on the ladder class (headroom restored);
+            # a fast attach fits within the existing class
+            if rec.relayout or rec.new_cohort:
+                assert rec.capacity == ladder.capacity_for(rec.size)
+            else:
+                assert rec.capacity >= rec.size
+        elif live:
+            tid = live.pop(i % len(live))
+            rec = adm.detach(tid)
+            assert rec.action == "detach" and rec.tid == tid
+            assert rec.fast and not rec.relayout   # detach idles the slot
+        else:
+            continue                     # detach with nobody live: no-op
+        performed += 1
+        assert len(adm.log) == performed     # exactly one record per op
+        assert len(mgr.tenants) == len(live)
+    # the ledger balances: attaches - detaches == live tenants
+    n_att = sum(1 for a in adm.log if a.action == "attach")
+    n_det = sum(1 for a in adm.log if a.action == "detach")
+    assert n_att - n_det == len(live) == len(mgr.tenants)
+    s = adm.stats()
+    assert s["admissions"] == len(adm.log) == performed
+    assert s["fast"] == sum(1 for a in adm.log if a.fast)
+    assert s["relayouts"] == sum(1 for a in adm.log if a.relayout)
+    assert sum(c["size"] for c in s["cohorts"]) == len(live)
+    for c in s["cohorts"]:
+        assert 0 <= c["size"] <= c["capacity"]
+
+
+@settings(max_examples=4)
+@given(st.integers(min_value=1, max_value=9))
+def test_relayout_cadence_is_logarithmic(n):
+    """Ramping one cohort 0->n tenants relays out only at class
+    exhaustion: every non-relayout attach after the first is fast, and
+    the relayout count matches the ladder crossings exactly."""
+    mgr = _fresh_manager()
+    adm = AdmissionController(mgr)
+    for _ in range(n):
+        adm.attach(_VARIANTS[0])
+    attaches = [a for a in adm.log if a.action == "attach"]
+    ladder = mgr.reserve
+    # relayouts are LAZY: one when the ramp first exceeds the current
+    # class (the first attach creates the lane), never before
+    cap, slow = 0, 0
+    for k in range(1, n + 1):
+        if k > cap:
+            cap = ladder.capacity_for(k)
+            slow += 1
+    assert sum(1 for a in attaches if a.relayout or a.new_cohort) == slow
+    assert sum(1 for a in attaches if a.fast) == n - slow

@@ -185,6 +185,110 @@ def test_vertex_state_restore_with_mesh_shardings(tmp_path):
     assert restored.memory.sharding.mesh.axis_names == ("tenant", "vertex")
 
 
+def test_tree_digest_is_content_and_path_sensitive():
+    """tree_digest — the identity snapshot manifests record for a param
+    set — is stable across calls, and changes when any leaf's bytes OR
+    any leaf's path change."""
+    t = _tree()
+    assert C.tree_digest(t) == C.tree_digest(t)
+    assert len(C.tree_digest(t)) == 8            # crc32 hex
+    bumped = {"a": t["a"].at[0, 0].add(1.0), "n": t["n"]}
+    assert C.tree_digest(bumped) != C.tree_digest(t)
+    # identical bytes under a different leaf path digest differently
+    assert C.tree_digest({"x": t["a"]}) != C.tree_digest({"a": t["a"]})
+
+
+def _student_lane(tmp_path, f_mem=8, n_edges=300):
+    """A session whose DEFAULT weights differ from the student set one
+    tenant serves on, stepped twice and snapshotted at step 2."""
+    from repro.core import pipeline as pl, tgn
+    from repro.data import stream as stream_mod, temporal_graph as tgd
+    from repro.serving import cluster as cl
+    from repro.serving.session import SessionManager
+    g = tgd.wikipedia_like(n_edges=n_edges)
+    cfg = pl.variant_config("sat+lut+np4", n_nodes=g.cfg.n_nodes,
+                            n_edges=g.n_edges, f_edge=172, f_mem=f_mem,
+                            f_time=f_mem, f_emb=f_mem, m_r=10)
+    params = tgn.init_params(jax.random.key(0), cfg)
+    student = tgn.init_params(jax.random.key(5), cfg)
+    ef = jnp.asarray(g.edge_feats)
+    feed = list(stream_mod.fixed_count(g, 40))[:4]
+    mgr = SessionManager(params, ef, model=cfg)
+    mgr.register_params("student-B", student)
+    tid = mgr.add_tenant(params="student-B")
+    for b in feed[:2]:
+        mgr.step({tid: b})
+    cl.snapshot_tenant(mgr, tid, str(tmp_path), step=2)
+    return cl, mgr, tid, feed, dict(cfg=cfg, params=params,
+                                    student=student, ef=ef)
+
+
+def test_snapshot_binds_param_set_and_resumes_on_it(tmp_path):
+    """The manifest records the param-set name + digest; a restore into a
+    session whose default weights DIFFER refuses until the set is
+    registered, then resumes on the recorded set and continues bitwise
+    with the unsnapshotted original."""
+    cl, mgr, tid, feed, env = _student_lane(tmp_path)
+    root = str(tmp_path)
+    meta = cl.snapshot_meta(root, tid)
+    assert meta["param_set"] == "student-B"
+    assert meta["params_digest"] == mgr.param_store.digest("student-B")
+
+    fresh = cl.SessionManager(env["params"], env["ef"], model=env["cfg"])
+    with pytest.raises(ValueError, match="has not registered"):
+        cl.restore_tenant(fresh, root, tid)
+    assert fresh.tenants == ()               # loud failure, nothing added
+    fresh.register_params("student-B", env["student"])
+    revived = cl.restore_tenant(fresh, root, tid, name="revived")
+    assert fresh.cohort_of(revived).param_set == "student-B"
+    for r, b in enumerate(feed[2:]):
+        o1 = mgr.step({tid: b})[tid]
+        o2 = fresh.step({revived: b})[revived]
+        np.testing.assert_array_equal(np.asarray(o1.emb_src),
+                                      np.asarray(o2.emb_src),
+                                      err_msg=f"resumed round {r}")
+    a, b = mgr.state_of(tid), fresh.state_of(revived)
+    for f in a._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(a, f)),
+                                      np.asarray(getattr(b, f)),
+                                      err_msg=f)
+
+
+def test_restore_rejects_digest_mismatch_unless_rebound(tmp_path):
+    """Same param-set NAME, different bytes: the digest check fails loudly
+    (the trajectory would silently continue under different weights);
+    passing params= rebinds explicitly and skips the check."""
+    import jax as _jax
+    from repro.core import tgn
+    cl, mgr, tid, _feed, env = _student_lane(tmp_path)
+    root = str(tmp_path)
+    fresh = cl.SessionManager(env["params"], env["ef"], model=env["cfg"])
+    impostor = tgn.init_params(_jax.random.key(99), env["cfg"])
+    fresh.register_params("student-B", impostor)   # same name, new bytes
+    with pytest.raises(ValueError, match="digest"):
+        cl.restore_tenant(fresh, root, tid)
+    assert fresh.tenants == ()
+    # explicit rebind: the operator takes responsibility for the weights
+    revived = cl.restore_tenant(fresh, root, tid, params="default")
+    assert fresh.cohort_of(revived).param_set == "default"
+
+
+def test_restore_rejects_corrupted_manifest_digest(tmp_path):
+    """A tampered/corrupted params_digest in the manifest is caught even
+    when the registered weights are the right ones."""
+    cl, mgr, tid, _feed, env = _student_lane(tmp_path)
+    root = str(tmp_path)
+    mpath = os.path.join(root, tid, "step_00000002", "manifest.json")
+    manifest = json.load(open(mpath))
+    manifest["meta"]["params_digest"] = "deadbeef"
+    json.dump(manifest, open(mpath, "w"))
+    fresh = cl.SessionManager(env["params"], env["ef"], model=env["cfg"])
+    fresh.register_params("student-B", env["student"])
+    with pytest.raises(ValueError, match="digest"):
+        cl.restore_tenant(fresh, root, tid)
+    assert fresh.tenants == ()
+
+
 def test_lm_restart_determinism(tmp_path):
     """Kill-and-resume == uninterrupted run (bitwise on params)."""
     from repro.models import lm_common, transformer as T

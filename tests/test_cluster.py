@@ -235,6 +235,53 @@ def test_sharded_coalesced_matches_unsharded_session(small_graph):
         _assert_state_equal(flat.state_of(a), sh.state_of(b), msg=b)
 
 
+@pytest.mark.parametrize("coalesce", [True, False])
+def test_mixed_model_fleet_on_mesh_matches_unsharded(small_graph,
+                                                     coalesce):
+    """The per-lane parameter dimension on the 8-device mesh: a teacher
+    lane + two student weight sets in one sharded session replay
+    BITWISE-identically to the unsharded mixed-model session, coalesced
+    and per-cohort, with the launch counters pinned — every registered
+    set rides the mesh replicated."""
+    g = small_graph
+    cfg, params, ef = _setup(g, key=20)
+    tcfg = pl.variant_config("teacher", **_dims(g))
+    tparams = tgn.init_params(jax.random.key(21), tcfg)
+    sparams = tgn.init_params(jax.random.key(22), cfg)
+    lanes = (("sat+lut+np4", None), ("teacher", "teacher-v1"),
+             ("sat+lut+np4", "student-B"))
+
+    def fleet(mk):
+        mgr = mk()
+        mgr.register_params("teacher-v1", tparams)
+        mgr.register_params("student-B", sparams)
+        return mgr, [mgr.add_tenant(v, params=p) for v, p in lanes]
+
+    flat, ft = fleet(lambda: SessionManager(
+        params, ef, model=cfg, coalesce=coalesce))
+    sh, st = fleet(lambda: cl.ShardedSessionManager(
+        params, ef, model=cfg, mesh="tenant=2", coalesce=coalesce))
+    assert sum(1 for v in sh.describe().values()
+               if isinstance(v, dict) and "tenants" in v) == 3
+    # registered sets are mesh-replicated (same placement as the default)
+    mem = jax.tree.leaves(sh.param_store.get("teacher-v1"))[0]
+    assert mem.sharding.mesh.shape == sh.mesh.shape
+    fr, fs = _feeds(g, ft), _feeds(g, st)
+    for r in range(3):
+        o1 = flat.step({t: fr[t][r] for t in ft})
+        o2 = sh.step({t: fs[t][r] for t in st})
+        assert sh.metrics[-1]["launches"] == (1 if coalesce else 3)
+        for a, b in zip(ft, st):
+            np.testing.assert_array_equal(np.asarray(o1[a].emb_src),
+                                          np.asarray(o2[b].emb_src),
+                                          err_msg=f"round {r} {b}")
+    if coalesce:
+        assert sh._coalesced.traces == 1
+        assert sh.summary()["launches_per_round"] == 1
+    for a, b in zip(ft, st):
+        _assert_state_equal(flat.state_of(a), sh.state_of(b), msg=b)
+
+
 # ---------------------------------------------------------------------------
 # snapshot / restore / migration across mesh shapes
 # ---------------------------------------------------------------------------

@@ -316,6 +316,60 @@ def test_live_admission_zero_recompile_bitwise(setup):
                             offline.state_of(names[tid]), msg=tid)
 
 
+def test_live_params_attach_rejected_unknown_fast_when_prewarmed(setup):
+    """The per-lane params dimension at the frontend: attaching a tenant
+    on a NOT-registered param set mid-stream is rejected with a clear
+    ``invalid_request`` and leaves the compile counters (and the fleet)
+    frozen; attaching onto a prewarmed param lane is relayout-free, and
+    once the lane's widths have been absorbed further attaches into its
+    spare slots are fully zero-recompile."""
+    g, cfg, params, ef = setup
+    mgr = SessionManager(params, ef, model=cfg, reserve=True)
+    mgr.register_params("student-B",
+                        tgn.init_params(jax.random.key(5), cfg))
+    a = mgr.add_tenant()
+    mgr.prewarm_cohort(params="student-B")   # student lane laid out early
+    clk = FakeClock()
+    fe = ServingFrontend(
+        mgr, FrontendConfig(max_wait_s=0.010, max_rows=8, queue_rows=64,
+                            pad_quantum=8), clock=clk)
+    for r in range(2):                       # warm the compiled round
+        _feed(fe, g, (a,), r * 8, 8)
+        assert fe.pump(force=True)
+    mgr.sync()
+    c0 = mgr.compile_counters()
+
+    # unknown set: clear rejection BEFORE any lane mutation
+    resp = fe.handle({"op": "attach", "params": "nope", "name": "bad"})
+    assert not resp["ok"] and resp["error"] == "invalid_request"
+    assert "unknown param set" in resp["detail"]
+    assert "student-B" in resp["detail"]     # the menu names what exists
+    assert mgr.tenants == (a,)
+    mgr.sync()
+    assert mgr.compile_counters() == c0      # counters frozen
+
+    # prewarmed param lane: live attach is relayout-free
+    resp = fe.handle({"op": "attach", "params": "student-B", "name": "s1"})
+    assert resp["ok"] and resp["tid"] == "s1"
+    assert not resp["admission"]["relayout"]
+    _feed(fe, g, (a, "s1"), 16, 8)
+    assert fe.pump(force=True)               # absorbs the lane's widths
+    mgr.sync()
+    c1 = mgr.compile_counters()
+    assert c1["relayouts"] == c0["relayouts"]
+
+    # second attach into the lane's spare slot: fully zero-recompile
+    resp = fe.handle({"op": "attach", "params": "student-B", "name": "s2"})
+    assert resp["ok"] and not resp["admission"]["relayout"]
+    _feed(fe, g, (a, "s1", "s2"), 24, 8)
+    assert fe.pump(force=True)
+    mgr.sync()
+    c2 = mgr.compile_counters()
+    assert c2["relayouts"] == c1["relayouts"]
+    assert c2["round_traces"] == c1["round_traces"]
+    assert c2["round_calls"] == c1["round_calls"] + 1
+
+
 # ---------------------------------------------------------------------------
 # frontend serving loop details
 # ---------------------------------------------------------------------------

@@ -296,10 +296,10 @@ def test_tenant_lifecycle_and_errors(small_graph):
 # ---------------------------------------------------------------------------
 
 # the mixed 3-cohort fleet: the prune axis (np4 vs np2) AND a sampler
-# cohort. (The vanilla/cosine teacher cannot share a session with the
-# SAT/LUT students — a session shares ONE parameter set and the
-# attention+encoder axes are parameterized — so the fleet mixes the axes
-# tenants CAN vary: prune_k and the sampler backend.)
+# cohort, all on the session's DEFAULT parameter set. (A tenant on the
+# default set must match its attention+encoder axes; a tenant that brings
+# its OWN registered set — register_params + add_tenant(params=...) — may
+# vary every axis, the mixed-model tests below.)
 MIXED_VARIANTS = ("sat+lut+np4", "sat+lut+np2", "sat+lut+np4+reservoir")
 
 
@@ -445,6 +445,123 @@ def test_mixed_kernel_tier_fleet_replays_bitwise(small_graph):
                             msg=f"lane {i} coalesced-vs-percohort")
         _assert_state_equal(m1.state_of(t1[i]), sm.state_of(st),
                             msg=f"lane {i} coalesced-vs-solo")
+
+
+# ---------------------------------------------------------------------------
+# per-lane parameter sets: teacher/student A/B serving in one launch
+# ---------------------------------------------------------------------------
+
+# the mixed-MODEL fleet: a teacher lane (different attention+encoder AND
+# weights) plus two students on different weight sets — the parameter
+# dimension of the lane table. (variant, param-set name or None=default)
+MODEL_LANES = (("sat+lut+np4", None),
+               ("teacher", "teacher-v1"),
+               ("sat+lut+np4", "student-B"))
+
+
+def _model_fleet_params(g, f=8):
+    dims = _dims(g, f=f)
+    cfg = pl.variant_config("sat+lut+np4", **dims)
+    tcfg = pl.variant_config("teacher", **dims)
+    return (dims, cfg, tcfg,
+            {None: tgn.init_params(jax.random.key(20), cfg),
+             "teacher-v1": tgn.init_params(jax.random.key(21), tcfg),
+             "student-B": tgn.init_params(jax.random.key(22), cfg)})
+
+
+@pytest.mark.parametrize("coalesce", [True, False])
+def test_mixed_model_fleet_replays_bitwise(small_graph, coalesce):
+    """A teacher lane + two distilled-student lanes in ONE session —
+    three parameter sets, two architectures — replay BITWISE-identical
+    to three separate per-model SessionManagers, under both the
+    coalesced single-launch round and the per-cohort baseline, with the
+    launch and retrace counters pinned."""
+    g = small_graph
+    _dims_, cfg, tcfg, psets = _model_fleet_params(g)
+    ef = jnp.asarray(g.edge_feats)
+
+    mgr = SessionManager(psets[None], ef, model=cfg, use_kernels=False,
+                         coalesce=coalesce)
+    mgr.register_params("teacher-v1", psets["teacher-v1"])
+    mgr.register_params("student-B", psets["student-B"])
+    tids = [mgr.add_tenant(v, params=p) for v, p in MODEL_LANES]
+    assert len(mgr.describe()) == 3
+    # same-variant lanes on different weights stay distinct in describe
+    assert any(k.endswith("@params=student-B") for k in mgr.describe())
+
+    feeds = {t: list(_tenant_stream(g, i)) for i, t in enumerate(tids)}
+    traj = {t: [] for t in tids}
+    for r in range(4):
+        outs = mgr.step({t: feeds[t][r] for t in tids})
+        for t in tids:
+            traj[t].append((np.asarray(outs[t].emb_src),
+                            np.asarray(outs[t].emb_dst)))
+    # the acceptance guard: 3 models advance as ONE compiled launch per
+    # round (per-cohort baseline: one per lane), retraced exactly once
+    assert mgr.summary()["launches_per_round"] == (1 if coalesce else 3)
+    assert {m["launches"] for m in mgr.metrics} == ({1} if coalesce
+                                                    else {3})
+    if coalesce:
+        assert mgr._coalesced.traces == 1
+        assert mgr.compile_counters()["round_traces"] == 1
+
+    for i, (t, (v, pname)) in enumerate(zip(tids, MODEL_LANES)):
+        ref = SessionManager(psets[pname], ef,
+                             model=tcfg if v == "teacher" else cfg,
+                             use_kernels=False, coalesce=coalesce)
+        rt = ref.add_tenant(name="solo")
+        for r in range(4):
+            o = ref.step({rt: feeds[t][r]})[rt]
+            ms, md = traj[t][r]
+            np.testing.assert_array_equal(
+                ms, np.asarray(o.emb_src),
+                err_msg=f"lane {i} ({v}@{pname}) round {r} src")
+            np.testing.assert_array_equal(
+                md, np.asarray(o.emb_dst),
+                err_msg=f"lane {i} ({v}@{pname}) round {r} dst")
+        _assert_state_equal(mgr.state_of(t), ref.state_of(rt),
+                            msg=f"lane {i} ({v}@{pname})")
+    # and the weights are load-bearing: replaying lane 2's stream under
+    # the DEFAULT set (same policy, different weights) diverges from the
+    # student-B trajectory the session produced
+    base = SessionManager(psets[None], ef, model=cfg, use_kernels=False,
+                          coalesce=coalesce)
+    bt = base.add_tenant()
+    for r in range(4):
+        ob = base.step({bt: feeds[tids[2]][r]})[bt]
+    assert not np.array_equal(traj[tids[2]][-1][0], np.asarray(ob.emb_src))
+
+
+def test_param_store_lifecycle_and_errors(small_graph):
+    """The registry contract: admission never invents weights (unknown
+    names rejected before any lane mutation), registered sets are
+    immutable, and a set that does not structurally fit the tenant's
+    config is rejected with the leaf-level diff."""
+    g = small_graph
+    _dims_, cfg, tcfg, psets = _model_fleet_params(g)
+    mgr = SessionManager(psets[None], jnp.asarray(g.edge_feats), model=cfg)
+    a = mgr.add_tenant()
+    with pytest.raises(ValueError, match="unknown param set"):
+        mgr.add_tenant(params="nope")
+    assert mgr.tenants == (a,)               # rejection mutated nothing
+    # byte-identical re-register is a no-op; different content is an error
+    mgr.register_params("s", psets["student-B"])
+    mgr.register_params("s", psets["student-B"])
+    assert mgr.param_store.names() == ("default", "s")
+    with pytest.raises(ValueError, match="immutable"):
+        mgr.register_params("s", psets["teacher-v1"])
+    with pytest.raises(ValueError, match="non-empty string"):
+        mgr.register_params("", psets["student-B"])
+    # a student set cannot drive a teacher lane (structural mismatch)
+    with pytest.raises(ValueError, match="does not fit"):
+        mgr.add_tenant("teacher", params="s")
+    # without its own weights the teacher still can't join (PR-4 rule)
+    with pytest.raises(ValueError, match="shares sat\\+lut parameters"):
+        mgr.add_tenant("teacher")
+    # digests are stable content fingerprints
+    assert mgr.param_store.digest("s") == mgr.param_store.digest("s")
+    assert (mgr.param_store.digest("s") !=
+            mgr.param_store.digest("default"))
 
 
 def test_snapshot_restore_preserves_tenant_kernel_tier(small_graph,

@@ -1,0 +1,144 @@
+"""Coverage floor over the serving stack (``make coverage``).
+
+Gates ``src/repro/serving/`` + ``src/repro/core/pipeline.py`` — the
+multi-tenant lane table, admission, frontend and coalesced round — the
+code the bitwise serving contract lives in. Two modes, mirroring the
+Makefile's pyflakes->compileall fallback idiom:
+
+* **pytest-cov installed** (requirements-dev.txt): delegates to
+  ``pytest --cov`` over the full tier-1 suite and enforces ``FLOOR``.
+* **fallback** (bare container): an in-process ``sys.settrace`` line
+  tracer over a serving-focused test subset, with executable lines
+  derived from each module's compiled code objects (``co_lines``), and
+  a subset-calibrated ``FALLBACK_FLOOR``. No third-party coverage
+  machinery — slower per line but runs anywhere.
+
+Both floors are deliberately a few points under the measured value:
+the gate catches a satellite module silently dropping out of the suite
+(a deleted test file, an always-skip), not single-line drift.
+"""
+from __future__ import annotations
+
+import importlib.util
+import os
+import subprocess
+import sys
+import threading
+import types
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+TARGETS = ("src/repro/serving", "src/repro/core/pipeline.py")
+
+#: tier-1 pytest-cov floor (percent over the TARGETS).
+FLOOR = 80
+
+#: fallback-mode floor: calibrated on FALLBACK_TESTS (measured 84% — the
+#: sharded cluster paths skip on 1 device, lm_serve has no test here).
+FALLBACK_FLOOR = 78
+FALLBACK_TESTS = (
+    "tests/test_admission.py",
+    "tests/test_frontend.py",
+    "tests/test_checkpoint.py",
+    "tests/test_session.py",
+)
+
+
+def _target_files() -> list:
+    out = []
+    for t in TARGETS:
+        p = os.path.join(ROOT, t)
+        if os.path.isdir(p):
+            out.extend(os.path.join(p, f) for f in sorted(os.listdir(p))
+                       if f.endswith(".py"))
+        else:
+            out.append(p)
+    return out
+
+
+def _executable_lines(path: str) -> set:
+    """Line numbers with executable bytecode, from the compiled module's
+    code objects walked recursively — the denominator pytest-cov would
+    compute, minus its pragma/branch niceties."""
+    with open(path) as f:
+        code = compile(f.read(), path, "exec")
+    lines: set = set()
+    stack = [code]
+    while stack:
+        c = stack.pop()
+        lines.update(ln for _s, _e, ln in c.co_lines() if ln is not None)
+        stack.extend(k for k in c.co_consts
+                     if isinstance(k, types.CodeType))
+    lines.discard(0)
+    return lines
+
+
+def run_pytest_cov() -> int:
+    pkgs = ["--cov=repro.serving", "--cov=repro.core.pipeline"]
+    cmd = [sys.executable, "-m", "pytest", "-x", "-q", *pkgs,
+           f"--cov-fail-under={FLOOR}", "--cov-report=term-missing"]
+    print("coverage gate: pytest-cov over tier-1,", f"floor {FLOOR}%")
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(ROOT, "src") + os.pathsep +
+               os.environ.get("PYTHONPATH", ""))
+    return subprocess.call(cmd, cwd=ROOT, env=env)
+
+
+def run_fallback() -> int:
+    targets = {os.path.abspath(p) for p in _target_files()}
+    hits: dict = {}
+
+    def tracer(frame, event, _arg):
+        fn = frame.f_code.co_filename
+        if event == "call":
+            # trace into target frames only: everything else runs at
+            # full speed (returning None disables per-line events there)
+            return tracer if fn in targets else None
+        if event == "line":
+            hits.setdefault(fn, set()).add(frame.f_lineno)
+        return tracer
+
+    import pytest  # after path setup, before the tracer goes live
+    print("coverage gate: pytest-cov not installed; settrace fallback "
+          f"over {len(FALLBACK_TESTS)} test files, "
+          f"floor {FALLBACK_FLOOR}%")
+    os.chdir(ROOT)
+    threading.settrace(tracer)
+    sys.settrace(tracer)
+    try:
+        rc = pytest.main(["-x", "-q", "-p", "no:cacheprovider",
+                          *FALLBACK_TESTS])
+    finally:
+        sys.settrace(None)
+        threading.settrace(None)
+    if rc != 0:
+        print(f"coverage gate: test subset FAILED (pytest rc {rc})")
+        return int(rc) or 1
+
+    total_exec = total_hit = 0
+    print(f"{'file':<44}{'lines':>7}{'hit':>6}{'cover':>8}")
+    for path in sorted(targets):
+        exe = _executable_lines(path)
+        hit = len(exe & hits.get(path, set()))
+        total_exec += len(exe)
+        total_hit += hit
+        pct = 100.0 * hit / len(exe) if exe else 100.0
+        rel = os.path.relpath(path, ROOT)
+        print(f"{rel:<44}{len(exe):>7}{hit:>6}{pct:>7.1f}%")
+    pct = 100.0 * total_hit / max(total_exec, 1)
+    print(f"{'TOTAL':<44}{total_exec:>7}{total_hit:>6}{pct:>7.1f}%")
+    if pct < FALLBACK_FLOOR:
+        print(f"coverage gate: {pct:.1f}% < floor {FALLBACK_FLOOR}%")
+        return 1
+    print(f"coverage gate: OK ({pct:.1f}% >= {FALLBACK_FLOOR}%)")
+    return 0
+
+
+def main() -> int:
+    sys.path.insert(0, os.path.join(ROOT, "src"))
+    if importlib.util.find_spec("pytest_cov") is not None:
+        return run_pytest_cov()
+    return run_fallback()
+
+
+if __name__ == "__main__":
+    sys.exit(main())
