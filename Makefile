@@ -19,20 +19,26 @@
 #                     _HostStager ring buffers (no jnp.pad/jnp.stack/...
 #                     per-tenant staging regressions) AND the fused step
 #                     path never re-materializes neighbor gathers/concats
-#   make coverage     line-coverage floor over the serving stack
-#                     (pytest-cov when installed, else an in-process
-#                      settrace fallback; tools/coverage_gate.py)
+#   make coverage     line-coverage floor over the serving stack + the
+#                     observability layer (pytest-cov when installed,
+#                      else an in-process settrace fallback;
+#                      tools/coverage_gate.py)
+#   make bench-gate   throughput regression gate: re-runs the toy-scale
+#                     coalesced/fused/fig5 sweeps and fails on >25%
+#                     edges/s regression vs results/bench_gate.json
+#                     (refresh an intended change with
+#                      `python tools/bench_gate.py --update`)
 #   make lint         pyflakes over src/ tests/ benchmarks/ examples/
 #                     (falls back to a bytecode-compile check when
 #                      pyflakes is not installed; see requirements-dev.txt)
 #                     + docs-check + session-lint + serve-smoke +
-#                     test-sharded + test-kernels + coverage preflight
+#                     test-sharded + test-kernels + coverage + bench-gate
 
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: test test-sharded test-kernels bench-smoke serve-smoke lint \
-	docs-check session-lint coverage
+	docs-check session-lint coverage bench-gate
 
 test:
 	$(PY) -m pytest -x -q
@@ -69,7 +75,11 @@ session-lint:
 coverage:
 	$(PY) tools/coverage_gate.py
 
-lint: docs-check session-lint serve-smoke test-sharded test-kernels coverage
+bench-gate:
+	$(PY) tools/bench_gate.py
+
+lint: docs-check session-lint serve-smoke test-sharded test-kernels \
+		coverage bench-gate
 	@if $(PY) -c "import pyflakes" 2>/dev/null; then \
 	    $(PY) -m pyflakes src benchmarks examples tests/*.py; \
 	else \

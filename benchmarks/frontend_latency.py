@@ -19,7 +19,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import save_json
 from repro.core import pipeline as pl, tgn
@@ -59,7 +58,7 @@ def _serve(g, cfg, params, ef, n_tenants, deadline_s, events_per_tenant,
                       float(g.ts[i]), int(g.dst[(i + 3) % g.n_edges]))
     fe.pump(force=True)
     mgr.sync()
-    fe.event_latencies.clear()
+    fe.event_latencies.reset()       # obs.Histogram: drop warmup samples
     c0 = mgr.compile_counters()
 
     gap = 1.0 / rate_eps                 # inter-arrival per tenant column
@@ -79,16 +78,20 @@ def _serve(g, cfg, params, ef, n_tenants, deadline_s, events_per_tenant,
 
     c1 = mgr.compile_counters()
     assert c1["round_traces"] == c0["round_traces"], (c0, c1)
-    lat = np.array(fe.event_latencies)
+    lat = fe.event_latencies              # obs.Histogram (streaming)
     edges = events_per_tenant * n_tenants
     return {
         "tenants": n_tenants,
         "deadline_ms": deadline_s * 1e3,
         "events": edges,
         "rounds": fe.rounds,
-        "p50_ms": float(np.percentile(lat, 50) * 1e3),
-        "p99_ms": float(np.percentile(lat, 99) * 1e3),
+        "p50_ms": (lat.quantile(0.50) or 0.0) * 1e3,
+        "p99_ms": (lat.quantile(0.99) or 0.0) * 1e3,
         "eps": int(edges / wall),
+        # the unified registry view of the same run (satellite of the
+        # obs layer: benchmarks persist registry snapshots alongside
+        # their own derived rows)
+        "registry": mgr.obs.snapshot(),
     }
 
 

@@ -205,6 +205,8 @@ def coalesced_sweep(tenant_counts=(2, 4, 8, 16), cohort_counts=(1, 2, 3),
                     rounds, warmup=2, sync=mgr.sync)
                 eps[mode] = (rounds - 2) * batch * T / dt
                 eps[f"{mode}_launches"] = mgr.metrics[-1]["launches"]
+                if coalesce:
+                    registry = mgr.obs.snapshot()
             rows.append({
                 "cohorts": C, "tenants": T, "batch": batch,
                 "coalesced_eps": round(eps["coalesced"]),
@@ -212,6 +214,9 @@ def coalesced_sweep(tenant_counts=(2, 4, 8, 16), cohort_counts=(1, 2, 3),
                 "speedup": round(eps["coalesced"] / eps["per_cohort"], 2),
                 "launches_per_round": (eps["coalesced_launches"],
                                        eps["per_cohort_launches"]),
+                # unified obs view of the coalesced run (rounds, launches,
+                # compile counters) persisted with the derived numbers
+                "registry": registry,
             })
     return rows
 

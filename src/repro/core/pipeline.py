@@ -413,11 +413,16 @@ class CoalescedRound:
     """
 
     def __init__(self, parts, *, donate_state: bool = False,
-                 in_shardings=None, out_shardings=None):
+                 in_shardings=None, out_shardings=None, obs=None):
         """``parts``: sequence of ``(pipeline, aux, rows)`` — one entry per
         cohort, ``rows`` its stacked-table capacity. ``donate_state``
         donates the per-cohort state tuple (resident tables updated in
         place); shardings pin mesh placements exactly as ``batched_step``.
+        ``obs`` (an ``obs.MetricsRegistry``) mirrors ``traces``/``calls``
+        into the ``compile.round_traces``/``compile.round_calls`` gauges
+        so ``compile_counters`` reads one lock-consistent snapshot; the
+        gauges keep the current-launch semantics (they reset with every
+        fresh layout).
         """
         self.parts = tuple((p, a, int(r)) for p, a, r in parts)
         segments, lanes, lo = [], [], 0
@@ -436,6 +441,12 @@ class CoalescedRound:
         #: executable (jit traces exactly on cache miss), i.e. the
         #: compile counter the live-admission zero-recompile guard reads.
         self.traces = 0
+        self._g_traces = self._g_calls = None
+        if obs is not None:
+            self._g_traces = obs.gauge("compile.round_traces")
+            self._g_calls = obs.gauge("compile.round_calls")
+            self._g_traces.set(0)        # a fresh layout starts at zero
+            self._g_calls.set(0)
 
         steps = [(pipe.step, aux) for pipe, aux, _rows in self.parts]
         segs = self.segments
@@ -453,6 +464,8 @@ class CoalescedRound:
         # per-cohort dispatch has per cohort.
         def round_fn(params, states, batch, ef, nf, widths):
             self.traces += 1          # trace time == compile time, not per call
+            if self._g_traces is not None:
+                self._g_traces.set(self.traces)
             outs = []
             for (lo, hi), (step, aux), p, state, w in zip(segs, steps,
                                                           params, states,
@@ -482,6 +495,8 @@ class CoalescedRound:
         if isinstance(params, Mapping):      # shared-params fleet: broadcast
             params = (params,) * len(self.parts)
         self.calls += 1
+        if self._g_calls is not None:
+            self._g_calls.set(self.calls)
         return self._fn(params, states, superbatch, edge_feats, node_feats,
                         tuple(int(w) for w in widths))
 

@@ -283,6 +283,11 @@ def main():
     shapes = list(configs.SHAPES) if args.shape == "all" else [args.shape]
     meshes = [False, True] if args.both_meshes else [args.multipod]
 
+    # sweep-level observability: lower/compile walls as streaming
+    # histograms + ok/skip/fail counters, one snapshot at the end
+    from repro.obs import MetricsRegistry
+    obs = MetricsRegistry()
+
     results = []
     for arch in archs:
         for shape in shapes:
@@ -316,8 +321,13 @@ def main():
                          "traceback": traceback.format_exc()}
                 results.append(r)
                 status = r["status"]
+                obs.counter("dryrun." + ("ok" if status == "ok" else
+                                         "skip" if status.startswith("skip")
+                                         else "fail")).inc()
                 extra = ""
                 if status == "ok":
+                    obs.histogram("dryrun.lower_s").record(r["lower_s"])
+                    obs.histogram("dryrun.compile_s").record(r["compile_s"])
                     pk = r["memory"]["peak_bytes"]
                     extra = (f" peak={pk/2**30:.2f}GiB"
                              f" bound={r['roofline']['bound']}"
@@ -332,6 +342,13 @@ def main():
     n_fail = len(results) - n_ok - n_skip
     print(f"\n=== dry-run: {n_ok} ok, {n_skip} skip, {n_fail} FAIL "
           f"of {len(results)} cells ===")
+    lower = obs.get("dryrun.lower_s")
+    if lower is not None and lower.count:
+        comp = obs.histogram("dryrun.compile_s")
+        print(f"walls: lower p50={lower.quantile(0.5):.1f}s "
+              f"max={lower.vmax:.1f}s; compile "
+              f"p50={comp.quantile(0.5):.1f}s max={comp.vmax:.1f}s "
+              f"over {lower.count} fresh cells")
     if n_fail:
         for r in results:
             if r["status"].startswith("FAIL"):

@@ -25,6 +25,12 @@ under a latency deadline, with live tenant attach/detach over the wire
 landing in the compiled round without a recompile (serving/admission.py
 capacity classes). See docs/SERVING.md for the protocol.
 
+Observability (both tgn paths): ``--slo-ms`` tracks per-tenant SLO burn
+against a latency target, ``--metrics-every`` prints unified
+metrics-registry snapshots mid-run, and ``--trace-out``/``--trace-every``
+export a sampled span trace of the round loop (Chrome/Perfetto JSON or
+JSONL) — see docs/OBSERVABILITY.md.
+
 ``--mode lm``: batched prefill+decode generation with a reduced-config LM.
 
 Examples:
@@ -181,6 +187,33 @@ def _ensure_param_sets(mgr, variants, pnames) -> None:
               f"(digest {mgr.param_store.digest(pname)}, seed {seed})")
 
 
+def _make_tracer(args):
+    """--trace-out: build the sampled round tracer (obs/trace.py)."""
+    if not args.trace_out:
+        return None
+    from repro.obs import RoundTracer
+    return RoundTracer(sample_every=args.trace_every)
+
+
+def _export_trace(tracer, args):
+    """Write the collected spans at exit: Chrome/Perfetto trace_event
+    JSON by default, span-per-line JSONL when the path ends .jsonl."""
+    if tracer is None:
+        return
+    if args.trace_out.endswith(".jsonl"):
+        tracer.write_jsonl(args.trace_out)
+    else:
+        tracer.write_chrome(args.trace_out)
+    print(f"trace: {tracer.summary()} -> {args.trace_out}")
+
+
+def _print_metrics(obs, tag=""):
+    import json
+    print(f"metrics{tag}:",
+          json.dumps(obs.snapshot(), sort_keys=True, default=float),
+          flush=True)
+
+
 def run_frontend(args):
     """--listen: the online serving front-end (serving/frontend.py).
 
@@ -208,7 +241,10 @@ def run_frontend(args):
                           max_rows=args.max_rows,
                           queue_rows=args.queue_rows,
                           pad_quantum=args.pad_quantum)
-    fe = ServingFrontend(mgr, fcfg)
+    tracer = _make_tracer(args)
+    fe = ServingFrontend(mgr, fcfg, tracer=tracer,
+                         slo_ms=args.slo_ms or None,
+                         slo_objective=args.slo_objective)
     host, _, port = args.listen.partition(":")
 
     async def serve():
@@ -219,12 +255,23 @@ def run_frontend(args):
               f"(deadline {fcfg.max_wait_s * 1e3:.1f}ms, "
               f"max-rows {fcfg.max_rows}, tenants {list(mgr.tenants)})",
               flush=True)
+        ticker = None
+        if args.metrics_every:
+            async def tick():
+                # online mode has no round counter to key off, so
+                # --metrics-every is SECONDS here (rounds offline)
+                while True:
+                    await asyncio.sleep(args.metrics_every)
+                    _print_metrics(fe.obs)
+            ticker = asyncio.create_task(tick())
         try:
             if args.serve_seconds > 0:
                 await asyncio.sleep(args.serve_seconds)
             else:
                 await asyncio.Event().wait()      # forever; Ctrl-C stops
         finally:
+            if ticker is not None:
+                ticker.cancel()
             server.close()
             await server.wait_closed()
             await fe.stop()
@@ -234,6 +281,9 @@ def run_frontend(args):
     except KeyboardInterrupt:
         pass
     print("frontend stats:", fe.stats())
+    if args.slo_ms:
+        print("slo:", {tid: mgr.slo.tenant(tid) for tid in mgr.tenants})
+    _export_trace(tracer, args)
 
 
 def run_tgn(args):
@@ -245,11 +295,13 @@ def run_tgn(args):
 
     tenant_variants = _tenant_variants(args)
     if args.tenant_variants or args.tenants > 1 or args.mesh is not None \
-            or args.snapshot_dir:
+            or args.snapshot_dir or args.slo_ms or args.trace_out:
         # multi-tenant: split the stream into one contiguous feed per
         # tenant; same-variant tenants share one vmapped launch per round.
         # (--snapshot-dir forces this path too: snapshots are a session
-        # feature, and a 1-tenant session serves bitwise like the engine.)
+        # feature, and a 1-tenant session serves bitwise like the engine.
+        # Likewise --slo-ms/--trace-out: SLO burn and round tracing live
+        # on the session.)
         coalesce = not args.per_cohort
         if args.mesh is not None:
             from repro.serving.cluster import ShardedSessionManager
@@ -259,6 +311,11 @@ def run_tgn(args):
         else:
             mgr = SessionManager(params, edge_feats, node_feats, model=cfg,
                                  use_kernels=args.kernels, coalesce=coalesce)
+        tracer = _make_tracer(args)
+        if tracer is not None:
+            mgr.set_tracer(tracer)
+        if args.slo_ms:
+            mgr.set_slo(args.slo_ms, args.slo_objective)
         snapshots = (_SnapshotHooks(mgr, args) if args.snapshot_dir
                      else None)
         pnames = _tenant_params(args, len(tenant_variants))
@@ -294,12 +351,15 @@ def run_tgn(args):
             if snapshots and args.snapshot_every and \
                     rounds % args.snapshot_every == 0:
                 snapshots.save(rounds)
+            if args.metrics_every and rounds % args.metrics_every == 0:
+                _print_metrics(mgr.obs, tag=f" (round {rounds})")
         if snapshots:
             snapshots.save_final(rounds)
             steps = {t: snapshots.base_step.get(t, 0) + rounds
                      for t in sorted(mgr.tenants)}
             print(f"snapshots: {steps} -> {args.snapshot_dir}")
         print("session summary:", mgr.summary())
+        _export_trace(tracer, args)
         return
 
     engine = StreamingEngine(EngineConfig(model=cfg,
@@ -405,6 +465,28 @@ def main():
     ap.add_argument("--serve-seconds", type=float, default=0.0,
                     help="with --listen: serve this long then exit "
                          "(0: run until interrupted)")
+    ap.add_argument("--slo-ms", type=float, default=0.0,
+                    help="per-tenant latency SLO target: track burn rate "
+                         "against this target (offline: round wall; "
+                         "--listen: per-event queue+serve latency). 0 "
+                         "disables (see docs/OBSERVABILITY.md)")
+    ap.add_argument("--slo-objective", type=float, default=0.99,
+                    help="SLO objective quantile, e.g. 0.99 = 'p99 under "
+                         "--slo-ms'; burn rate 1.0 means the error budget "
+                         "is being consumed exactly on schedule")
+    ap.add_argument("--metrics-every", type=int, default=0,
+                    help="print a metrics-registry snapshot every N rounds "
+                         "(offline) or every N seconds (--listen); 0 "
+                         "disables")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="export the sampled round trace at exit: Chrome/"
+                         "Perfetto trace_event JSON (open in ui.perfetto."
+                         "dev), or one-span-per-line JSONL if PATH ends "
+                         ".jsonl")
+    ap.add_argument("--trace-every", type=int, default=8,
+                    help="trace 1 in N rounds (sampled rounds add device "
+                         "fences for span accuracy, so keep this >1 to "
+                         "preserve async pipelining on the rest)")
     ap.add_argument("--batch", type=int, default=200)
     ap.add_argument("--window-s", type=float, default=0.0)
     ap.add_argument("--arch", default="qwen3_8b")
@@ -417,6 +499,18 @@ def main():
         ap.error("--snapshot-every needs --snapshot-dir")
     if args.listen is not None and args.mode != "tgn":
         ap.error("--listen is a --mode tgn feature")
+    if (args.slo_ms or args.trace_out or args.metrics_every) \
+            and args.mode != "tgn":
+        ap.error("--slo-ms/--trace-out/--metrics-every are --mode tgn "
+                 "features")
+    if args.slo_ms < 0:
+        ap.error("--slo-ms must be >= 0")
+    if not 0.0 < args.slo_objective < 1.0:
+        ap.error("--slo-objective must be in (0, 1)")
+    if args.trace_every < 1:
+        ap.error("--trace-every must be >= 1")
+    if args.metrics_every < 0:
+        ap.error("--metrics-every must be >= 0")
     if args.listen is not None:
         run_frontend(args)
     else:

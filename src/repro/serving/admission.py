@@ -124,6 +124,8 @@ class AdmissionController:
                         new_cohort=bool(last.get("new_cohort")),
                         size=size, capacity=cap)
         self.log.append(adm)
+        self.mgr.obs.counter(
+            "admission.fast" if adm.fast else "admission.slow").inc()
         return adm
 
     def attach(self, variant=None, *, name: str | None = None,
@@ -149,6 +151,7 @@ class AdmissionController:
         self.log.append(Admission(tid=None, action="prewarm", fast=False,
                                   relayout=True, new_cohort=True,
                                   size=0, capacity=0))
+        self.mgr.obs.counter("admission.slow").inc()
 
     def stats(self) -> dict:
         """Per-cohort occupancy plus the fast/slow admission tallies."""
@@ -162,5 +165,7 @@ class AdmissionController:
             "admissions": len(self.log),
             "fast": sum(1 for a in self.log if a.fast),
             "relayouts": sum(1 for a in self.log if a.relayout),
+            # compile_counters is ONE registry snapshot now, so this view
+            # and a frontend stats() in the same response always agree
             "compile": self.mgr.compile_counters(),
         }

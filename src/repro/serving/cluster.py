@@ -152,7 +152,8 @@ class ShardedSessionManager(SessionManager):
         out_sh = (tuple(c.out_shardings for c in cohorts), rep)
         return pl.CoalescedRound(
             [(c.pipeline, c.aux, c.capacity) for c in cohorts],
-            donate_state=True, in_shardings=in_sh, out_shardings=out_sh)
+            donate_state=True, in_shardings=in_sh, out_shardings=out_sh,
+            obs=self.obs)
 
     def _make_stager(self, rows: int, width: int):
         from repro.serving.session import _HostStager

@@ -48,6 +48,7 @@ from repro.core import pipeline as pl
 from repro.core import tgn
 from repro.data.stream import EdgeBatch
 from repro.distributed import overlap
+from repro.obs import Histogram
 from repro.serving.session import SessionManager
 
 
@@ -172,14 +173,19 @@ class StreamingEngine:
     def summary(self) -> dict:
         if not self.metrics:
             return {}
-        lat = np.array([m["latency_s"] for m in self.metrics[1:]])  # skip jit
-        h2d = np.array([m["h2d_s"] for m in self.metrics[1:]])
+        lat = Histogram("engine.latency_s")
+        h2d = Histogram("engine.h2d_s")
+        for m in self.metrics[1:]:          # skip the jit-warmup batch
+            lat.record(m["latency_s"])
+            h2d.record(m["h2d_s"])
         edges = sum(m["edges"] for m in self.metrics[1:])
+        # Histogram returns a DEFINED None on empty (a one-batch run has
+        # nothing after warmup); map it to the 0.0 this summary reports
         return {
             "batches": len(self.metrics) - 1,
-            "mean_latency_ms": float(lat.mean() * 1e3) if len(lat) else 0.0,
-            "p99_latency_ms": float(np.percentile(lat, 99) * 1e3)
-            if len(lat) else 0.0,
-            "mean_h2d_ms": float(h2d.mean() * 1e3) if len(h2d) else 0.0,
-            "throughput_eps": float(edges / lat.sum()) if len(lat) else 0.0,
+            "mean_latency_ms": (lat.mean() or 0.0) * 1e3,
+            "p99_latency_ms": (lat.quantile(0.99) or 0.0) * 1e3,
+            "mean_h2d_ms": (h2d.mean() or 0.0) * 1e3,
+            "throughput_eps": (float(edges / lat.total)
+                               if lat.total > 0 else 0.0),
         }

@@ -19,8 +19,11 @@ the per-round edge BATCHES the coalesced launch consumes:
     event loop) driving ``SessionManager.step`` plus an asyncio driver
     (``start``/``stop``) and a request dispatcher (``handle``) speaking a
     dict protocol — op "ingest" | "attach" | "detach" | "stats" |
-    "flush". Live attach/detach land mid-stream on the reserve fast path:
-    no recompile, surviving tenants' trajectories bitwise-unchanged.
+    "metrics" | "flush". Live attach/detach land mid-stream on the
+    reserve fast path: no recompile, surviving tenants' trajectories
+    bitwise-unchanged. Event latencies stream into the fleet's
+    ``obs.MetricsRegistry``; ``metrics`` returns its lock-consistent
+    snapshot plus per-tenant SLO burn (docs/OBSERVABILITY.md).
 
 ``serve_jsonl``
     the stdlib wire transport: newline-delimited JSON over
@@ -158,16 +161,17 @@ class DeadlineBatcher:
         (leftovers stay queued FIFO for the next round). Tenants with
         nothing pending are omitted — the coalesced round idle-masks
         them. Returns ``(batches, arrivals)``: the round's ``{tid:
-        EdgeBatch}`` plus the drained events' arrival clock times (for
-        latency accounting; padding rows excluded)."""
-        batches, arrivals = {}, []
+        EdgeBatch}`` plus ``{tid: arrival clock times}`` of the drained
+        events (per-tenant, so latency accounting and SLO burn can
+        attribute each event; padding rows excluded)."""
+        batches, arrivals = {}, {}
         for tid, q in self._q.items():
             if not q:
                 continue
             rows = [q.popleft() for _ in range(min(len(q),
                                                    self.cfg.max_rows))]
             src, dst, eid, ts, neg, arrival = zip(*rows)
-            arrivals.extend(arrival)
+            arrivals[tid] = arrival
             cols = (np.asarray(src, np.int32), np.asarray(dst, np.int32),
                     np.asarray(eid, np.int32), np.asarray(ts, np.float32),
                     np.ones(len(rows), bool), np.asarray(neg, np.int32))
@@ -191,7 +195,9 @@ class ServingFrontend:
     """
 
     def __init__(self, mgr, cfg: FrontendConfig | None = None,
-                 clock=time.monotonic, record_rounds: bool = False):
+                 clock=time.monotonic, record_rounds: bool = False,
+                 tracer=None, slo_ms: float | None = None,
+                 slo_objective: float = 0.99):
         self.mgr = mgr
         self.cfg = cfg or FrontendConfig()
         self.clock = clock
@@ -201,11 +207,26 @@ class ServingFrontend:
         # one source of truth: summary()["per_tenant"].queue_depth reads
         # the live frontend queues
         mgr.queue_depths = self.batcher.depths
+        #: the fleet registry (shared with the manager): one consistent
+        #: snapshot backs both the stats and metrics responses
+        self.obs = mgr.obs
+        #: per-event queue->flush latency distribution — a bounded-memory
+        #: streaming histogram in the fleet registry (was a raw deque
+        #: with hand-rolled percentile math)
+        self.event_latencies = self.obs.histogram("frontend.event_latency_s")
+        if tracer is not None:
+            # span coherence needs one clock: ingest spans carry batcher
+            # arrival times, so the tracer should share ``clock``
+            mgr.set_tracer(tracer)
+        if slo_ms is not None:
+            mgr.set_slo(slo_ms, slo_objective, source="event")
+        elif getattr(mgr, "slo", None) is not None:
+            # an SLO armed before the frontend existed: per-event
+            # latencies are the observation source once we're online
+            mgr.slo.source = "event"
         self.rounds = 0
         self.events = 0
         self.orphaned = 0   #: rows dropped by out-of-band detaches
-        #: per-event queue->flush latency samples (seconds), bounded.
-        self.event_latencies: deque = deque(maxlen=4096)
         self.round_log: list | None = [] if record_rounds else None
         self._task: asyncio.Task | None = None
         self._wake: asyncio.Event | None = None
@@ -237,14 +258,38 @@ class ServingFrontend:
         known = set(self.mgr.tenants)
         for tid in [t for t in self.batcher._q if t not in known]:
             self.orphaned += len(self.batcher.drop_tenant(tid))
+        tracer = getattr(self.mgr, "tracer", None)
+        # peek (not sample_round — the session consumes the round slot):
+        # time flush/ingest only when this round will carry spans
+        trace = (tracer if tracer is not None and tracer.would_sample()
+                 else None)
+        if trace is not None:
+            t_flush = trace.clock()
         batches, arrivals = self.batcher.take()
         if not batches:
             return {}
         if self.round_log is not None:
             self.round_log.append(batches)
+        if trace is not None:
+            t_step = trace.clock()
+            trace.add("flush", t_flush, t_step, cat="frontend",
+                      tenants=len(batches))
+            oldest = min(a for arr in arrivals.values() for a in arr)
+            # queueing span of the round's oldest event: its arrival on
+            # the shared clock -> the moment the round enters the session
+            trace.add("ingest", oldest, t_step, cat="frontend",
+                      events=sum(len(a) for a in arrivals.values()))
         outs = self.mgr.step(batches)
         done = self.clock()
-        self.event_latencies.extend(done - a for a in arrivals)
+        slo = getattr(self.mgr, "slo", None)
+        if slo is not None and slo.source != "event":
+            slo = None
+        for tid, arr in arrivals.items():
+            for a in arr:
+                lat = done - a
+                self.event_latencies.record(lat)
+                if slo is not None:
+                    slo.observe(tid, lat)
         self.rounds += 1
         return outs
 
@@ -264,11 +309,7 @@ class ServingFrontend:
         self.mgr.remove_tenant(tid)
 
     def stats(self) -> dict:
-        lat = sorted(self.event_latencies)
-
-        def pct(p):
-            return lat[min(len(lat) - 1, int(p * len(lat)))] if lat else None
-
+        lat = self.event_latencies
         return {
             "tenants": list(self.mgr.tenants),
             "rounds": self.rounds,
@@ -277,10 +318,27 @@ class ServingFrontend:
             "rejected": self.batcher.rejected,
             "flushes": self.batcher.flushes,
             "queue_depths": self.batcher.depths(),
-            "latency_p50_s": pct(0.50),
-            "latency_p99_s": pct(0.99),
+            "latency_p50_s": lat.quantile(0.50),    # None until an event
+            "latency_p99_s": lat.quantile(0.99),
+            # one atomic registry read (compile_counters snapshots) — an
+            # AdmissionController.stats() in the same response reads the
+            # identical view, never a mid-round disagreement
             "compile": self.mgr.compile_counters(),
         }
+
+    def metrics_snapshot(self) -> dict:
+        """The ``metrics`` wire-op payload: one lock-consistent registry
+        snapshot plus per-tenant SLO burn (every resident tenant) and
+        the tracer's span tallies when those are armed."""
+        out = {"registry": self.obs.snapshot(),
+               "compile": self.mgr.compile_counters()}
+        slo = getattr(self.mgr, "slo", None)
+        if slo is not None:
+            out["slo"] = {tid: slo.tenant(tid) for tid in self.mgr.tenants}
+        tracer = getattr(self.mgr, "tracer", None)
+        if tracer is not None:
+            out["trace"] = tracer.summary()
+        return out
 
     # -------------------------------------------------------- dispatcher
     def handle(self, req: dict) -> dict:
@@ -288,7 +346,8 @@ class ServingFrontend:
 
         ops: ``ingest`` (tid, src, dst, eid, ts[, neg_dst]) |
         ``attach`` ([variant][, name][, use_kernels][, params]) |
-        ``detach`` (tid) | ``stats`` | ``flush`` (force a round now).
+        ``detach`` (tid) | ``stats`` | ``metrics`` (registry snapshot +
+        SLO burn + trace tallies) | ``flush`` (force a round now).
 
         ``attach.params`` names a parameter set already registered via
         ``SessionManager.register_params``; an unknown name is rejected
@@ -315,6 +374,8 @@ class ServingFrontend:
                         "admission": dict(self.mgr.last_admission or {})}
             if op == "stats":
                 return {"ok": True, "stats": self.stats()}
+            if op == "metrics":
+                return {"ok": True, "metrics": self.metrics_snapshot()}
             if op == "flush":
                 outs = self.pump(force=True)
                 return {"ok": True, "flushed": sorted(outs)}

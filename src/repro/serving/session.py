@@ -60,6 +60,7 @@ import numpy as np
 
 from repro.core import mailbox, pipeline as pl, tgn
 from repro.data.stream import EdgeBatch
+from repro.obs import Histogram, MetricsRegistry
 
 
 def _as_device_tuple(batch) -> tuple:
@@ -482,7 +483,7 @@ class SessionManager:
     def __init__(self, params: dict, edge_feats, node_feats=None, *,
                  model: tgn.TGNConfig | None = None, variant=None,
                  use_kernels: bool = False, coalesce: bool = True,
-                 reserve=None, **dims):
+                 reserve=None, obs: MetricsRegistry | None = None, **dims):
         if model is None:
             if variant is None:
                 raise TypeError("pass model=TGNConfig or variant= + dims")
@@ -534,6 +535,45 @@ class SessionManager:
         #: frontend registers, so ``summary()``/``tenant_stats()`` stay
         #: the one source of truth for the stats endpoint
         self.queue_depths = None
+        #: the fleet's metrics registry (``obs.MetricsRegistry``) — ONE
+        #: instance every layer writes through (frontend latencies,
+        #: coalesced-round compile gauges, admission tallies), so
+        #: ``snapshot()`` is the lock-consistent view a stats/metrics
+        #: response embeds
+        self.obs = obs if obs is not None else MetricsRegistry()
+        #: sampled round tracer (``obs.RoundTracer``) — ``set_tracer``.
+        #: None (default) keeps every round fence-free.
+        self.tracer = None
+        #: per-tenant latency-SLO burn tracker (``set_slo``) or None.
+        self.slo = None
+        self._obs_rounds = 0     # round walls already fed to registry/SLO
+
+    # -- observability hooks -------------------------------------------
+    def set_tracer(self, tracer) -> None:
+        """Attach a sampled round tracer (``obs.RoundTracer``). Spans and
+        the device drain fence happen at trace-sample rounds ONLY, so the
+        async round pipeline keeps its never-block contract on every
+        other round. ``None`` detaches."""
+        self.tracer = tracer
+
+    def set_slo(self, target_ms: float, objective: float = 0.99,
+                source: str = "round"):
+        """Arm per-tenant latency-SLO burn accounting (``obs.SLOTracker``)
+        — surfaced in ``summary()["per_tenant"][tid]["slo"]`` and the
+        frontend's ``metrics`` wire op. ``source`` names what one
+        observation is: ``"round"`` (walls fed by ``summary()``) or
+        ``"event"`` (the frontend's per-event latencies)."""
+        from repro.obs import SLOTracker
+        self.slo = SLOTracker(target_ms, objective=objective, source=source)
+        return self.slo
+
+    def _invalidate_layout(self) -> None:
+        """Fleet layout changed: the next round builds (and compiles) a
+        fresh ``CoalescedRound``. The current-launch compile gauges reset
+        with it — ``compile_counters`` reports the CURRENT launch."""
+        self._coalesced = None
+        self.obs.gauge("compile.round_traces").set(0)
+        self.obs.gauge("compile.round_calls").set(0)
 
     # -- tenant lifecycle ----------------------------------------------
     def _place_params(self, params: dict) -> dict:
@@ -634,7 +674,7 @@ class SessionManager:
         self.last_admission = {"tid": tid, "relayout": relayout,
                                "new_cohort": created}
         if created or relayout:
-            self._coalesced = None       # fleet layout changed: relaunch
+            self._invalidate_layout()    # fleet layout changed: relaunch
         return tid
 
     def prewarm_cohort(self, variant=None, *,
@@ -658,7 +698,7 @@ class SessionManager:
         cohort = self._cohorts[(cfg, tier, pname)] = \
             self._make_cohort(cfg, tier, pname)
         cohort.ensure_capacity()
-        self._coalesced = None           # new lane: relaunch (once, now)
+        self._invalidate_layout()        # new lane: relaunch (once, now)
 
     def remove_tenant(self, tid: str) -> None:
         cohort = self._tenant_cohort[tid]
@@ -679,7 +719,7 @@ class SessionManager:
         self.last_admission = {"tid": tid, "relayout": relayout,
                                "new_cohort": False}
         if relayout:
-            self._coalesced = None       # fleet layout changed: relaunch
+            self._invalidate_layout()    # fleet layout changed: relaunch
 
     def compile_counters(self) -> dict:
         """The zero-recompile guard's view: ``relayouts`` (coalesced
@@ -687,11 +727,17 @@ class SessionManager:
         CURRENT round launch — one per new static widths vector), and
         ``round_calls`` (executions dispatched through it). A live
         attach/detach that landed in reserved slots leaves ``relayouts``
-        and ``round_traces`` exactly where they were."""
-        c = self._coalesced
-        return {"relayouts": self.relayouts,
-                "round_traces": 0 if c is None else c.traces,
-                "round_calls": 0 if c is None else c.calls}
+        and ``round_traces`` exactly where they were.
+
+        All three come from ONE ``obs`` registry snapshot (the round
+        launch maintains the gauges, ``_ensure_layout`` the counter), so
+        a stats response that embeds these twice — the frontend's view
+        and the admission controller's — cannot observe two mid-round
+        states of the same counters."""
+        snap = self.obs.snapshot(prefix="compile.")
+        return {"relayouts": int(snap.get("compile.relayouts", 0)),
+                "round_traces": int(snap.get("compile.round_traces", 0)),
+                "round_calls": int(snap.get("compile.round_calls", 0))}
 
     @property
     def tenants(self) -> tuple:
@@ -782,8 +828,9 @@ class SessionManager:
         """Build the fused whole-round launch for the current fleet layout
         (subclass hook: the sharded session pins mesh placements and
         donates the resident state buffers)."""
-        return pl.CoalescedRound((c.pipeline, c.aux, c.capacity)
-                                 for c in self._cohorts.values())
+        return pl.CoalescedRound(((c.pipeline, c.aux, c.capacity)
+                                  for c in self._cohorts.values()),
+                                 obs=self.obs)
 
     def _make_stager(self, rows: int, width: int) -> _HostStager:
         """Host-stager factory (subclass hook: mesh batch placements)."""
@@ -793,17 +840,25 @@ class SessionManager:
         if self._coalesced is None:
             self._coalesced = self._make_coalesced()
             self.relayouts += 1
+            self.obs.counter("compile.relayouts").inc()
         if self._stager is None or self._stager.rows != self._coalesced.rows:
             self._stager = self._make_stager(self._coalesced.rows, width)
         self._stager.ensure_width(width)
         return self._coalesced
 
-    def _coalesced_round(self, batches: Mapping) -> tuple[dict, object]:
+    def _coalesced_round(self, batches: Mapping,
+                         trace=None) -> tuple[dict, object]:
         """ONE compiled launch for the whole round: stage every submitted
         batch into the super-batch ring buffer in place (single
         ``device_put``), advance all cohorts through the fused launch, and
         commit each cohort's state. Returns ``(outs, pending edge count)``
-        — the count is a device scalar resolved only in ``summary()``."""
+        — the count is a device scalar resolved only in ``summary()``.
+
+        ``trace`` is the sampled-round tracer handle (None on unsampled
+        rounds — the fast path): stage/launch host spans plus an ``h2d``
+        fence attributing where the super-batch transfer actually landed.
+        Every fence sits inside the ``trace`` gate, so unsampled rounds
+        never block (``tools/session_lint.py`` enforces this)."""
         host = {tid: _as_host_tuple(b) for tid, b in batches.items()}
         width = max(h[0].shape[0] for h in host.values())
         launch = self._ensure_layout(width)
@@ -818,7 +873,13 @@ class SessionManager:
             c = self._tenant_cohort[tid]
             rows[offsets[id(c)] + c.tids.index(tid)] = h
             widths[id(c)] = max(widths.get(id(c), 1), h[0].shape[0])
+        if trace is not None:
+            t_stage = trace.clock()
         superbatch = self._stager.stage(rows)
+        if trace is not None:
+            t_launch = trace.clock()
+            trace.add("stage", t_stage, t_launch, cat="host",
+                      rows=len(rows), width=width)
         states = tuple(c.state for c in cohorts)
         # per-segment padded widths (static): each cohort steps at ITS
         # round-max batch size — the exact B the per-cohort launch would
@@ -830,6 +891,16 @@ class SessionManager:
                                superbatch, self.edge_feats, self.node_feats,
                                widths=tuple(widths.get(id(c), 1)
                                             for c in cohorts))
+        if trace is not None:
+            now = trace.clock()
+            trace.add("launch", t_launch, now, cat="host",
+                      lanes=len(cohorts))
+            # H2D overlap attribution: the super-batch transfer was
+            # dispatched inside stage; only fencing it (sampled rounds
+            # only) shows how far past the dispatch it actually landed
+            jax.block_until_ready(superbatch)
+            trace.add("h2d", t_stage, trace.clock(), cat="device",
+                      rows=len(rows))
         outs: dict[str, tgn.BatchOut] = {}
         for c, out in zip(cohorts, outs_t):
             c.state = out.state
@@ -893,11 +964,17 @@ class SessionManager:
         if unknown:
             raise KeyError(f"unknown tenants {sorted(unknown)}; "
                            f"registered: {sorted(self._tenant_cohort)}")
+        trace = None
+        if self.tracer is not None and batches:
+            # sampled-trace gate: on unsampled rounds ``trace`` stays
+            # None and the round dispatches fence-free, preserving the
+            # async pipeline (and the pending edge scalars) untouched
+            trace = self.tracer if self.tracer.sample_round() else None
         t0 = time.perf_counter()
         if not batches:
             outs, edges, launches = {}, 0, 0
         elif self.coalesce and not self._device_staged(batches):
-            outs, edges = self._coalesced_round(batches)
+            outs, edges = self._coalesced_round(batches, trace=trace)
             launches = 1
         else:
             outs, edges, launches = self._percohort_round(batches)
@@ -905,13 +982,25 @@ class SessionManager:
         self._drained = None
         self.metrics.append({
             "t0": t0, "latency_s": dt, "edges": edges,
-            "launches": launches, "tenants_active": len(outs)})
+            "launches": launches, "tenants_active": len(outs),
+            "tids": tuple(batches)})
+        self.obs.counter("session.rounds").inc()
+        self.obs.counter("session.launches").inc(launches)
         for tid, b in batches.items():
             rows = (b.src if isinstance(b, EdgeBatch) else b[0]).shape[0]
             ts = self._tenant_stats[tid]
             ts["rounds"] += 1
             ts["rows"] += int(rows)
             ts["last_flush_t"] = t0
+        if trace is not None:
+            # drain fence, sampled rounds ONLY: wait for this round's
+            # commits so its device time is attributed to a span
+            t_drain = trace.clock()
+            jax.block_until_ready(tuple(c.state
+                                        for c in self._cohorts.values()
+                                        if c.state is not None))
+            trace.add("drain", t_drain, trace.clock(), cat="device",
+                      round=len(self.metrics) - 1)
         return outs
 
     def sync(self) -> None:
@@ -958,13 +1047,19 @@ class SessionManager:
 
     def tenant_stats(self) -> dict:
         """Per-tenant serving metrics — ``{tid: {queue_depth, rounds,
-        rows, last_flush_t}}``: the frontend's live ingest-queue depth
-        (0 unless a frontend registered its ``queue_depths`` provider),
-        rounds participated, rows submitted (padding included), and the
-        wall clock of the last round the tenant joined. This is the one
-        source of truth the frontend's stats endpoint reads."""
+        rows, last_flush_t[, slo]}}``: the frontend's live ingest-queue
+        depth (0 unless a frontend registered its ``queue_depths``
+        provider), rounds participated, rows submitted (padding
+        included), the wall clock of the last round the tenant joined,
+        and — when ``set_slo`` armed a tracker — the tenant's SLO burn
+        view (EVERY tenant reports one, zero-observation tenants
+        included). This is the one source of truth the frontend's stats
+        endpoint reads."""
         qd = dict(self.queue_depths()) if self.queue_depths else {}
-        return {tid: {"queue_depth": int(qd.get(tid, 0)), **st}
+        slo = self.slo
+        return {tid: {"queue_depth": int(qd.get(tid, 0)), **st,
+                      **({"slo": slo.tenant(tid)} if slo is not None
+                         else {})}
                 for tid, st in self._tenant_stats.items()}
 
     def summary(self) -> dict:
@@ -984,6 +1079,25 @@ class SessionManager:
             self._drained = (len(self.metrics), time.perf_counter())
         t0s = [m["t0"] for m in self.metrics] + [self._drained[1]]
         walls = np.diff(np.array(t0s))[1:]
+        # one Histogram replaces the hand-rolled percentile math; a
+        # registry-resident copy accumulates across summary() calls for
+        # the metrics endpoint, and a round-sourced SLO tracker observes
+        # each participating tenant's wall. Both are fed exactly once
+        # per round (the cursor) — the last wall's drain component may
+        # shift if more rounds arrive, an accepted approximation.
+        wall_h = Histogram("session.round_wall_s")
+        for w in walls:
+            wall_h.record(w)
+        reg_h = self.obs.histogram("session.round_wall_s")
+        slo = self.slo if (self.slo is not None
+                           and self.slo.source == "round") else None
+        for i in range(self._obs_rounds, len(walls)):
+            reg_h.record(walls[i])
+            if slo is not None:
+                for tid in self.metrics[i + 1].get("tids", ()):
+                    if tid in self._tenant_cohort:
+                        slo.observe(tid, float(walls[i]))
+        self._obs_rounds = len(walls)
         edges = sum(int(np.asarray(m["edges"])) for m in self.metrics[1:])
         return {
             "rounds": len(walls),
@@ -993,9 +1107,9 @@ class SessionManager:
             # cohorts, which would under-report the steady-state cost
             "launches_per_round": max(m["launches"]
                                       for m in self.metrics[1:]),
-            "mean_round_ms": float(walls.mean() * 1e3),
-            "p99_round_ms": float(np.percentile(walls, 99) * 1e3),
-            "throughput_eps": (float(edges / walls.sum())
-                               if walls.sum() > 0 else 0.0),
+            "mean_round_ms": (wall_h.mean() or 0.0) * 1e3,
+            "p99_round_ms": (wall_h.quantile(0.99) or 0.0) * 1e3,
+            "throughput_eps": (float(edges / wall_h.total)
+                               if wall_h.total > 0 else 0.0),
             "per_tenant": self.tenant_stats(),
         }

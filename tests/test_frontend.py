@@ -462,3 +462,62 @@ def test_jsonl_server_roundtrip(setup):
 
     asyncio.run(scenario())
     assert fe.stats()["tenants"] == ["t0"]
+
+
+# ---------------------------------------------------------------------------
+# observability: sampled tracing + SLO burn over the online round path
+# ---------------------------------------------------------------------------
+
+
+def test_sampled_tracing_keeps_zero_recompile_single_launch(setup):
+    """Serving a mixed-cohort reserve-mode fleet with sampled tracing
+    armed changes NOTHING about the serving contract — compile counters
+    frozen, one coalesced launch per round — while the sampled rounds
+    produce the full span taxonomy and per-tenant SLO burn."""
+    from repro.obs import RoundTracer
+
+    g, cfg, params, ef = setup
+    clk = FakeClock()
+    mgr = SessionManager(params, ef, model=cfg, reserve=True)
+    for i, v in enumerate((BASE, BASE, OTHER)):
+        mgr.add_tenant(v, name=f"t{i}")
+    tracer = RoundTracer(clock=clk, sample_every=2)
+    fe = ServingFrontend(mgr, FrontendConfig(max_wait_s=0.005, max_rows=8,
+                                             pad_quantum=8),
+                         clock=clk, tracer=tracer, slo_ms=50.0)
+    tids = list(mgr.tenants)
+
+    _feed(fe, g, tids, 0, 8)               # warmup: compile both widths
+    fe.pump(force=True)
+    c0 = mgr.compile_counters()
+
+    for r in range(6):
+        _feed(fe, g, tids, 8 * (r + 1), 8)
+        clk.advance(0.006)                 # past the deadline
+        assert fe.pump()                   # a round launched
+
+    # the serving contract is untouched by tracing
+    c1 = mgr.compile_counters()
+    assert c1["relayouts"] == c0["relayouts"]
+    assert c1["round_traces"] == c0["round_traces"]
+    assert {m["launches"] for m in mgr.metrics} == {1}
+
+    # sampling is a strict subset of rounds; spans cover the taxonomy
+    assert 0 < tracer.rounds_sampled < tracer.rounds_seen
+    names = {s.name for s in tracer.spans}
+    assert {"ingest", "flush", "stage", "launch", "h2d", "drain"} <= names
+
+    # SLO burn reported for EVERY tenant in the summary
+    per_tenant = mgr.summary()["per_tenant"]
+    assert set(per_tenant) == set(tids)
+    for st in per_tenant.values():
+        slo = st["slo"]
+        assert slo["target_ms"] == 50.0 and slo["source"] == "event"
+        assert slo["events"] > 0
+        assert 0.0 <= slo["budget_remaining"] <= 1.0
+
+    # the wire op exposes the same atomic view
+    out = fe.metrics_snapshot()
+    assert out["compile"] == mgr.compile_counters()
+    assert out["trace"]["rounds_sampled"] == tracer.rounds_sampled
+    assert set(out["slo"]) == set(tids)

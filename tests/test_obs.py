@@ -1,0 +1,224 @@
+"""Observability layer unit tests (src/repro/obs).
+
+Pure-host tests: metric math (streaming histogram quantiles vs a sorted
+list, merge associativity, the defined empty case), registry semantics
+(get-or-create, one-type-per-name, atomic snapshot), tracer sampling +
+Chrome/Perfetto export shape, and SLO burn arithmetic.
+"""
+from __future__ import annotations
+
+import json
+
+import pytest
+
+from repro.obs import (Counter, Gauge, Histogram, MetricsRegistry,
+                       RoundTracer, SLOTracker, Span)
+
+
+# --------------------------------------------------------------- metrics
+def test_counter_monotonic():
+    c = Counter("x")
+    c.inc()
+    c.inc(4)
+    assert c.snapshot() == 5
+    with pytest.raises(ValueError):
+        c.inc(-1)
+    c.reset()
+    assert c.snapshot() == 0
+
+
+def test_histogram_empty_is_defined():
+    h = Histogram("t")
+    assert h.count == 0
+    assert h.mean() is None
+    assert h.quantile(0.5) is None
+    assert h.quantile(0.99) is None
+    snap = h.snapshot()
+    assert snap["count"] == 0 and snap["p99"] is None
+
+
+def test_histogram_constant_samples_exact():
+    # the property the frontend latency test relies on: a histogram of
+    # identical values reports that value exactly at every quantile
+    # (midpoint clamped to [vmin, vmax])
+    h = Histogram("t")
+    for _ in range(7):
+        h.record(0.011)
+    assert h.quantile(0.50) == pytest.approx(0.011)
+    assert h.quantile(0.99) == pytest.approx(0.011)
+    assert h.mean() == pytest.approx(0.011)
+    assert h.count == 7 and h.vmin == h.vmax == 0.011
+
+
+def test_histogram_quantile_vs_sorted_list():
+    # same rank convention as the sorted-list lat[int(q*len)] paths it
+    # replaced; value within one bucket ratio (10**(1/32) ~ 7.5%)
+    xs = [1e-3 * 1.09 ** i for i in range(120)]
+    h = Histogram("t")
+    for x in xs:
+        h.record(x)
+    s = sorted(xs)
+    for q in (0.10, 0.50, 0.90, 0.99):
+        exact = s[min(len(s) - 1, int(q * len(s)))]
+        assert h.quantile(q) == pytest.approx(exact, rel=0.08)
+
+
+def test_histogram_out_of_range_clamps_to_observed():
+    h = Histogram("t")
+    h.record(1e-12)                 # below LO -> underflow bucket
+    h.record(1e9)                   # above HI -> overflow bucket
+    assert h.count == 2
+    assert h.quantile(0.0) == pytest.approx(1e-12)    # clamped to vmin
+    assert h.quantile(0.99) == pytest.approx(1e9)     # clamped to vmax
+
+
+def test_histogram_merge_matches_combined():
+    a, b, both = Histogram("a"), Histogram("b"), Histogram("ab")
+    for i, x in enumerate(0.001 * (1 + i) for i in range(50)):
+        (a if i % 2 else b).record(x)
+        both.record(x)
+    a.merge(b)
+    assert a.count == both.count
+    assert a.total == pytest.approx(both.total)
+    assert a.vmin == both.vmin and a.vmax == both.vmax
+    for q in (0.5, 0.9):
+        assert a.quantile(q) == pytest.approx(both.quantile(q))
+
+
+def test_histogram_weighted_record_and_reset():
+    h = Histogram("t")
+    h.record(0.5, n=10)
+    assert h.count == 10 and h.total == pytest.approx(5.0)
+    h.reset()
+    assert h.count == 0 and h.mean() is None
+
+
+def test_registry_get_or_create_and_type_binding():
+    obs = MetricsRegistry()
+    assert obs.counter("a") is obs.counter("a")
+    obs.counter("a").inc(3)
+    obs.gauge("g").set(7)
+    obs.histogram("h").record(0.25)
+    with pytest.raises(TypeError):
+        obs.gauge("a")              # "a" is bound to Counter
+    snap = obs.snapshot()
+    assert snap["a"] == 3 and snap["g"] == 7
+    assert snap["h"]["count"] == 1
+    assert obs.snapshot(prefix="a") == {"a": 3}
+
+
+def test_registry_merge():
+    a, b = MetricsRegistry(), MetricsRegistry()
+    a.counter("c").inc(2)
+    b.counter("c").inc(5)
+    b.gauge("g").set(9)
+    b.histogram("h").record(1.0)
+    a.merge(b)
+    assert a.counter("c").value == 7
+    assert a.gauge("g").value == 9
+    assert a.histogram("h").count == 1
+
+
+# ---------------------------------------------------------------- tracer
+class _FakeClock:
+    def __init__(self):
+        self.t = 100.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_tracer_sampling_cadence():
+    tr = RoundTracer(sample_every=4)
+    hits = [tr.sample_round() for _ in range(9)]
+    assert hits == [True, False, False, False, True,
+                    False, False, False, True]
+    assert tr.rounds_seen == 9 and tr.rounds_sampled == 3
+
+
+def test_tracer_would_sample_peeks_without_advancing():
+    tr = RoundTracer(sample_every=2)
+    assert tr.would_sample() and tr.would_sample()   # no state change
+    assert tr.rounds_seen == 0
+    assert tr.sample_round() is True
+    assert tr.would_sample() is False
+
+
+def test_tracer_spans_and_bound():
+    clk = _FakeClock()
+    tr = RoundTracer(clock=clk, max_spans=2)
+    with tr.span("stage", cat="host", rows=3):
+        clk.t += 0.5
+    tr.add("launch", 100.5, 100.6, cat="host")
+    tr.add("overflow", 0, 1)
+    assert [s.name for s in tr.spans] == ["stage", "launch"]
+    assert tr.spans[0].dur == pytest.approx(0.5)
+    assert tr.spans[0].args == {"rows": 3}
+    assert tr.dropped == 1
+    summ = tr.summary()
+    assert summ["spans"] == 2 and summ["dropped"] == 1
+    assert summ["by_name"]["stage"]["count"] == 1
+
+
+def test_tracer_chrome_export(tmp_path):
+    tr = RoundTracer(clock=_FakeClock())
+    tr.add("ingest", 1.0, 1.01, cat="frontend", events=4)
+    tr.add("stage", 1.01, 1.02, cat="host")
+    tr.add("drain", 1.02, 1.05, cat="device")
+    doc = tr.to_chrome()
+    xs = [e for e in doc["traceEvents"] if e["ph"] == "X"]
+    metas = [e for e in doc["traceEvents"] if e["ph"] == "M"]
+    assert [e["name"] for e in xs] == ["ingest", "stage", "drain"]
+    assert xs[0]["ts"] == pytest.approx(1.0e6)       # microseconds
+    assert xs[0]["dur"] == pytest.approx(0.01e6)
+    # categories land on distinct named tracks
+    assert len({e["tid"] for e in xs}) == 3
+    assert {m["args"]["name"] for m in metas} >= {"frontend", "host",
+                                                  "device"}
+    path = tmp_path / "trace.json"
+    tr.write_chrome(str(path))
+    assert json.loads(path.read_text())["traceEvents"]
+    jl = tmp_path / "trace.jsonl"
+    tr.write_jsonl(str(jl))
+    lines = [json.loads(ln) for ln in jl.read_text().splitlines()]
+    assert len(lines) == 3 and lines[0]["name"] == "ingest"
+    assert lines[0]["events"] == 4
+
+
+def test_span_as_dict():
+    s = Span("launch", "host", 2.0, 2.5, {"lanes": 2})
+    assert s.dur == pytest.approx(0.5)
+    assert s.as_dict() == {"name": "launch", "cat": "host", "t0": 2.0,
+                           "t1": 2.5, "dur": 0.5, "lanes": 2}
+
+
+# ------------------------------------------------------------------- slo
+def test_slo_burn_math():
+    slo = SLOTracker(target_ms=10.0, objective=0.9)
+    for _ in range(8):
+        slo.observe("t0", 0.005)            # within target
+    slo.observe("t0", 0.020, n=2)           # 2 violations
+    t = slo.tenant("t0")
+    assert t["events"] == 10 and t["violations"] == 2
+    assert t["error_rate"] == pytest.approx(0.2)
+    # 20% errors against a 10% budget: burning 2x
+    assert t["burn_rate"] == pytest.approx(2.0)
+    assert t["budget_remaining"] == 0.0
+    assert t["observed_p99_ms"] == pytest.approx(20.0, rel=0.08)
+
+
+def test_slo_zero_observation_tenant_is_full_dict():
+    slo = SLOTracker(target_ms=25.0, objective=0.99, source="event")
+    t = slo.tenant("never-seen")
+    assert t["events"] == 0 and t["violations"] == 0
+    assert t["burn_rate"] == 0.0 and t["budget_remaining"] == 1.0
+    assert t["observed_p99_ms"] is None
+    assert t["source"] == "event"
+    assert "never-seen" not in slo.snapshot()   # snapshot = observed only
+
+
+def test_slo_validation():
+    with pytest.raises(ValueError):
+        SLOTracker(target_ms=0.0)
+    with pytest.raises(ValueError):
+        SLOTracker(target_ms=5.0, objective=1.0)

@@ -817,3 +817,57 @@ def test_sampler_spec_round_trips():
     for dup in ("sat+lut+recent+uniform", "sat+lut+uniform+recent"):
         with pytest.raises(ValueError, match="duplicate sampler"):
             pl.resolve_variant(dup)
+
+
+# ---------------------------------------------------------------------------
+# observability: registry-backed compile counters under live admission
+# ---------------------------------------------------------------------------
+
+
+def test_reserve_mode_compile_counters_frozen_across_admission(small_graph):
+    """The registry-backed compile counters are FROZEN across reserve-mode
+    attach-detach-attach cycles that land in spare lane slots (serving
+    rounds between each mutation), and a forced relayout — exhausting the
+    capacity class — increments ``relayouts`` exactly once."""
+    g = small_graph
+    dims = _dims(g, f=8)
+    cfg = pl.variant_config("sat+lut+np4", **dims)
+    params = tgn.init_params(jax.random.key(21), cfg)
+    ef = jnp.asarray(g.edge_feats)
+    mgr = SessionManager(params, ef, model=cfg, use_kernels=False,
+                         reserve=True)
+    tids = [mgr.add_tenant(name=f"t{i}") for i in range(3)]
+    feeds = list(_tenant_stream(g, 0, batch=20, rounds=10))
+
+    def step(r):
+        mgr.step({t: feeds[r] for t in mgr.tenants})
+
+    step(0)
+    step(1)
+    c0 = mgr.compile_counters()
+    assert c0["round_traces"] == 1         # one compiled round, reused
+    assert c0["relayouts"] == mgr.relayouts  # registry mirrors the legacy
+
+    # attach -> step -> detach -> step -> attach -> step: all spare-slot
+    # fast paths (3 tenants in a capacity-4 class), counters pinned
+    extra = mgr.add_tenant(name="late")
+    step(2)
+    mgr.remove_tenant(extra)
+    step(3)
+    extra = mgr.add_tenant(name="later")
+    step(4)
+    c1 = mgr.compile_counters()
+    assert c1["relayouts"] == c0["relayouts"]
+    assert c1["round_traces"] == c0["round_traces"]
+    assert {m["launches"] for m in mgr.metrics} == {1}
+
+    # force a relayout: a 5th resident tenant exhausts the class of 4
+    mgr.add_tenant(name="overflow")
+    assert mgr._coalesced is None          # layout invalidated...
+    step(5)
+    step(6)
+    c2 = mgr.compile_counters()
+    assert c2["relayouts"] == c1["relayouts"] + 1   # ...rebuilt ONCE
+    assert c2["round_traces"] == 1         # fresh launch, one trace
+    assert mgr.relayouts == c2["relayouts"]
+    assert len(tids) + 2 == len(mgr.tenants)

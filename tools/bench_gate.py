@@ -1,0 +1,133 @@
+"""Throughput regression gate (``make bench-gate``).
+
+Runs the three load-bearing benchmark sweeps at toy scale — the
+coalesced-vs-per-cohort multitenant round, the fused-vs-staged step, and
+the fig5 engine throughput — and compares their edges/s against the
+committed baseline (``results/bench_gate.json``). A metric more than
+``TOLERANCE`` below its baseline fails the gate: the serving-path
+refactors this repo keeps stacking must not quietly give back the
+dispatch-cost wins the paper's co-design is about.
+
+The baseline is a best-of-``REPEATS`` measurement on the committing
+host, and the gate also takes the best of ``REPEATS`` — so the
+comparison tracks the machine's ceiling, not its background-load noise.
+``TOLERANCE`` is wide (25%) for the same reason: this catches
+regressions of the "accidentally re-enabled per-tenant dispatch" order,
+not single-digit drift. Regenerate the baseline after an INTENDED
+performance change:
+
+    PYTHONPATH=src python tools/bench_gate.py --update
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BASELINE = os.path.join(ROOT, "results", "bench_gate.json")
+
+#: fail when current < baseline * (1 - TOLERANCE)
+TOLERANCE = 0.25
+#: best-of-N runs per case (both for --update and for the gate)
+REPEATS = 2
+
+
+def _case_multitenant() -> dict:
+    from benchmarks.multitenant import coalesced_sweep
+    row = coalesced_sweep(tenant_counts=(3,), cohort_counts=(3,),
+                          batch=16, rounds=4, n_edges=600, f_mem=16)[0]
+    return {"coalesced_eps": float(row["coalesced_eps"]),
+            "per_cohort_eps": float(row["per_cohort_eps"])}
+
+
+def _case_fused_step() -> dict:
+    from benchmarks.fused_step import sweep
+    row = sweep(batch_sizes=(16,), rounds=4, n_edges=600, f_mem=16)[0]
+    return {"staged_eps": float(row["staged_eps"]),
+            "fused_eps": float(row["fused_eps"])}
+
+
+def _case_fig5() -> dict:
+    from benchmarks.fig5_latency_throughput import sweep
+    rows = sweep(batch_sizes=(25,), n_edges=600, f_mem=16)
+    return {f"{r['model']}_eps": float(r["throughput_eps"]) for r in rows}
+
+
+CASES = {
+    "multitenant": _case_multitenant,
+    "fused_step": _case_fused_step,
+    "fig5": _case_fig5,
+}
+
+
+def measure() -> dict:
+    """Best-of-REPEATS edges/s for every gated metric, flattened to
+    ``case.metric`` keys."""
+    best: dict = {}
+    for name, fn in CASES.items():
+        for i in range(REPEATS):
+            print(f"bench gate: {name} run {i + 1}/{REPEATS} ...",
+                  flush=True)
+            for k, v in fn().items():
+                key = f"{name}.{k}"
+                best[key] = max(best.get(key, 0.0), v)
+    return best
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--update", action="store_true",
+                    help="re-measure and overwrite the committed baseline")
+    args = ap.parse_args(argv)
+
+    if not args.update and not os.path.exists(BASELINE):
+        print(f"bench gate: no baseline at {BASELINE}; "
+              "run with --update first")
+        return 1
+
+    current = measure()
+    if args.update:
+        os.makedirs(os.path.dirname(BASELINE), exist_ok=True)
+        with open(BASELINE, "w") as f:
+            json.dump({"tolerance": TOLERANCE, "repeats": REPEATS,
+                       "metrics": current}, f, indent=2, sort_keys=True)
+        print(f"bench gate: baseline written -> {BASELINE}")
+        for k, v in sorted(current.items()):
+            print(f"  {k:<40}{v:>12.0f} E/s")
+        return 0
+
+    with open(BASELINE) as f:
+        base = json.load(f)["metrics"]
+    failures = []
+    print(f"{'metric':<40}{'baseline':>12}{'current':>12}{'ratio':>8}")
+    for k in sorted(base):
+        b, c = base[k], current.get(k)
+        if c is None:
+            failures.append(f"{k}: metric disappeared from the sweep")
+            continue
+        ratio = c / b if b else 1.0
+        flag = "" if ratio >= 1.0 - TOLERANCE else "  << FAIL"
+        print(f"{k:<40}{b:>12.0f}{c:>12.0f}{ratio:>8.2f}{flag}")
+        if ratio < 1.0 - TOLERANCE:
+            failures.append(f"{k}: {c:.0f} E/s is {1 - ratio:.0%} below "
+                            f"baseline {b:.0f} (tolerance {TOLERANCE:.0%})")
+    for k in sorted(set(current) - set(base)):
+        print(f"{k:<40}{'(new)':>12}{current[k]:>12.0f}")
+    if failures:
+        print("bench gate: FAIL")
+        for msg in failures:
+            print(f"  {msg}")
+        print("  (intended change? refresh with: "
+              "PYTHONPATH=src python tools/bench_gate.py --update)")
+        return 1
+    print(f"bench gate: OK ({len(base)} metrics within "
+          f"{TOLERANCE:.0%} of baseline)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.path.insert(0, os.path.join(ROOT, "src"))
+    sys.path.insert(0, ROOT)
+    sys.exit(main())

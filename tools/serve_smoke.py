@@ -14,13 +14,23 @@ invariants:
   metrics, ``round_calls`` == rounds);
 - no event was rejected or silently dropped.
 
+The run also serves with the OBSERVABILITY layer armed — a 1/8-sampled
+``RoundTracer`` on the same fake clock plus a per-event SLO — and
+asserts it changes nothing about those invariants while delivering the
+goods: the exported Chrome trace carries distinct
+ingest/flush/stage/launch/h2d/drain spans on sampled rounds only, and
+``summary()["per_tenant"]`` reports SLO burn for every tenant.
+
 A fake clock drives the deadline batcher so the smoke is deterministic;
 ``pad_quantum`` keeps every flushed width identical, which is exactly the
 production recipe for a stable compiled executable.
 """
 from __future__ import annotations
 
+import json
+import os
 import sys
+import tempfile
 
 import jax
 import jax.numpy as jnp
@@ -29,6 +39,7 @@ import jax.numpy as jnp
 def main() -> int:
     from repro.core import pipeline as pl, tgn
     from repro.data import temporal_graph as tgd
+    from repro.obs import RoundTracer
     from repro.serving.frontend import FrontendConfig, ServingFrontend
     from repro.serving.session import SessionManager
 
@@ -45,10 +56,11 @@ def main() -> int:
     t2 = mgr.add_tenant("sat+lut+np4+reservoir")
 
     clock = [0.0]
+    tracer = RoundTracer(clock=lambda: clock[0], sample_every=8)
     fe = ServingFrontend(
         mgr, FrontendConfig(max_wait_s=0.005, max_rows=8, queue_rows=256,
                             pad_quantum=8),
-        clock=lambda: clock[0])
+        clock=lambda: clock[0], tracer=tracer, slo_ms=25.0)
 
     def feed(tids, i0, rounds):
         nonlocal edges
@@ -88,14 +100,44 @@ def main() -> int:
           and stats["rejected"] == 0
           and fe.orphaned == 0
           and stats["accepted"] == edges)
+
+    # observability acceptance: sampled spans + trace export + SLO burn
+    span_names = {s.name for s in tracer.spans}
+    want_spans = {"ingest", "flush", "stage", "launch", "h2d", "drain"}
+    fd, trace_path = tempfile.mkstemp(suffix=".json", prefix="smoke-trace-")
+    os.close(fd)
+    try:
+        tracer.write_chrome(trace_path)
+        with open(trace_path) as f:
+            doc = json.load(f)
+        exported = {e["name"] for e in doc["traceEvents"]
+                    if e.get("ph") == "X"}
+    finally:
+        os.unlink(trace_path)
+    per_tenant = mgr.summary()["per_tenant"]
+    slo_ok = (set(per_tenant) == set(mgr.tenants)
+              and all("slo" in st and st["slo"]["events"] > 0
+                      and 0.0 <= st["slo"]["budget_remaining"] <= 1.0
+                      for st in per_tenant.values()))
+    obs_ok = (0 < tracer.rounds_sampled < tracer.rounds_seen
+              and want_spans <= span_names
+              and want_spans <= exported
+              and tracer.dropped == 0
+              and slo_ok)
+
     print(f"serve-smoke: {edges} edges, {rounds} rounds, "
           f"{len(mgr.tenants)} tenants / {len(mgr._cohorts)} cohorts, "
           f"live attach+detach, counters {c1}, "
           f"launches-per-round {sorted(launches)} -> "
           f"{'OK' if ok else 'FAIL'}")
-    if not ok:
-        print(f"serve-smoke: c0={c0} stats={stats}", file=sys.stderr)
-    return 0 if ok else 1
+    print(f"serve-smoke: obs {tracer.rounds_sampled}/{tracer.rounds_seen} "
+          f"rounds sampled, spans {sorted(span_names)}, SLO burn for "
+          f"{len(per_tenant)} tenants -> {'OK' if obs_ok else 'FAIL'}")
+    if not (ok and obs_ok):
+        print(f"serve-smoke: c0={c0} stats={stats} "
+              f"exported={sorted(exported)} per_tenant={per_tenant}",
+              file=sys.stderr)
+    return 0 if ok and obs_ok else 1
 
 
 if __name__ == "__main__":

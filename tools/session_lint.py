@@ -27,6 +27,17 @@ silent — everything still computes the right numbers, just slower):
    metadata); and ``kernels/fused_step.py`` itself must stay concat-free
    (the kernel computes split matmuls).
 
+3. The round hot path must stay ASYNC: no unconditional
+   ``block_until_ready`` (a device fence serializes the pipelined
+   launches) and no stray ``time.perf_counter`` timing (each one is a
+   host sync point temptation) outside the SAMPLED-trace gate. The
+   observability layer (src/repro/obs) fences only on rounds the
+   ``RoundTracer`` samples, inside an ``if trace ...:`` / ``if ...
+   sampled ...:`` conditional — this rule pins that shape, so span
+   accuracy can never quietly become an every-round drain.
+   (``SessionManager.step`` keeps its by-design round-wall
+   ``perf_counter`` pair — only its fences are guarded.)
+
 Exits non-zero listing every violation; also fails if a guarded function
 disappears (a rename must update this guard, not silently skip it).
 """
@@ -65,6 +76,27 @@ GUARDED = {
     os.path.join("src", "repro", "kernels", "fused_step.py"): (
         ("*", "_fused_kernel", FUSING, False),
         ("*", "fused_step_pallas", FUSING, False),
+    ),
+}
+
+#: names whose call is a host sync point / timing probe (rule 3).
+FENCES = {"block_until_ready", "perf_counter"}
+
+#: file -> ((scope, function, banned fence names), ...). Same scope
+#: conventions as GUARDED. ``_HostStager.stage``'s transfer wait and
+#: ``SessionManager.sync()`` are exempt by design (staging IS the
+#: transfer; sync is the explicit drain the callers opt into).
+FENCE_GUARDED = {
+    os.path.join("src", "repro", "serving", "session.py"): (
+        # step()'s round-wall perf_counter pair is the metrics contract;
+        # only fences are banned there
+        ("SessionManager", "step", {"block_until_ready"}),
+        ("SessionManager", "_coalesced_round", FENCES),
+        ("SessionManager", "_percohort_round", FENCES),
+    ),
+    os.path.join("src", "repro", "core", "pipeline.py"): (
+        ("CoalescedRound", "__call__", FENCES),
+        ("*", "round_fn", FENCES),
     ),
 }
 
@@ -110,6 +142,41 @@ def _violations(fn: ast.FunctionDef, banned: set, gathers: bool) -> list:
     return out
 
 
+def _is_trace_gate(test: ast.expr) -> bool:
+    """True when an ``if`` test references the sampled-trace gate — any
+    name/attribute containing "trace" or "sampled" (``if trace is not
+    None:``, ``if self.tracer.would_sample():``, ...)."""
+    for n in ast.walk(test):
+        ident = (n.id if isinstance(n, ast.Name)
+                 else n.attr if isinstance(n, ast.Attribute) else "")
+        if "trace" in ident or "sampled" in ident:
+            return True
+    return False
+
+
+def _fence_violations(fn: ast.FunctionDef, banned: set) -> list:
+    """Fence/timing calls reachable UNCONDITIONALLY (i.e. outside every
+    sampled-trace-gated ``if`` body) inside ``fn``."""
+    out = []
+
+    def visit(node, gated):
+        for sub in ast.iter_child_nodes(node):
+            if isinstance(sub, ast.If) and _is_trace_gate(sub.test):
+                for b in sub.body:
+                    visit(b, True)
+                for b in sub.orelse:
+                    visit(b, gated)
+                continue
+            ident = (sub.attr if isinstance(sub, ast.Attribute)
+                     else sub.id if isinstance(sub, ast.Name) else None)
+            if not gated and ident in banned:
+                out.append((sub.lineno, ident))
+            visit(sub, gated)
+
+    visit(fn, False)
+    return out
+
+
 def check_file(relpath: str, guards) -> tuple[int, list]:
     with open(os.path.join(REPO, relpath)) as f:
         tree = ast.parse(f.read(), relpath)
@@ -138,10 +205,39 @@ def check_file(relpath: str, guards) -> tuple[int, list]:
     return checked, errors
 
 
+def check_fences(relpath: str, guards) -> tuple[int, list]:
+    with open(os.path.join(REPO, relpath)) as f:
+        tree = ast.parse(f.read(), relpath)
+    functions = _functions(tree)
+    errors, checked = [], 0
+    base = os.path.basename(relpath)
+    for scope, name, banned in guards:
+        fn = functions.get((scope, name))
+        qual = ".".join(p for p in (None if scope == "*" else scope, name)
+                        if p)
+        if fn is None:
+            errors.append(f"guarded function {qual} not found in {base} — "
+                          "update tools/session_lint.py alongside the "
+                          "rename")
+            continue
+        checked += 1
+        for lineno, what in _fence_violations(fn, banned):
+            errors.append(
+                f"{base}:{lineno}: unconditional {what} in {qual} — the "
+                "round hot path only fences/times inside the sampled-"
+                "trace gate (if trace ...:); an every-round sync "
+                "serializes the async pipeline")
+    return checked, errors
+
+
 def main() -> int:
     errors, checked = [], 0
     for relpath, guards in GUARDED.items():
         c, errs = check_file(relpath, guards)
+        checked += c
+        errors.extend(errs)
+    for relpath, guards in FENCE_GUARDED.items():
+        c, errs = check_fences(relpath, guards)
         checked += c
         errors.extend(errs)
     for e in errors:
