@@ -15,6 +15,11 @@
 #                     hundred deadline-batched edges, a live mid-stream
 #                     tenant attach+detach — asserts ZERO recompiles of
 #                     the coalesced round (tools/serve_smoke.py)
+#   make chaos-smoke  fault-injection smoke: a deterministic fault plan
+#                     (NaN state, snapshot IO, kernel fail, stall) against
+#                     a guarded 3-cohort fleet — quarantine + auto-restore
+#                     + tier degradation, survivors BITWISE
+#                     (tools/chaos_smoke.py; docs/ROBUSTNESS.md)
 #   make session-lint the serving round path stages through the in-place
 #                     _HostStager ring buffers (no jnp.pad/jnp.stack/...
 #                     per-tenant staging regressions) AND the fused step
@@ -32,13 +37,14 @@
 #                     (falls back to a bytecode-compile check when
 #                      pyflakes is not installed; see requirements-dev.txt)
 #                     + docs-check + session-lint + serve-smoke +
-#                     test-sharded + test-kernels + coverage + bench-gate
+#                     chaos-smoke + test-sharded + test-kernels +
+#                     coverage + bench-gate
 
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test test-sharded test-kernels bench-smoke serve-smoke lint \
-	docs-check session-lint coverage bench-gate
+.PHONY: test test-sharded test-kernels bench-smoke serve-smoke \
+	chaos-smoke lint docs-check session-lint coverage bench-gate
 
 test:
 	$(PY) -m pytest -x -q
@@ -66,6 +72,9 @@ bench-smoke:
 serve-smoke:
 	$(PY) tools/serve_smoke.py
 
+chaos-smoke:
+	$(PY) tools/chaos_smoke.py
+
 docs-check:
 	$(PY) tools/docs_check.py
 
@@ -78,8 +87,8 @@ coverage:
 bench-gate:
 	$(PY) tools/bench_gate.py
 
-lint: docs-check session-lint serve-smoke test-sharded test-kernels \
-		coverage bench-gate
+lint: docs-check session-lint serve-smoke chaos-smoke test-sharded \
+		test-kernels coverage bench-gate
 	@if $(PY) -c "import pyflakes" 2>/dev/null; then \
 	    $(PY) -m pyflakes src benchmarks examples tests/*.py; \
 	else \

@@ -28,6 +28,7 @@ import json
 import os
 import shutil
 import threading
+import warnings
 import zlib
 from typing import Any
 
@@ -136,13 +137,51 @@ def _gc(root: str, keep: int, protect: str | None = None) -> None:
             shutil.rmtree(os.path.join(root, d))
 
 
-def latest_step(root: str) -> int | None:
+def list_steps(root: str) -> list:
+    """Every committed step under ``root`` (ascending; tmp dirs and
+    manifest-less directories excluded — they are not restorable)."""
     if not os.path.isdir(root):
-        return None
-    steps = [int(d.split("_")[1]) for d in os.listdir(root)
-             if d.startswith("step_") and not d.endswith(".tmp")
-             and os.path.exists(os.path.join(root, d, _MANIFEST))]
-    return max(steps) if steps else None
+        return []
+    return sorted(int(d.split("_")[1]) for d in os.listdir(root)
+                  if d.startswith("step_") and not d.endswith(".tmp")
+                  and os.path.exists(os.path.join(root, d, _MANIFEST)))
+
+
+def latest_step(root: str) -> int | None:
+    steps = list_steps(root)
+    return steps[-1] if steps else None
+
+
+#: exceptions that mean "this step is corrupt, an older one may not be":
+#: unreadable/truncated files, crc mismatch (IOError ⊂ OSError), mangled
+#: manifest JSON, missing leaves, shape drift from a half-written array.
+CORRUPTION_ERRORS = (OSError, json.JSONDecodeError, KeyError, ValueError)
+
+
+def restore_valid(root: str, tree_like: PyTree, *,
+                  shardings: PyTree | None = None) -> tuple:
+    """``restore`` with corrupt-latest fallback: walk the committed steps
+    newest -> oldest, skipping (with a warning) any whose manifest or
+    payload fails to load/verify, and return the newest VALID one as
+    ``(tree, meta, step)``. Raises ``FileNotFoundError`` when no step
+    exists and re-raises the newest step's error when every step is
+    corrupt — a fallback never invents a restorable state."""
+    steps = list_steps(root)
+    if not steps:
+        raise FileNotFoundError(f"no checkpoint under {root}")
+    first_err = None
+    for step in reversed(steps):
+        try:
+            tree, meta = restore(root, tree_like, step=step,
+                                 shardings=shardings)
+            return tree, meta, step
+        except CORRUPTION_ERRORS as e:
+            if first_err is None:
+                first_err = e
+            warnings.warn(
+                f"checkpoint {root} step {step} is corrupt ({e}); "
+                "falling back to the newest prior valid step")
+    raise first_err
 
 
 def restore(root: str, tree_like: PyTree, *, step: int | None = None,

@@ -101,8 +101,13 @@ class _SnapshotHooks:
 
     def save(self, rounds):
         # periodic cadence: overlap snapshot IO with the serving rounds
-        # (bounded: one in-flight write per tenant, stragglers skipped)
+        # (bounded: one in-flight write per tenant, stragglers skipped).
+        # Quarantined tenants are excluded — their state is suspect, and
+        # persisting it would poison the very snapshot the guard's
+        # auto-restore falls back to.
         for tid in self.mgr.tenants:
+            if self.mgr.is_quarantined(tid):
+                continue
             self.writer.submit(self.mgr, tid,
                                step=self.base_step.get(tid, 0) + rounds)
 
@@ -187,6 +192,20 @@ def _ensure_param_sets(mgr, variants, pnames) -> None:
               f"(digest {mgr.param_store.digest(pname)}, seed {seed})")
 
 
+def _make_guard(mgr, args, writer=None):
+    """--guard: arm the FleetGuard supervisor (serving/guard.py) — NaN
+    sentinel + SLO-burn quarantine, snapshot auto-restore with capped
+    backoff and a --max-restores eviction ceiling, kernel-tier
+    degradation on classified launch failures. Returns the guard (or
+    None); once constructed, every round routes through it."""
+    if not args.guard:
+        return None
+    from repro.serving.guard import FleetGuard
+    return FleetGuard(mgr, snapshot_root=args.snapshot_dir, writer=writer,
+                      max_restores=args.max_restores,
+                      quarantine_slo_burn=args.quarantine_slo_burn)
+
+
 def _make_tracer(args):
     """--trace-out: build the sampled round tracer (obs/trace.py)."""
     if not args.trace_out:
@@ -245,6 +264,7 @@ def run_frontend(args):
     fe = ServingFrontend(mgr, fcfg, tracer=tracer,
                          slo_ms=args.slo_ms or None,
                          slo_objective=args.slo_objective)
+    guard = _make_guard(mgr, args)
     host, _, port = args.listen.partition(":")
 
     async def serve():
@@ -283,6 +303,8 @@ def run_frontend(args):
     print("frontend stats:", fe.stats())
     if args.slo_ms:
         print("slo:", {tid: mgr.slo.tenant(tid) for tid in mgr.tenants})
+    if guard is not None:
+        print("guard:", guard.snapshot())
     _export_trace(tracer, args)
 
 
@@ -295,13 +317,14 @@ def run_tgn(args):
 
     tenant_variants = _tenant_variants(args)
     if args.tenant_variants or args.tenants > 1 or args.mesh is not None \
-            or args.snapshot_dir or args.slo_ms or args.trace_out:
+            or args.snapshot_dir or args.slo_ms or args.trace_out \
+            or args.guard:
         # multi-tenant: split the stream into one contiguous feed per
         # tenant; same-variant tenants share one vmapped launch per round.
         # (--snapshot-dir forces this path too: snapshots are a session
         # feature, and a 1-tenant session serves bitwise like the engine.
-        # Likewise --slo-ms/--trace-out: SLO burn and round tracing live
-        # on the session.)
+        # Likewise --slo-ms/--trace-out/--guard: SLO burn, round tracing
+        # and the FleetGuard supervisor live on the session.)
         coalesce = not args.per_cohort
         if args.mesh is not None:
             from repro.serving.cluster import ShardedSessionManager
@@ -318,6 +341,8 @@ def run_tgn(args):
             mgr.set_slo(args.slo_ms, args.slo_objective)
         snapshots = (_SnapshotHooks(mgr, args) if args.snapshot_dir
                      else None)
+        guard = _make_guard(mgr, args,
+                            writer=snapshots.writer if snapshots else None)
         pnames = _tenant_params(args, len(tenant_variants))
         _ensure_param_sets(mgr, tenant_variants, pnames)
         tids = []
@@ -359,6 +384,8 @@ def run_tgn(args):
                      for t in sorted(mgr.tenants)}
             print(f"snapshots: {steps} -> {args.snapshot_dir}")
         print("session summary:", mgr.summary())
+        if guard is not None:
+            print("guard:", guard.snapshot())
         _export_trace(tracer, args)
         return
 
@@ -487,6 +514,19 @@ def main():
                     help="trace 1 in N rounds (sampled rounds add device "
                          "fences for span accuracy, so keep this >1 to "
                          "preserve async pipelining on the rest)")
+    ap.add_argument("--guard", action="store_true",
+                    help="arm the FleetGuard supervisor: per-round finite-"
+                         "state health checks, tenant quarantine with auto-"
+                         "restore (from --snapshot-dir when set), and "
+                         "kernel-tier degradation on launch failure (see "
+                         "docs/ROBUSTNESS.md)")
+    ap.add_argument("--max-restores", type=int, default=3,
+                    help="evict a quarantined tenant after this many failed "
+                         "restore attempts (requires --guard)")
+    ap.add_argument("--quarantine-slo-burn", type=float, default=0.0,
+                    help="quarantine a tenant whose SLO burn rate exceeds "
+                         "this threshold (requires --guard and --slo-ms; "
+                         "0 disables the SLO trigger)")
     ap.add_argument("--batch", type=int, default=200)
     ap.add_argument("--window-s", type=float, default=0.0)
     ap.add_argument("--arch", default="qwen3_8b")
@@ -511,6 +551,14 @@ def main():
         ap.error("--trace-every must be >= 1")
     if args.metrics_every < 0:
         ap.error("--metrics-every must be >= 0")
+    if args.guard and args.mode != "tgn":
+        ap.error("--guard is a --mode tgn feature")
+    if args.max_restores < 1:
+        ap.error("--max-restores must be >= 1")
+    if args.quarantine_slo_burn < 0:
+        ap.error("--quarantine-slo-burn must be >= 0")
+    if args.quarantine_slo_burn and not args.slo_ms:
+        ap.error("--quarantine-slo-burn needs --slo-ms")
     if args.listen is not None:
         run_frontend(args)
     else:

@@ -62,6 +62,16 @@ class SLOTracker:
         if latency_s > self.target_s:
             d["violations"] += n
 
+    def violation(self, tid: str, n: int = 1) -> None:
+        """Record ``n`` outright violations WITHOUT a latency sample — an
+        outage observation (e.g. the guard charging each round a tenant
+        sits quarantined), where "how late" is unbounded/meaningless but
+        the error budget must still burn. Counts into ``events`` too, so
+        ``error_rate`` stays violations/events over everything observed."""
+        d = self._slot(tid)
+        d["events"] += n
+        d["violations"] += n
+
     def tenant(self, tid: str) -> dict:
         """The tenant's SLO view (a full dict even before any
         observation — see module docstring)."""

@@ -42,6 +42,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -228,12 +229,30 @@ class TenantSnapshotWriter:
     best-effort, durability comes from the final ``wait()`` + sync save
     at exit. The on-disk format and the tmp-dir + rename + crc32 commit
     of ``distributed/checkpoint.py`` are unchanged.
+
+    A failed write attempt is RETRIED on the worker thread with capped
+    exponential backoff (``retries`` attempts beyond the first,
+    ``backoff_s`` doubling up to ``backoff_cap_s``) before it counts as
+    a failure — transient IO errors never cost a snapshot cadence.
+    Retries and exhausted failures land in the fleet metrics registry
+    (``snapshot.retries`` / ``snapshot.failures``) when ``obs`` is given;
+    exhausted failures still surface at the next ``submit``/``wait``.
+    When the manager has an armed fault injector, each write attempt
+    runs its ``on_snapshot_write`` hook (docs/ROBUSTNESS.md).
     """
 
-    def __init__(self, root: str, *, keep: int = 3, max_workers: int = 2):
+    def __init__(self, root: str, *, keep: int = 3, max_workers: int = 2,
+                 retries: int = 2, backoff_s: float = 0.05,
+                 backoff_cap_s: float = 1.0, obs=None, sleep=None):
+        import time
         from concurrent.futures import ThreadPoolExecutor
         self.root = root
         self.keep = keep
+        self.retries = int(retries)
+        self.backoff_s = float(backoff_s)
+        self.backoff_cap_s = float(backoff_cap_s)
+        self.obs = obs                  # MetricsRegistry or None
+        self._sleep = sleep if sleep is not None else time.sleep
         self.skipped = 0
         self.written = 0
         self._pool = ThreadPoolExecutor(max_workers=max_workers)
@@ -242,22 +261,53 @@ class TenantSnapshotWriter:
     def submit(self, mgr: SessionManager, tid: str, *, step: int = 0,
                extra_meta: dict | None = None) -> bool:
         """Queue a snapshot of ``tid`` at ``step``; returns False when the
-        tenant's previous snapshot is still in flight (skipped)."""
+        tenant's previous snapshot is still in flight (skipped). A
+        previous write that FAILED (retries exhausted) re-raises here —
+        with its slot cleared first, so the tenant's cadence resumes on
+        the next submit instead of re-raising forever."""
         prev = self._inflight.get(tid)
         if prev is not None:
             if not prev.done():
                 self.skipped += 1
                 return False
-            prev.result()                # surface a failed write loudly
+            try:
+                prev.result()            # surface a failed write loudly
+            except Exception:
+                del self._inflight[tid]
+                raise
         tree, meta = _capture_tenant(mgr, tid, extra_meta)
+        faults = getattr(mgr, "_faults", None)
 
         def work():
-            return ckpt.save(os.path.join(self.root, tid), step, tree,
-                             meta=meta, keep=self.keep)
+            delay = self.backoff_s
+            for attempt in range(self.retries + 1):
+                try:
+                    if faults is not None:
+                        faults.on_snapshot_write(tid)
+                    return ckpt.save(os.path.join(self.root, tid), step,
+                                     tree, meta=meta, keep=self.keep)
+                except Exception:
+                    if attempt >= self.retries:
+                        if self.obs is not None:
+                            self.obs.counter("snapshot.failures").inc()
+                        raise
+                    if self.obs is not None:
+                        self.obs.counter("snapshot.retries").inc()
+                    self._sleep(min(delay, self.backoff_cap_s))
+                    delay *= 2
 
         self._inflight[tid] = self._pool.submit(work)
         self.written += 1
         return True
+
+    def join(self, tid: str) -> None:
+        """Block until ``tid``'s in-flight write (if any) lands, clearing
+        its slot; re-raises its failure. The guard calls this before an
+        auto-restore so the newest snapshot is fully committed (or known
+        failed) before the fallback walk picks a step."""
+        fut = self._inflight.pop(tid, None)
+        if fut is not None:
+            fut.result()
 
     def wait(self) -> None:
         """Join EVERY in-flight write, then re-raise the first failure —
@@ -325,9 +375,15 @@ def restore_tenant(mgr: SessionManager, root: str, tid: str, *,
     weights. Pass ``params=<name>`` to REBIND explicitly onto another
     registered set instead (an A/B promotion: the caller owns the
     numerics break, so the digest check is skipped).
+
+    Corrupt-latest fallback (``step=None`` only): a newest step whose
+    manifest or payload fails to load/verify is skipped with a warning
+    and the restore falls back to the newest PRIOR valid step
+    (``checkpoint.restore_valid``) — a torn background write never
+    strands a restorable tenant. An explicit ``step=`` stays strict.
     """
     d = os.path.join(root, tid)
-    meta = snapshot_meta(root, tid, step=step)
+    meta = _meta_with_fallback(root, tid, step)
     want = meta["config"]
     pname = params if params is not None else meta.get("param_set",
                                                        DEFAULT_PARAMS)
@@ -368,9 +424,77 @@ def restore_tenant(mgr: SessionManager, root: str, tid: str, *,
                 "different weights; register the original parameters, or "
                 "pass params= to rebind explicitly")
     tree_like = cohort.pipeline.init_state()._asdict()
-    state, _ = ckpt.restore(d, tree_like, step=step)
+    if step is None:
+        state, _meta, _used = ckpt.restore_valid(d, tree_like)
+    else:
+        state, _meta = ckpt.restore(d, tree_like, step=step)
     mgr.set_state(new, mailbox.VertexState(**state))
     return new
+
+
+def _meta_with_fallback(root: str, tid: str, step: int | None) -> dict:
+    """Manifest meta for a restore: the requested step's, or (when
+    ``step`` is None) the newest step whose manifest PARSES — a corrupt
+    manifest is skipped with a warning, mirroring the payload-side walk
+    of ``checkpoint.restore_valid``."""
+    if step is not None:
+        return snapshot_meta(root, tid, step=step)
+    d = os.path.join(root, tid)
+    steps = ckpt.list_steps(d)
+    for s in reversed(steps):
+        try:
+            return snapshot_meta(root, tid, step=s)
+        except ckpt.CORRUPTION_ERRORS as e:
+            warnings.warn(
+                f"snapshot manifest for tenant {tid!r} step {s} is "
+                f"corrupt ({e}); falling back to the newest prior step")
+    raise FileNotFoundError(f"no restorable snapshot for tenant {tid!r} "
+                            f"under {root}")
+
+
+def restore_tenant_state(mgr: SessionManager, root: str, tid: str, *,
+                         step: int | None = None) -> int:
+    """Reload a RESIDENT tenant's VertexState in place from its newest
+    valid snapshot — the guard's auto-restore path (serving/guard.py).
+
+    Unlike ``restore_tenant`` (which ADMITS a new tenant), the tenant is
+    already attached and keeps its lane slot: only its state rows are
+    replaced. The snapshot must fit the lane it reloads into — the
+    recorded TGNConfig must equal the cohort's, and the recorded
+    ``params_digest`` must match the lane's resident set (the lane's
+    kernel TIER may differ: a guard-degraded lane restores the same
+    numerics on a lower tier). With ``step=None`` corrupt steps are
+    skipped with a warning (``checkpoint.restore_valid``). Returns the
+    step restored from.
+    """
+    cohort = mgr.cohort_of(tid)
+    d = os.path.join(root, tid)
+    tree_like = cohort.pipeline.init_state()._asdict()
+    if step is None:
+        state, meta, used = ckpt.restore_valid(d, tree_like)
+    else:
+        state, meta = ckpt.restore(d, tree_like, step=step)
+        used = step
+    want = meta.get("config")
+    if want is not None and want != dataclasses.asdict(cohort.cfg):
+        diff = sorted(k for k in set(want)
+                      if want.get(k) != dataclasses.asdict(
+                          cohort.cfg).get(k))
+        raise ValueError(
+            f"snapshot {tid!r} step {used} was taken with config fields "
+            f"{ {k: want.get(k) for k in diff} } but the tenant's lane "
+            "resolves differently — an in-place restore must land in the "
+            "SAME lane config")
+    digest = meta.get("params_digest")
+    if digest is not None and digest != mgr.param_store.digest(
+            cohort.param_set):
+        raise ValueError(
+            f"snapshot {tid!r} step {used} records params digest "
+            f"{digest} but the lane's {cohort.param_set!r} set digests "
+            f"{mgr.param_store.digest(cohort.param_set)} — the "
+            "trajectory would resume under different weights")
+    mgr.set_state(tid, mailbox.VertexState(**state))
+    return used
 
 
 def migrate_tenant(src: SessionManager, tid: str, dst: SessionManager,

@@ -39,6 +39,7 @@ from __future__ import annotations
 
 import asyncio
 import json
+import math
 import time
 from collections import deque
 from dataclasses import dataclass
@@ -49,19 +50,28 @@ from repro.data.stream import EdgeBatch
 
 
 class RetryAfter(Exception):
-    """Backpressure: the tenant's ingest queue is full.
+    """A TRANSIENT ingest rejection: retry later, nothing is wrong with
+    the request itself.
 
-    Carries the suggested retry delay; the transport maps it to a
-    structured ``{"ok": false, "error": "retry_after", ...}`` response
-    (HTTP would say 429) instead of growing the queue without bound.
+    Two sources: the tenant's bounded queue is full (``reason=
+    "queue_full"`` — classic backpressure), or the tenant is quarantined
+    by the FleetGuard and its auto-restore is pending (``reason=
+    "quarantined"``). Carries the suggested retry delay; the transport
+    maps it to a structured ``{"ok": false, "error": "retry_after",
+    "transient": true, ...}`` response (HTTP would say 429/503) instead
+    of growing the queue without bound. Permanent rejections —
+    malformed events, unknown tenants — are ``invalid_request`` /
+    ``unknown_tenant`` with ``"transient": false`` instead.
     """
 
-    def __init__(self, tid: str, seconds: float, depth: int):
-        super().__init__(f"tenant {tid!r} queue full ({depth} rows); "
+    def __init__(self, tid: str, seconds: float, depth: int,
+                 reason: str = "queue_full"):
+        super().__init__(f"tenant {tid!r} {reason} ({depth} rows); "
                          f"retry after {seconds:.3f}s")
         self.tid = tid
         self.seconds = seconds
         self.depth = depth
+        self.reason = reason
 
 
 @dataclass(frozen=True)
@@ -237,6 +247,32 @@ class ServingFrontend:
                neg_dst: int = 0) -> int:
         if tid not in self.mgr.tenants:
             raise KeyError(f"unknown tenant {tid!r}")
+        if getattr(self.mgr, "is_quarantined", None) is not None \
+                and self.mgr.is_quarantined(tid):
+            # transient: the guard's auto-restore is pending — suggest
+            # its next-attempt countdown when one is scheduled
+            guard = getattr(self.mgr, "guard", None)
+            view = guard.tenant_view(tid) if guard is not None else {}
+            after = view.get("next_attempt_in_s")
+            raise RetryAfter(tid, (after if after
+                                   else self.cfg.retry_after_s),
+                             0, reason="quarantined")
+        faults = getattr(self.mgr, "_faults", None)
+        if faults is not None:
+            # chaos-only wire-corruption hook (gated: session_lint rule 4)
+            src, dst, eid, ts, neg_dst = faults.on_ingest(
+                tid, src, dst, eid, ts, neg_dst)
+        # ingest validation: corruption past this point would poison the
+        # tenant's resident state, so reject it at the wire (permanent)
+        ts = float(ts)
+        if not math.isfinite(ts):
+            raise ValueError(f"non-finite timestamp {ts!r} for tenant "
+                             f"{tid!r}")
+        src, dst, eid, neg_dst = (int(src), int(dst), int(eid),
+                                  int(neg_dst))
+        if min(src, dst, eid, neg_dst) < 0:
+            raise ValueError(f"negative id in event ({src}, {dst}, "
+                             f"{eid}, neg {neg_dst}) for tenant {tid!r}")
         # tenants attached straight through the manager (or an
         # AdmissionController) get their queue on first ingest
         self.batcher.add_tenant(tid)
@@ -279,7 +315,7 @@ class ServingFrontend:
             # the shared clock -> the moment the round enters the session
             trace.add("ingest", oldest, t_step, cat="frontend",
                       events=sum(len(a) for a in arrivals.values()))
-        outs = self.mgr.step(batches)
+        outs = self.mgr.guarded_step(batches)
         done = self.clock()
         slo = getattr(self.mgr, "slo", None)
         if slo is not None and slo.source != "event":
@@ -324,12 +360,16 @@ class ServingFrontend:
             # AdmissionController.stats() in the same response reads the
             # identical view, never a mid-round disagreement
             "compile": self.mgr.compile_counters(),
+            **({"guard": self.mgr.guard.snapshot()}
+               if getattr(self.mgr, "guard", None) is not None else {}),
         }
 
     def metrics_snapshot(self) -> dict:
         """The ``metrics`` wire-op payload: one lock-consistent registry
-        snapshot plus per-tenant SLO burn (every resident tenant) and
-        the tracer's span tallies when those are armed."""
+        snapshot plus per-tenant SLO burn (every resident tenant), the
+        tracer's span tallies, and the FleetGuard's recovery counters
+        (quarantines/restores/degradations/evictions + the live
+        quarantine set) when those are armed."""
         out = {"registry": self.obs.snapshot(),
                "compile": self.mgr.compile_counters()}
         slo = getattr(self.mgr, "slo", None)
@@ -338,6 +378,9 @@ class ServingFrontend:
         tracer = getattr(self.mgr, "tracer", None)
         if tracer is not None:
             out["trace"] = tracer.summary()
+        guard = getattr(self.mgr, "guard", None)
+        if guard is not None:
+            out["guard"] = guard.snapshot()
         return out
 
     # -------------------------------------------------------- dispatcher
@@ -353,10 +396,28 @@ class ServingFrontend:
         ``SessionManager.register_params``; an unknown name is rejected
         with ``invalid_request`` BEFORE any lane state changes — the
         wire protocol carries names, never weights.
+
+        Every error response carries ``"transient"``: ``retry_after``
+        (backpressure, quarantine) means try again later; everything
+        else (malformed request, unknown tenant/op) is permanent —
+        resubmitting the same request cannot succeed. A malformed
+        request NEVER raises out of here: the dispatcher is the
+        transport's crash barrier.
         """
+        if not isinstance(req, dict):
+            return {"ok": False, "error": "invalid_request",
+                    "transient": False,
+                    "detail": f"request must be a JSON object, got "
+                              f"{type(req).__name__}"}
         try:
             op = req.get("op")
             if op == "ingest":
+                missing = [k for k in ("tid", "src", "dst", "ts")
+                           if k not in req]
+                if missing:
+                    return {"ok": False, "error": "invalid_request",
+                            "transient": False,
+                            "detail": f"ingest missing fields {missing}"}
                 depth = self.submit(req["tid"], req["src"], req["dst"],
                                     req.get("eid", 0), req["ts"],
                                     req.get("neg_dst", 0))
@@ -379,20 +440,23 @@ class ServingFrontend:
             if op == "flush":
                 outs = self.pump(force=True)
                 return {"ok": True, "flushed": sorted(outs)}
-            return {"ok": False, "error": "unknown_op", "op": op}
+            return {"ok": False, "error": "unknown_op", "op": op,
+                    "transient": False}
         except RetryAfter as e:
             return {"ok": False, "error": "retry_after",
+                    "transient": True, "reason": e.reason,
                     "retry_after_s": e.seconds, "tid": e.tid,
                     "depth": e.depth}
         except KeyError as e:
             return {"ok": False, "error": "unknown_tenant",
-                    "detail": str(e)}
-        except ValueError as e:
-            # e.g. attach naming an unregistered param set — rejected by
-            # the manager before any lane mutation, so compile counters
-            # and resident tenants are untouched
+                    "transient": False, "detail": str(e)}
+        except (ValueError, TypeError) as e:
+            # e.g. attach naming an unregistered param set, an ingest
+            # with a non-numeric/non-finite field — rejected before any
+            # lane mutation, so compile counters and resident tenants
+            # are untouched
             return {"ok": False, "error": "invalid_request",
-                    "detail": str(e)}
+                    "transient": False, "detail": str(e)}
 
     # ----------------------------------------------------- asyncio shell
     async def start(self) -> None:
@@ -424,27 +488,53 @@ class ServingFrontend:
 
 
 async def serve_jsonl(frontend: ServingFrontend, host: str = "127.0.0.1",
-                      port: int = 0):
+                      port: int = 0, max_line: int = 1 << 20):
     """Newline-delimited-JSON transport: one request dict per line, one
     response per line. Returns the listening ``asyncio.Server`` (query
-    ``server.sockets[0].getsockname()`` for the bound port)."""
+    ``server.sockets[0].getsockname()`` for the bound port).
+
+    Hardened against a hostile/buggy peer: reads are BOUNDED
+    (``max_line`` bytes; an oversized line gets one ``invalid_request``
+    response and the connection is dropped — there is no way to resync
+    mid-line), malformed JSON and non-object payloads come back as
+    structured errors, and any unexpected dispatcher failure answers
+    ``internal_error`` on that one request. No input can kill the
+    server task; other connections keep serving.
+    """
 
     async def client(reader, writer):
         try:
             while True:
-                line = await reader.readline()
+                try:
+                    line = await reader.readline()
+                except (asyncio.LimitOverrunError, ValueError):
+                    # bounded read tripped: reject and drop the
+                    # connection — the line has no parseable end
+                    writer.write(json.dumps(
+                        {"ok": False, "error": "invalid_request",
+                         "transient": False,
+                         "detail": f"line exceeds {max_line} bytes"}
+                    ).encode() + b"\n")
+                    await writer.drain()
+                    break
                 if not line:
                     break
                 try:
                     req = json.loads(line)
                 except json.JSONDecodeError as e:
                     resp = {"ok": False, "error": "bad_json",
-                            "detail": str(e)}
+                            "transient": False, "detail": str(e)}
                 else:
-                    resp = frontend.handle(req)
+                    try:
+                        resp = frontend.handle(req)
+                    except Exception as e:   # the transport never dies
+                        resp = {"ok": False, "error": "internal_error",
+                                "transient": False, "detail": str(e)}
                 writer.write(json.dumps(resp).encode() + b"\n")
                 await writer.drain()
+        except (ConnectionResetError, BrokenPipeError):
+            pass                             # peer vanished mid-exchange
         finally:
             writer.close()
 
-    return await asyncio.start_server(client, host, port)
+    return await asyncio.start_server(client, host, port, limit=max_line)

@@ -102,8 +102,14 @@ class _HostStager:
     Double buffering: rounds alternate between the two buffer sets, so the
     (async) H2D transfer of round k can still be draining while round
     k+1's batches are written into the other set — the transfer overlaps
-    the in-flight compute. Before a set is reused its previous transfer is
-    waited on (a transfer-only wait two rounds stale, not a D2H sync).
+    the in-flight compute. Before a set is reused, its previous transfer
+    AND the launch that consumed it are waited on (both two rounds stale,
+    not a D2H sync of the current round). The transfer alone is NOT a
+    sufficient reuse gate: ``device_put`` on the CPU backend zero-copies
+    suitably aligned NumPy buffers, so the "device" array can alias this
+    host memory and the round-k executable may still be reading it when
+    round k+2 refills the set in place — the caller registers the launch
+    outputs via ``note_consumer`` to close that race.
 
     ``width`` grows sticky to the largest batch seen (growth is a
     relayout: fresh buffers, new launch shape); extra columns and
@@ -122,8 +128,12 @@ class _HostStager:
     def _alloc(self) -> None:
         self._bufs = [tuple(np.zeros((self.rows, self.width), dt)
                             for dt in self.DTYPES) for _ in range(2)]
+        # per set: everything that must resolve before the set may be
+        # rewritten — the device_put result, joined by the consuming
+        # launch's outputs once note_consumer is called
         self._inflight: list[tuple | None] = [None, None]
         self._turn = 0
+        self._last = 0
 
     def ensure_width(self, width: int) -> None:
         """Grow the staged batch width (sticky; a relayout)."""
@@ -139,7 +149,7 @@ class _HostStager:
         turn = self._turn
         self._turn = 1 - turn
         prev = self._inflight[turn]
-        if prev is not None:             # reuse gate: transfer-only wait
+        if prev is not None:             # reuse gate: transfer + consumer
             jax.block_until_ready(prev)
         buf = self._bufs[turn]
         for field in buf:
@@ -151,10 +161,23 @@ class _HostStager:
         dev = (jax.device_put(buf, self.shardings)
                if self.shardings is not None else jax.device_put(buf))
         self._inflight[turn] = dev
+        self._last = turn
         return dev
 
+    def note_consumer(self, outputs) -> None:
+        """Join ``outputs`` (any pytree of device arrays produced by the
+        launch that consumed the last staged set) into that set's reuse
+        gate. Without this, a zero-copy-aliased set could be rewritten
+        while the (async) consuming executable still reads it — see the
+        class docstring. Blocking happens two rounds later, in ``stage``,
+        so the never-block round contract is untouched."""
+        dev = self._inflight[self._last]
+        if dev is not None:
+            self._inflight[self._last] = (dev, outputs)
+
     def drain(self) -> None:
-        """Wait for every outstanding transfer (relayout / teardown)."""
+        """Wait for every outstanding transfer + consumer (relayout /
+        teardown)."""
         for dev in self._inflight:
             if dev is not None:
                 jax.block_until_ready(dev)
@@ -547,6 +570,19 @@ class SessionManager:
         #: per-tenant latency-SLO burn tracker (``set_slo``) or None.
         self.slo = None
         self._obs_rounds = 0     # round walls already fed to registry/SLO
+        #: armed fault-injection plan (``faults.FaultInjector``) or None
+        #: — every hook site is gated ``if self._faults is not None:``
+        #: (tools/session_lint.py rule 4), so an unarmed fleet pays one
+        #: attribute test per round.
+        self._faults = None
+        #: supervising ``guard.FleetGuard`` (set by its constructor) or
+        #: None; ``guarded_step`` routes rounds through it when present.
+        self.guard = None
+        #: tenants whose traffic is dropped and lane slot idle-masked
+        #: (valid=False every round — the established bitwise no-op), so
+        #: a sick tenant stops serving with ZERO recompiles and zero
+        #: effect on cohort-mates' trajectories.
+        self._quarantined: set[str] = set()
 
     # -- observability hooks -------------------------------------------
     def set_tracer(self, tracer) -> None:
@@ -566,6 +602,44 @@ class SessionManager:
         from repro.obs import SLOTracker
         self.slo = SLOTracker(target_ms, objective=objective, source=source)
         return self.slo
+
+    def set_faults(self, injector) -> None:
+        """Arm (or with ``None`` disarm) a deterministic fault-injection
+        plan (``faults.FaultInjector``) — chaos testing only; an unarmed
+        session's hook sites are no-ops (docs/ROBUSTNESS.md)."""
+        self._faults = injector
+
+    # -- quarantine (the guard's isolation primitive) -------------------
+    def quarantine(self, tid: str) -> None:
+        """Stop serving ``tid`` WITHOUT detaching it: its batches are
+        dropped from every round, so its lane slot idle-masks
+        (all-``valid=False`` — a bitwise no-op on its state) while the
+        compiled round keeps serving everyone else unchanged. Zero
+        recompiles, zero effect on cohort-mates."""
+        if tid not in self._tenant_cohort:
+            raise KeyError(f"unknown tenant {tid!r}")
+        self._quarantined.add(tid)
+        self.obs.gauge("guard.quarantined_now").set(len(self._quarantined))
+
+    def unquarantine(self, tid: str) -> None:
+        self._quarantined.discard(tid)
+        self.obs.gauge("guard.quarantined_now").set(len(self._quarantined))
+
+    def is_quarantined(self, tid: str) -> bool:
+        return tid in self._quarantined
+
+    @property
+    def quarantined(self) -> frozenset:
+        return frozenset(self._quarantined)
+
+    def guarded_step(self, batches: Mapping) -> dict:
+        """``step`` routed through the supervising ``FleetGuard`` when
+        one is attached (health checks, quarantine, auto-restore, tier
+        degradation — serving/guard.py); plain ``step`` otherwise. The
+        serving drivers (``run``, the frontend's pump) call this."""
+        if self.guard is not None:
+            return self.guard.step(batches)
+        return self.step(batches)
 
     def _invalidate_layout(self) -> None:
         """Fleet layout changed: the next round builds (and compiles) a
@@ -710,6 +784,8 @@ class SessionManager:
         self.sync()
         self._tenant_cohort.pop(tid)
         self._tenant_stats.pop(tid, None)
+        if tid in self._quarantined:
+            self.unquarantine(tid)
         relayout = cohort.remove(tid)
         if not cohort.tids and cohort.reserve is None:
             # reserve-less cohorts tear down when empty; reserved lanes
@@ -891,6 +967,11 @@ class SessionManager:
                                superbatch, self.edge_feats, self.node_feats,
                                widths=tuple(widths.get(id(c), 1)
                                             for c in cohorts))
+        # the staged set may zero-copy alias host memory: its reuse must
+        # also wait for this launch, not just the transfer. Gate on the
+        # edge-count output — the state outputs become DONATED inputs of
+        # the next round (sharded cohorts), which block_until_ready rejects
+        self._stager.note_consumer(edges)
         if trace is not None:
             now = trace.clock()
             trace.add("launch", t_launch, now, cat="host",
@@ -964,6 +1045,14 @@ class SessionManager:
         if unknown:
             raise KeyError(f"unknown tenants {sorted(unknown)}; "
                            f"registered: {sorted(self._tenant_cohort)}")
+        if self._faults is not None:
+            # chaos-only injection hook: one attribute test when unarmed
+            batches = self._faults.on_round(self, batches)
+        if self._quarantined:
+            # quarantined traffic is dropped; the sick lane slot idle-
+            # masks below (valid=False), a bitwise no-op on its state
+            batches = {t: b for t, b in batches.items()
+                       if t not in self._quarantined}
         trace = None
         if self.tracer is not None and batches:
             # sampled-trace gate: on unsampled rounds ``trace`` stays
@@ -971,6 +1060,8 @@ class SessionManager:
             # async pipeline (and the pending edge scalars) untouched
             trace = self.tracer if self.tracer.sample_round() else None
         t0 = time.perf_counter()
+        if self._faults is not None:
+            self._faults.before_launch(self)   # may raise KernelFault
         if not batches:
             outs, edges, launches = {}, 0, 0
         elif self.coalesce and not self._device_staged(batches):
@@ -1043,7 +1134,7 @@ class SessionManager:
                     del its[tid]
             if not batches:
                 return
-            yield batches, self.step(batches)
+            yield batches, self.guarded_step(batches)
 
     def tenant_stats(self) -> dict:
         """Per-tenant serving metrics — ``{tid: {queue_depth, rounds,
@@ -1057,9 +1148,13 @@ class SessionManager:
         endpoint reads."""
         qd = dict(self.queue_depths()) if self.queue_depths else {}
         slo = self.slo
+        guard = self.guard
         return {tid: {"queue_depth": int(qd.get(tid, 0)), **st,
+                      "quarantined": tid in self._quarantined,
                       **({"slo": slo.tenant(tid)} if slo is not None
-                         else {})}
+                         else {}),
+                      **({"guard": guard.tenant_view(tid)}
+                         if guard is not None else {})}
                 for tid, st in self._tenant_stats.items()}
 
     def summary(self) -> dict:

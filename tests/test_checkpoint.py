@@ -48,6 +48,47 @@ def test_corruption_detected(tmp_path):
         C.restore(d, _tree())
 
 
+def _corrupt_payload(step_dir):
+    target = os.path.join(step_dir, "arr_00000.npy")
+    data = bytearray(open(target, "rb").read())
+    data[-1] ^= 0xFF
+    open(target, "wb").write(bytes(data))
+
+
+def test_restore_valid_falls_back_past_corrupt_latest(tmp_path):
+    """``restore_valid`` skips a corrupt newest step (with a warning) and
+    returns the newest PRIOR valid one — a torn final snapshot costs one
+    step of history, never the restore."""
+    d = str(tmp_path)
+    C.save(d, 1, _tree(), meta={"x": 1})
+    _corrupt_payload(C.save(d, 2, _tree(), meta={"x": 2}))
+    with pytest.warns(UserWarning, match="step 2 is corrupt"):
+        out, meta, step = C.restore_valid(d, _tree())
+    assert step == 1 and meta == {"x": 1}
+    for a, b in zip(jax.tree.leaves(_tree()), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    # a mangled manifest is also just a skipped step, not a crash
+    m = os.path.join(d, "step_00000001", "manifest.json")
+    open(m, "w").write("{truncated")
+    C.save(d, 0, _tree(), meta={"x": 0})
+    with pytest.warns(UserWarning):
+        _, meta, step = C.restore_valid(d, _tree())
+    assert step == 0 and meta == {"x": 0}
+
+
+def test_restore_valid_raises_when_every_step_is_corrupt(tmp_path):
+    """A fallback never invents a restorable state: all-corrupt history
+    re-raises the NEWEST step's error; an empty root is FileNotFound."""
+    d = str(tmp_path)
+    with pytest.raises(FileNotFoundError):
+        C.restore_valid(d, _tree())
+    for s in (1, 2):
+        _corrupt_payload(C.save(d, s, _tree()))
+    with pytest.warns(UserWarning), pytest.raises(C.CORRUPTION_ERRORS):
+        C.restore_valid(d, _tree())
+
+
 def test_gc_never_collects_the_step_just_written(tmp_path):
     """A writer whose step counter lags the directory's history (e.g. a
     restarted serving process) must not have its fresh checkpoint GC'd the

@@ -464,6 +464,88 @@ def test_jsonl_server_roundtrip(setup):
     assert fe.stats()["tenants"] == ["t0"]
 
 
+def test_jsonl_server_survives_hostile_wire_input(setup):
+    """Wire hardening: malformed JSON, non-dict payloads, unknown ops,
+    missing/invalid fields, quarantined-tenant ingest, and an oversized
+    line each produce a STRUCTURED error (with a transient/permanent
+    classification) — and the server keeps serving new connections."""
+    from repro.serving.guard import FleetGuard
+
+    g, cfg, params, ef = setup
+    mgr = SessionManager(params, ef, model=cfg, reserve=True)
+    mgr.add_tenant(name="t0")
+    mgr.add_tenant(name="sick")
+    guard = FleetGuard(mgr, clock=lambda: 0.0, backoff_s=9.0)
+    guard.quarantine("sick", reason="manual")
+    fe = ServingFrontend(mgr, FrontendConfig(max_wait_s=0.002, max_rows=16,
+                                             queue_rows=8))
+
+    async def scenario():
+        await fe.start()
+        server = await serve_jsonl(fe, "127.0.0.1", 0, max_line=4096)
+        port = server.sockets[0].getsockname()[1]
+
+        async def connect():
+            return await asyncio.open_connection("127.0.0.1", port)
+
+        reader, writer = await connect()
+
+        async def rpc(payload):
+            writer.write(payload if isinstance(payload, bytes)
+                         else json.dumps(payload).encode() + b"\n")
+            await writer.drain()
+            return json.loads(await reader.readline())
+
+        r = await rpc(b"}{ definitely not json\n")
+        assert r["error"] == "bad_json" and not r["ok"]
+        r = await rpc([1, 2, 3])                   # valid JSON, not a dict
+        assert r["error"] == "invalid_request" and r["transient"] is False
+        r = await rpc({"op": "self_destruct"})
+        assert r["error"] == "unknown_op" and r["transient"] is False
+        r = await rpc({"op": "ingest", "tid": "t0", "src": 1})
+        assert r["error"] == "invalid_request" and "dst" in r["detail"]
+        r = await rpc({"op": "ingest", "tid": "t0", "src": 1, "dst": 2,
+                       "ts": float("inf")})
+        assert r["error"] == "invalid_request" and r["transient"] is False
+        r = await rpc({"op": "ingest", "tid": "t0", "src": -5, "dst": 2,
+                       "ts": 0.0})
+        assert r["error"] == "invalid_request"
+        r = await rpc({"op": "ingest", "tid": "ghost", "src": 1, "dst": 2,
+                       "ts": 0.0})
+        assert r["error"] == "unknown_tenant" and r["transient"] is False
+        # a quarantined tenant's ingest is refused TRANSIENTLY with the
+        # guard's retry hint, never enqueued
+        r = await rpc({"op": "ingest", "tid": "sick", "src": 1, "dst": 2,
+                       "ts": 0.0})
+        assert r["error"] == "retry_after" and r["transient"] is True
+        assert r["reason"] == "quarantined"
+        assert r["retry_after_s"] == pytest.approx(9.0)
+        # the connection survived every bad request above
+        r = await rpc({"op": "ingest", "tid": "t0", "src": int(g.src[0]),
+                       "dst": int(g.dst[0]), "eid": 0,
+                       "ts": float(g.ts[0])})
+        assert r["ok"]
+
+        # an oversized line: one structured error, then the connection
+        # is dropped (the bounded read cannot resync mid-line)
+        r = await rpc(b'{"op": "ingest", "pad": "' + b"x" * 8192 + b'"}\n')
+        assert r["error"] == "invalid_request" and "exceeds" in r["detail"]
+        assert await reader.read(1) == b""         # server closed it
+        writer.close()
+
+        # ...but the SERVER is alive: a fresh connection serves fine
+        reader, writer = await connect()
+        r = await rpc({"op": "stats"})
+        assert r["ok"] and "t0" in r["stats"]["tenants"]
+        writer.close()
+        server.close()
+        await server.wait_closed()
+        await fe.stop()
+
+    asyncio.run(scenario())
+    assert fe.stats()["accepted"] == 1
+
+
 # ---------------------------------------------------------------------------
 # observability: sampled tracing + SLO burn over the online round path
 # ---------------------------------------------------------------------------

@@ -115,6 +115,35 @@ def test_mixed_sampler_cohorts_each_match_their_engine(small_graph):
     assert not np.array_equal(finals[0], finals[1])
 
 
+def test_stager_reuse_gate_includes_the_consuming_launch(small_graph):
+    """``device_put`` on CPU zero-copies aligned host buffers, so a staged
+    super-batch can ALIAS the stager's NumPy set: reusing the set two
+    rounds later must wait for the launch that consumed it, not just the
+    transfer, or the (async) executable reads a torn batch. Pins that
+    every step joins its launch outputs into the staged set's reuse gate
+    — the race only manifests under scheduler-dependent timing, so the
+    gate's shape is asserted directly."""
+    g = small_graph
+    dims = _dims(g)
+    cfg = pl.variant_config("sat+lut+np4", **dims)
+    params = tgn.init_params(jax.random.key(0), cfg)
+    mgr = SessionManager(params, jnp.asarray(g.edge_feats), model=cfg,
+                         use_kernels=False)
+    t0 = mgr.add_tenant()
+    rounds = list(_tenant_stream(g, 0, batch=20, rounds=3))
+    for k, batch in enumerate(rounds):
+        mgr.step({t0: batch})
+        st = mgr._stager
+        gate = st._inflight[st._last]
+        # (transfer, consumer-outputs) pair, arrays of the launch output
+        assert isinstance(gate, tuple) and len(gate) == 2
+        dev, outputs = gate
+        assert all(isinstance(x, jax.Array) for x in dev)
+        assert any(isinstance(leaf, jax.Array)
+                   for leaf in jax.tree_util.tree_leaves(outputs))
+    mgr.sync()
+
+
 def test_idle_tenants_are_bitwise_frozen(small_graph):
     """A round that only some tenants join must not perturb the others:
     the masked (all-invalid) step is a bitwise no-op on their state."""

@@ -1,0 +1,188 @@
+#!/usr/bin/env python
+"""Fault-injection chaos smoke (make chaos-smoke, wired into make lint).
+
+Boots a 3-cohort fleet behind the online frontend with the FleetGuard
+supervisor armed, runs a DETERMINISTIC fault plan against it on a fake
+clock — a NaN-poisoned resident state, a failed snapshot write, a
+classified kernel-launch failure, and a round stall — and asserts the
+recovery contract end to end:
+
+- every planned fault fires and is DETECTED (``injector.pending() ==
+  []``; quarantine / snapshot retry / tier degradation / watchdog trip
+  each observed exactly once in the guard counters and the fleet
+  metrics registry);
+- the poisoned tenant is quarantined (ingest rejected with a
+  ``quarantined`` RetryAfter), auto-restored from its newest valid
+  snapshot after the backoff, and finishes the run healthy;
+- the kernel-failing cohort degrades fused -> staged as a lane MOVE:
+  exactly ONE extra relayout across the whole run, and the retried
+  round still completes;
+- SURVIVORS ARE BITWISE: the healthy tenant's final state equals a
+  replay of its recorded batches through a fresh solo fleet that never
+  had the sick tenants attached;
+- every completed round is still ONE compiled launch
+  (``launches_per_round == {1}``), and the recovery story is visible in
+  ``metrics_snapshot()["guard"]`` and as ``cat="guard"`` spans in the
+  round tracer.
+
+Everything — deadline batcher, guard backoff, fault plan, tracer — runs
+on ONE shared fake clock, which is what makes the chaos run replayable.
+"""
+from __future__ import annotations
+
+import sys
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def main() -> int:
+    from repro.core import pipeline as pl, tgn
+    from repro.data import temporal_graph as tgd
+    from repro.obs import RoundTracer
+    from repro.serving.cluster import TenantSnapshotWriter
+    from repro.serving.faults import FakeClock, Fault, FaultInjector
+    from repro.serving.frontend import (FrontendConfig, RetryAfter,
+                                        ServingFrontend)
+    from repro.serving.guard import FleetGuard
+    from repro.serving.session import SessionManager
+
+    g = tgd.wikipedia_like(n_edges=500)
+    cfg = pl.variant_config("sat+lut+np4", n_nodes=g.cfg.n_nodes,
+                            n_edges=g.n_edges, f_edge=172, f_mem=16,
+                            f_time=16, f_emb=16, m_r=10)
+    params = tgn.init_params(jax.random.key(0), cfg)
+
+    def make_fleet():
+        return SessionManager(params, jnp.asarray(g.edge_feats), model=cfg,
+                              reserve=True)
+
+    mgr = make_fleet()
+    t0 = mgr.add_tenant()                          # np4 @ staged: survivor
+    t1 = mgr.add_tenant("sat+lut+np4+reservoir")   # sick: NaN + snapshot IO
+    t2 = mgr.add_tenant(use_kernels="fused")       # np4 @ fused: degrades
+
+    clock = FakeClock()
+    tracer = RoundTracer(clock=clock, sample_every=4)
+    fe = ServingFrontend(
+        mgr, FrontendConfig(max_wait_s=0.005, max_rows=8, queue_rows=256,
+                            pad_quantum=8),
+        clock=clock, tracer=tracer, slo_ms=25.0, record_rounds=True)
+
+    snap_dir = tempfile.mkdtemp(prefix="chaos-snap-")
+    writer = TenantSnapshotWriter(snap_dir, keep=3, retries=2,
+                                  obs=mgr.obs, sleep=lambda s: None)
+    guard = FleetGuard(mgr, snapshot_root=snap_dir, writer=writer,
+                       clock=clock, max_restores=3, backoff_s=0.02,
+                       watchdog_s=0.5)
+
+    # the deterministic fault plan: logical positions on the fake clock
+    injector = FaultInjector([
+        Fault(kind="snapshot_io", tenant=t1, at=0),   # 1st write attempt
+        Fault(kind="nan_state", tenant=t1, at=3),     # round 3 poison
+        Fault(kind="kernel_fail", tenant=t2, at=5),   # round 5 launch
+        Fault(kind="stall", at=7, delay_s=1.0),       # round 7 wall
+    ], clock=clock)
+    mgr.set_faults(injector)
+
+    ROUNDS, ROWS = 12, 8
+    accepted, quarantine_rejects = 0, []
+    c0 = None
+    for r in range(ROUNDS):
+        for i in range(r * ROWS, (r + 1) * ROWS):
+            for tid in (t0, t1, t2):
+                try:
+                    fe.submit(tid, int(g.src[i]), int(g.dst[i]), i,
+                              float(g.ts[i]), int(g.dst[(i + 3) % 500]))
+                    accepted += 1
+                except RetryAfter as e:       # quarantined-tenant ingest
+                    quarantine_rejects.append((r, e.tid, e.reason))
+        clock.advance(0.006)                  # past the 5ms deadline
+        assert fe.pump(), "deadline flush did not fire"
+        if c0 is None:                        # post-warmup baseline: the
+            c0 = mgr.compile_counters()       # fleet layout is now built
+        if r % 2 == 0:                        # snapshot cadence; never
+            for tid in mgr.tenants:           # persist a quarantined
+                if not mgr.is_quarantined(tid):   # (possibly sick) lane
+                    writer.submit(mgr, tid, step=r)
+    mgr.sync()
+    writer.close()
+
+    gs = guard.snapshot()
+    fired = sorted(f["kind"] for f in injector.fired)
+    counters = mgr.obs.snapshot(prefix="guard.")
+    detect_ok = (injector.pending() == []
+                 and fired == ["kernel_fail", "nan_state", "snapshot_io",
+                               "stall"]
+                 and gs["quarantines"] == 1 and gs["restores"] == 1
+                 and gs["degradations"] == 1 and gs["evictions"] == 0
+                 and gs["watchdog_trips"] == 1
+                 and gs["quarantined_now"] == [] and gs["evicted"] == []
+                 and counters["guard.quarantines"] == 1
+                 and counters["guard.restores"] == 1
+                 and mgr.obs.counter("snapshot.retries").value >= 1
+                 and mgr.obs.counter("snapshot.failures").value == 0)
+
+    # the sick tenant came back healthy; its ingest was refused (with a
+    # quarantined RetryAfter) only while it sat in quarantine
+    view = guard.tenant_view(t1)
+    sick_ok = (not view["quarantined"] and view["restores"] == 1
+               and not view["evicted"]
+               and view["last_reason"] == "nonfinite_state"
+               and quarantine_rejects != []
+               and {x[1:] for x in quarantine_rejects}
+               == {(t1, "quarantined")}
+               and bool(np.all(np.isfinite(
+                   np.asarray(mgr.state_of(t1).memory)))))
+
+    # fused -> staged was a lane move: tier changed, ONE extra relayout,
+    # every completed round one launch
+    c = mgr.compile_counters()
+    launches = {m["launches"] for m in mgr.metrics}
+    degrade_ok = (mgr.cohort_of(t2).tier == "staged"
+                  and c["relayouts"] == c0["relayouts"] + 1
+                  and launches == {1}
+                  and fe.stats()["rounds"] == ROUNDS)
+
+    # survivors are bitwise: replay t0's recorded rounds through a solo
+    # fleet that never had t1/t2 attached
+    solo = make_fleet()
+    t0_ref = solo.add_tenant()
+    for batches in fe.round_log:
+        if t0 in batches:
+            solo.step({t0_ref: batches[t0]})
+    solo.sync()
+    a, b = mgr.state_of(t0), solo.state_of(t0_ref)
+    bitwise_ok = all(np.array_equal(np.asarray(x), np.asarray(y))
+                     for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+    # the recovery story is visible: metrics snapshot + guard spans
+    ms = fe.metrics_snapshot()
+    guard_spans = {s.name for s in tracer.spans if s.cat == "guard"}
+    obs_ok = (ms.get("guard") == gs
+              and {"quarantine", "restore", "degrade",
+                   "watchdog"} <= guard_spans
+              and fe.stats()["guard"] == gs)
+
+    ok = detect_ok and sick_ok and degrade_ok and bitwise_ok and obs_ok
+    print(f"chaos-smoke: {ROUNDS} rounds, faults fired {fired}, "
+          f"guard {gs} -> {'OK' if detect_ok else 'FAIL'}")
+    print(f"chaos-smoke: sick tenant restored "
+          f"({len(quarantine_rejects)} quarantined-ingest rejects) -> "
+          f"{'OK' if sick_ok else 'FAIL'}; degrade fused->staged, "
+          f"relayouts +{c['relayouts'] - c0['relayouts']}, "
+          f"launches {sorted(launches)} -> "
+          f"{'OK' if degrade_ok else 'FAIL'}")
+    print(f"chaos-smoke: survivor bitwise vs solo replay -> "
+          f"{'OK' if bitwise_ok else 'FAIL'}; guard spans "
+          f"{sorted(guard_spans)} -> {'OK' if obs_ok else 'FAIL'}")
+    if not ok:
+        print(f"chaos-smoke: view={view} counters={counters} "
+              f"compile={c} fired={injector.fired}", file=sys.stderr)
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -44,6 +44,7 @@ FALLBACK_TESTS = (
     "tests/test_checkpoint.py",
     "tests/test_session.py",
     "tests/test_obs.py",
+    "tests/test_guard.py",
 )
 
 

@@ -38,6 +38,15 @@ silent — everything still computes the right numbers, just slower):
    (``SessionManager.step`` keeps its by-design round-wall
    ``perf_counter`` pair — only its fences are guarded.)
 
+4. Fault-injection hooks must stay NO-OP gated: every call to a
+   ``FaultInjector`` hook (``on_round`` / ``before_launch`` /
+   ``on_ingest`` / ``on_snapshot_write``) in the serving hot paths must
+   sit inside an ``if`` whose test references the injector (``if faults
+   is not None:``, ...). An ungated hook call puts a Python attribute
+   lookup + dispatch on every production round/event even when no fault
+   plan is armed — the injection layer's contract is strictly zero cost
+   when disarmed (see docs/ROBUSTNESS.md).
+
 Exits non-zero listing every violation; also fails if a guarded function
 disappears (a rename must update this guard, not silently skip it).
 """
@@ -97,6 +106,24 @@ FENCE_GUARDED = {
     os.path.join("src", "repro", "core", "pipeline.py"): (
         ("CoalescedRound", "__call__", FENCES),
         ("*", "round_fn", FENCES),
+    ),
+}
+
+#: FaultInjector hook methods whose call must be fault-gated (rule 4).
+FAULT_HOOKS = {"on_round", "before_launch", "on_ingest",
+               "on_snapshot_write"}
+
+#: file -> ((scope, function), ...): hot-path functions that are allowed
+#: to call FAULT_HOOKS, but only under an ``if ... fault ...:`` gate.
+FAULT_GUARDED = {
+    os.path.join("src", "repro", "serving", "session.py"): (
+        ("SessionManager", "step"),
+    ),
+    os.path.join("src", "repro", "serving", "frontend.py"): (
+        ("ServingFrontend", "submit"),
+    ),
+    os.path.join("src", "repro", "serving", "cluster.py"): (
+        ("*", "work"),
     ),
 }
 
@@ -177,6 +204,41 @@ def _fence_violations(fn: ast.FunctionDef, banned: set) -> list:
     return out
 
 
+def _is_fault_gate(test: ast.expr) -> bool:
+    """True when an ``if`` test references the fault injector — any
+    name/attribute containing "fault" (``if faults is not None:``,
+    ``if self._faults:``, ...)."""
+    for n in ast.walk(test):
+        ident = (n.id if isinstance(n, ast.Name)
+                 else n.attr if isinstance(n, ast.Attribute) else "")
+        if "fault" in ident.lower():
+            return True
+    return False
+
+
+def _fault_violations(fn: ast.FunctionDef) -> list:
+    """FAULT_HOOKS calls reachable outside every fault-gated ``if``
+    body inside ``fn``."""
+    out = []
+
+    def visit(node, gated):
+        for sub in ast.iter_child_nodes(node):
+            if isinstance(sub, ast.If) and _is_fault_gate(sub.test):
+                for b in sub.body:
+                    visit(b, True)
+                for b in sub.orelse:
+                    visit(b, gated)
+                continue
+            if (not gated and isinstance(sub, ast.Call)
+                    and isinstance(sub.func, ast.Attribute)
+                    and sub.func.attr in FAULT_HOOKS):
+                out.append((sub.lineno, sub.func.attr))
+            visit(sub, gated)
+
+    visit(fn, False)
+    return out
+
+
 def check_file(relpath: str, guards) -> tuple[int, list]:
     with open(os.path.join(REPO, relpath)) as f:
         tree = ast.parse(f.read(), relpath)
@@ -230,6 +292,30 @@ def check_fences(relpath: str, guards) -> tuple[int, list]:
     return checked, errors
 
 
+def check_faults(relpath: str, guards) -> tuple[int, list]:
+    with open(os.path.join(REPO, relpath)) as f:
+        tree = ast.parse(f.read(), relpath)
+    functions = _functions(tree)
+    errors, checked = [], 0
+    base = os.path.basename(relpath)
+    for scope, name in guards:
+        fn = functions.get((scope, name))
+        qual = ".".join(p for p in (None if scope == "*" else scope, name)
+                        if p)
+        if fn is None:
+            errors.append(f"guarded function {qual} not found in {base} — "
+                          "update tools/session_lint.py alongside the "
+                          "rename")
+            continue
+        checked += 1
+        for lineno, what in _fault_violations(fn):
+            errors.append(
+                f"{base}:{lineno}: ungated fault hook {what}() in {qual} "
+                "— injection hooks must sit inside an `if faults ...:` "
+                "gate so a disarmed injector costs the hot path nothing")
+    return checked, errors
+
+
 def main() -> int:
     errors, checked = [], 0
     for relpath, guards in GUARDED.items():
@@ -238,6 +324,10 @@ def main() -> int:
         errors.extend(errs)
     for relpath, guards in FENCE_GUARDED.items():
         c, errs = check_fences(relpath, guards)
+        checked += c
+        errors.extend(errs)
+    for relpath, guards in FAULT_GUARDED.items():
+        c, errs = check_faults(relpath, guards)
         checked += c
         errors.extend(errs)
     for e in errors:
