@@ -20,6 +20,11 @@
 #                     a guarded 3-cohort fleet — quarantine + auto-restore
 #                     + tier degradation, survivors BITWISE
 #                     (tools/chaos_smoke.py; docs/ROBUSTNESS.md)
+#   make journal-smoke durable-journal smoke: ingest -> kill mid-stream
+#                     -> recover (snapshot + journal replay) -> bitwise
+#                     vs an uninterrupted twin, plus a duplicate-ingest
+#                     fuzz leg (tools/journal_smoke.py;
+#                      docs/ROBUSTNESS.md recovery semantics)
 #   make session-lint the serving round path stages through the in-place
 #                     _HostStager ring buffers (no jnp.pad/jnp.stack/...
 #                     per-tenant staging regressions) AND the fused step
@@ -37,14 +42,15 @@
 #                     (falls back to a bytecode-compile check when
 #                      pyflakes is not installed; see requirements-dev.txt)
 #                     + docs-check + session-lint + serve-smoke +
-#                     chaos-smoke + test-sharded + test-kernels +
-#                     coverage + bench-gate
+#                     chaos-smoke + journal-smoke + test-sharded +
+#                     test-kernels + coverage + bench-gate
 
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: test test-sharded test-kernels bench-smoke serve-smoke \
-	chaos-smoke lint docs-check session-lint coverage bench-gate
+	chaos-smoke journal-smoke lint docs-check session-lint coverage \
+	bench-gate
 
 test:
 	$(PY) -m pytest -x -q
@@ -75,6 +81,9 @@ serve-smoke:
 chaos-smoke:
 	$(PY) tools/chaos_smoke.py
 
+journal-smoke:
+	$(PY) tools/journal_smoke.py
+
 docs-check:
 	$(PY) tools/docs_check.py
 
@@ -87,8 +96,8 @@ coverage:
 bench-gate:
 	$(PY) tools/bench_gate.py
 
-lint: docs-check session-lint serve-smoke chaos-smoke test-sharded \
-		test-kernels coverage bench-gate
+lint: docs-check session-lint serve-smoke chaos-smoke journal-smoke \
+		test-sharded test-kernels coverage bench-gate
 	@if $(PY) -c "import pyflakes" 2>/dev/null; then \
 	    $(PY) -m pyflakes src benchmarks examples tests/*.py; \
 	else \

@@ -11,10 +11,18 @@ knee measurable. Every configuration serves on a reserve-enabled session
 -admission serving path, and each run asserts it stayed zero-recompile
 after warmup.
 
+A second sweep prices durability: the same serve loop with the
+write-ahead event journal (serving/journal.py) armed, over a grid of
+fsync batching intervals (0 = fsync every append, the worst case). The
+journal sits on the ingest hot path — every accepted event is framed,
+crc'd and written before it is enqueued — so this axis is the direct
+cost of the exactly-once recovery contract (docs/ROBUSTNESS.md).
+
     PYTHONPATH=src python -m benchmarks.frontend_latency
 """
 from __future__ import annotations
 
+import tempfile
 import time
 
 import jax
@@ -37,18 +45,24 @@ def _setup(n_edges=800, f_mem=16):
 
 
 def _serve(g, cfg, params, ef, n_tenants, deadline_s, events_per_tenant,
-           rate_eps=20_000.0):
+           rate_eps=20_000.0, journal_fsync_ms=None):
     """Replay a Poisson-ish open-loop arrival process against the
     frontend (real wall clock), pumping between arrivals exactly as the
-    asyncio driver would."""
+    asyncio driver would. ``journal_fsync_ms`` arms the write-ahead
+    journal with that fsync batching interval (``None`` = no journal)."""
     mgr = SessionManager(params, ef, model=cfg, reserve=True)
     tids = [mgr.add_tenant() for _ in range(n_tenants)]
+    journal = None
+    if journal_fsync_ms is not None:
+        from repro.serving.journal import EventJournal
+        journal = EventJournal(tempfile.mkdtemp(prefix="fe-lat-wal-"),
+                               fsync_s=journal_fsync_ms / 1e3)
     # pad_quantum == max_rows: every flush compiles to the SAME width,
     # the strict zero-retrace recipe (a smaller quantum amortizes compile
     # over a few widths instead — cheaper rows, more executables)
     fe = ServingFrontend(mgr, FrontendConfig(
         max_wait_s=deadline_s, max_rows=64, queue_rows=4096,
-        pad_quantum=64))
+        pad_quantum=64), journal=journal)
 
     # warmup: one full-width round through every tenant, then freeze the
     # compile counters — serving must stay inside this executable
@@ -80,7 +94,7 @@ def _serve(g, cfg, params, ef, n_tenants, deadline_s, events_per_tenant,
     assert c1["round_traces"] == c0["round_traces"], (c0, c1)
     lat = fe.event_latencies              # obs.Histogram (streaming)
     edges = events_per_tenant * n_tenants
-    return {
+    row = {
         "tenants": n_tenants,
         "deadline_ms": deadline_s * 1e3,
         "events": edges,
@@ -93,6 +107,12 @@ def _serve(g, cfg, params, ef, n_tenants, deadline_s, events_per_tenant,
         # their own derived rows)
         "registry": mgr.obs.snapshot(),
     }
+    if journal is not None:
+        js = journal.stats()
+        journal.close()
+        row["journal"] = {"fsync_ms": journal_fsync_ms,
+                          "appends": js["appends"], "fsyncs": js["fsyncs"]}
+    return row
 
 
 def sweep(tenant_counts=(1, 4), deadlines_ms=(1.0, 5.0, 20.0),
@@ -106,6 +126,18 @@ def sweep(tenant_counts=(1, 4), deadlines_ms=(1.0, 5.0, 20.0),
     return rows
 
 
+def journal_sweep(fsync_intervals_ms=(None, 0.0, 1.0, 10.0),
+                  events_per_tenant=400, n_tenants=4, deadline_ms=5.0):
+    """The durability axis: one serve configuration, journal off vs on
+    at several fsync batching intervals."""
+    g, cfg, params, ef = _setup()
+    rows = []
+    for f in fsync_intervals_ms:
+        rows.append(_serve(g, cfg, params, ef, n_tenants, deadline_ms / 1e3,
+                           events_per_tenant, journal_fsync_ms=f))
+    return rows
+
+
 def main(full: bool = False):
     print("== online frontend: per-event latency vs deadline x tenants ==")
     rows = sweep(tenant_counts=(1, 4, 8) if full else (1, 4),
@@ -114,7 +146,17 @@ def main(full: bool = False):
         print(f"  T={r['tenants']:2d} deadline={r['deadline_ms']:5.1f}ms "
               f"p50={r['p50_ms']:7.2f}ms p99={r['p99_ms']:7.2f}ms "
               f"{r['eps']:8d} E/s  ({r['rounds']} rounds)")
-    save_json("frontend_latency.json", {"sweep": rows})
+    print("== durability axis: journal off/on vs fsync interval ==")
+    jrows = journal_sweep(events_per_tenant=1200 if full else 400)
+    for r in jrows:
+        j = r.get("journal")
+        tag = "off" if j is None else f"fsync={j['fsync_ms']:4.1f}ms " \
+                                      f"({j['fsyncs']} fsyncs)"
+        print(f"  T={r['tenants']:2d} journal {tag:28s} "
+              f"p50={r['p50_ms']:7.2f}ms p99={r['p99_ms']:7.2f}ms "
+              f"{r['eps']:8d} E/s")
+    save_json("frontend_latency.json", {"sweep": rows,
+                                        "journal_sweep": jrows})
 
 
 if __name__ == "__main__":

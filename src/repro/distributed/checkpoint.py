@@ -90,8 +90,12 @@ def tree_digest(tree: PyTree) -> str:
 
 
 def save(root: str, step: int, tree: PyTree, *, meta: dict | None = None,
-         keep: int = 3) -> str:
-    """Blocking save. Returns the final checkpoint directory."""
+         keep: int = 3, floor: int | None = None) -> str:
+    """Blocking save. Returns the final checkpoint directory.
+
+    ``floor`` pins steps >= it outside the GC keep window — the journal
+    coordination backstop: the snapshot anchoring un-truncated WAL
+    records must survive every later save's GC (serving/journal.py)."""
     os.makedirs(root, exist_ok=True)
     final = os.path.join(root, f"step_{step:08d}")
     tmp = final + ".tmp"
@@ -118,11 +122,12 @@ def save(root: str, step: int, tree: PyTree, *, meta: dict | None = None,
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)          # atomic commit
-    _gc(root, keep, protect=os.path.basename(final))
+    _gc(root, keep, protect=os.path.basename(final), floor=floor)
     return final
 
 
-def _gc(root: str, keep: int, protect: str | None = None) -> None:
+def _gc(root: str, keep: int, protect: str | None = None,
+        floor: int | None = None) -> None:
     steps = sorted(d for d in os.listdir(root) if d.startswith("step_")
                    and not d.endswith(".tmp"))
     for d in steps[:-keep] if keep > 0 else []:
@@ -130,6 +135,10 @@ def _gc(root: str, keep: int, protect: str | None = None) -> None:
         # when its step sorts below the keep window (e.g. a restarted
         # writer whose step counter lags the directory's history)
         if d == protect:
+            continue
+        # nor any step at/above the caller's floor (a journal-replay
+        # anchor must outlive the keep window until the WAL truncates)
+        if floor is not None and int(d.split("_")[1]) >= floor:
             continue
         shutil.rmtree(os.path.join(root, d))
     for d in os.listdir(root):

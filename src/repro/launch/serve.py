@@ -66,7 +66,7 @@ class _SnapshotHooks:
     writer, then write every tenant once more) so shutdown is durable.
     """
 
-    def __init__(self, mgr, args):
+    def __init__(self, mgr, args, journal=None):
         from repro.core import pipeline
         from repro.serving import cluster
         self.cluster = cluster
@@ -77,6 +77,17 @@ class _SnapshotHooks:
         self.available = cluster.list_snapshots(self.root)
         self.base_step = {}          # tid -> step its trajectory resumed at
         self.writer = cluster.TenantSnapshotWriter(self.root)
+        #: the fleet's EventJournal or None. Armed, every snapshot
+        #: manifest records the tenant's replay cursor, restores replay
+        #: the WAL suffix (lossless resume), and the exit save
+        #: truncates the WAL against the oldest retained snapshot.
+        self.journal = journal
+        self.floor = {}              # tid -> WAL anchor step (gc floor)
+
+    def _meta(self, tid):
+        if self.journal is None:
+            return None
+        return {"journal": self.journal.cursor(tid)}
 
     def restore(self, variant, name):
         """Revive ``name`` from disk if --restore and a snapshot exists
@@ -93,10 +104,19 @@ class _SnapshotHooks:
                 "keeps its policy; drop the conflicting "
                 "--variant/--tenant-variants entry or point --snapshot-dir "
                 "at a fresh directory")
-        tid = self.cluster.restore_tenant(self.mgr, self.root, name)
-        self.base_step[tid] = self.available[name]
+        tid = self.cluster.restore_tenant(self.mgr, self.root, name,
+                                          journal=self.journal)
+        base, replayed = self.available[name], 0
+        if self.journal is not None \
+                and self.journal.last_replay is not None:
+            # the WAL replay advanced the trajectory past the snapshot:
+            # the resumed stream window starts after the replayed rounds
+            replayed = self.journal.last_replay.rounds
+            base += replayed
+        self.base_step[tid] = base
         print(f"restored tenant {tid!r} ({meta['variant']}) from "
-              f"{self.root} step {self.available[name]}")
+              f"{self.root} step {self.available[name]}"
+              + (f" + {replayed} journal round(s)" if replayed else ""))
         return tid
 
     def save(self, rounds):
@@ -109,7 +129,9 @@ class _SnapshotHooks:
             if self.mgr.is_quarantined(tid):
                 continue
             self.writer.submit(self.mgr, tid,
-                               step=self.base_step.get(tid, 0) + rounds)
+                               step=self.base_step.get(tid, 0) + rounds,
+                               extra_meta=self._meta(tid),
+                               keep_floor=self.floor.get(tid))
 
     def save_final(self, rounds):
         # steps continue from each restored trajectory's snapshot, so a
@@ -126,7 +148,16 @@ class _SnapshotHooks:
         for tid in self.mgr.tenants:
             self.cluster.snapshot_tenant(
                 self.mgr, tid, self.root,
-                step=self.base_step.get(tid, 0) + rounds)
+                step=self.base_step.get(tid, 0) + rounds,
+                extra_meta=self._meta(tid),
+                keep_floor=self.floor.get(tid))
+            if self.journal is not None:
+                # exit truncation: drop WAL segments no retained
+                # snapshot needs; the anchor step pins future GC
+                anchor = self.cluster.truncate_journal(
+                    self.journal, self.root, tid)
+                if anchor is not None:
+                    self.floor[tid] = anchor
         if self.writer.skipped:
             print(f"snapshot writer: {self.writer.skipped} periodic "
                   "save(s) skipped while a previous write was in flight")
@@ -192,18 +223,34 @@ def _ensure_param_sets(mgr, variants, pnames) -> None:
               f"(digest {mgr.param_store.digest(pname)}, seed {seed})")
 
 
-def _make_guard(mgr, args, writer=None):
+def _make_guard(mgr, args, writer=None, journal=None):
     """--guard: arm the FleetGuard supervisor (serving/guard.py) — NaN
     sentinel + SLO-burn quarantine, snapshot auto-restore with capped
     backoff and a --max-restores eviction ceiling, kernel-tier
     degradation on classified launch failures. Returns the guard (or
-    None); once constructed, every round routes through it."""
+    None); once constructed, every round routes through it. With a
+    journal, auto-restores replay the WAL suffix (lossless)."""
     if not args.guard:
         return None
     from repro.serving.guard import FleetGuard
     return FleetGuard(mgr, snapshot_root=args.snapshot_dir, writer=writer,
                       max_restores=args.max_restores,
-                      quarantine_slo_burn=args.quarantine_slo_burn)
+                      quarantine_slo_burn=args.quarantine_slo_burn,
+                      journal=journal)
+
+
+def _make_journal(args):
+    """--journal-dir: arm the durable write-ahead event journal
+    (serving/journal.py). Every accepted ingest is logged BEFORE it
+    enqueues, ``(client_id, seq)`` retries dedup server-side, and
+    restores replay the WAL suffix for lossless recovery (see
+    docs/ROBUSTNESS.md, "Recovery semantics")."""
+    if not args.journal_dir:
+        return None
+    from repro.serving.journal import EventJournal
+    return EventJournal(args.journal_dir,
+                        fsync_s=args.journal_fsync_ms / 1e3,
+                        dedup_window=args.dedup_window)
 
 
 def _make_tracer(args):
@@ -261,10 +308,12 @@ def run_frontend(args):
                           queue_rows=args.queue_rows,
                           pad_quantum=args.pad_quantum)
     tracer = _make_tracer(args)
+    journal = _make_journal(args)
     fe = ServingFrontend(mgr, fcfg, tracer=tracer,
                          slo_ms=args.slo_ms or None,
-                         slo_objective=args.slo_objective)
-    guard = _make_guard(mgr, args)
+                         slo_objective=args.slo_objective,
+                         journal=journal)
+    guard = _make_guard(mgr, args, journal=journal)
     host, _, port = args.listen.partition(":")
 
     async def serve():
@@ -300,6 +349,8 @@ def run_frontend(args):
         asyncio.run(serve())
     except KeyboardInterrupt:
         pass
+    if journal is not None:
+        journal.close()             # fsync the tail: exit is durable
     print("frontend stats:", fe.stats())
     if args.slo_ms:
         print("slo:", {tid: mgr.slo.tenant(tid) for tid in mgr.tenants})
@@ -318,7 +369,7 @@ def run_tgn(args):
     tenant_variants = _tenant_variants(args)
     if args.tenant_variants or args.tenants > 1 or args.mesh is not None \
             or args.snapshot_dir or args.slo_ms or args.trace_out \
-            or args.guard:
+            or args.guard or args.journal_dir:
         # multi-tenant: split the stream into one contiguous feed per
         # tenant; same-variant tenants share one vmapped launch per round.
         # (--snapshot-dir forces this path too: snapshots are a session
@@ -339,10 +390,12 @@ def run_tgn(args):
             mgr.set_tracer(tracer)
         if args.slo_ms:
             mgr.set_slo(args.slo_ms, args.slo_objective)
-        snapshots = (_SnapshotHooks(mgr, args) if args.snapshot_dir
-                     else None)
+        journal = _make_journal(args)
+        snapshots = (_SnapshotHooks(mgr, args, journal=journal)
+                     if args.snapshot_dir else None)
         guard = _make_guard(mgr, args,
-                            writer=snapshots.writer if snapshots else None)
+                            writer=snapshots.writer if snapshots else None,
+                            journal=journal)
         pnames = _tenant_params(args, len(tenant_variants))
         _ensure_param_sets(mgr, tenant_variants, pnames)
         tids = []
@@ -370,6 +423,15 @@ def run_tgn(args):
                           span)
             streams[tid] = stream.fixed_count(
                 g, args.batch, window=slice(lo, (i + 1) * span))
+        if journal is not None:
+            # write-ahead for the offline path: each batch journals
+            # (rows + flush marker) as the driver PULLS it — before the
+            # round that applies it ever launches
+            def journaled(tid, it):
+                for b in it:
+                    journal.append_batch(tid, b)
+                    yield b
+            streams = {t: journaled(t, s) for t, s in streams.items()}
         rounds = 0
         for _batches, _outs in mgr.run(streams):
             rounds += 1
@@ -383,6 +445,10 @@ def run_tgn(args):
             steps = {t: snapshots.base_step.get(t, 0) + rounds
                      for t in sorted(mgr.tenants)}
             print(f"snapshots: {steps} -> {args.snapshot_dir}")
+        if journal is not None:
+            jstats = journal.stats()
+            journal.close()         # fsync the tail: exit is durable
+            print("journal:", jstats, "->", args.journal_dir)
         print("session summary:", mgr.summary())
         if guard is not None:
             print("guard:", guard.snapshot())
@@ -527,6 +593,21 @@ def main():
                     help="quarantine a tenant whose SLO burn rate exceeds "
                          "this threshold (requires --guard and --slo-ms; "
                          "0 disables the SLO trigger)")
+    ap.add_argument("--journal-dir", default=None,
+                    help="write-ahead event journal root: every accepted "
+                         "event is durably logged BEFORE it enqueues, "
+                         "(client_id, seq) ingest retries dedup server-"
+                         "side, and restores replay the journal suffix "
+                         "for lossless recovery (docs/ROBUSTNESS.md)")
+    ap.add_argument("--journal-fsync-ms", type=float, default=5.0,
+                    help="batch journal fsyncs on this interval (0: fsync "
+                         "every append — strongest durability, highest "
+                         "ingest latency; see benchmarks/"
+                         "frontend_latency.py for the cost curve)")
+    ap.add_argument("--dedup-window", type=int, default=1024,
+                    help="per-client sliding seq window for exactly-once "
+                         "ingest; size it above a client's max in-flight "
+                         "retry depth")
     ap.add_argument("--batch", type=int, default=200)
     ap.add_argument("--window-s", type=float, default=0.0)
     ap.add_argument("--arch", default="qwen3_8b")
@@ -559,6 +640,12 @@ def main():
         ap.error("--quarantine-slo-burn must be >= 0")
     if args.quarantine_slo_burn and not args.slo_ms:
         ap.error("--quarantine-slo-burn needs --slo-ms")
+    if args.journal_dir and args.mode != "tgn":
+        ap.error("--journal-dir is a --mode tgn feature")
+    if args.journal_fsync_ms < 0:
+        ap.error("--journal-fsync-ms must be >= 0")
+    if args.dedup_window < 1:
+        ap.error("--dedup-window must be >= 1")
     if args.listen is not None:
         run_frontend(args)
     else:

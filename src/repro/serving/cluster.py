@@ -201,7 +201,8 @@ def _capture_tenant(mgr: SessionManager, tid: str,
 
 def snapshot_tenant(mgr: SessionManager, tid: str, root: str, *,
                     step: int = 0, keep: int = 3,
-                    extra_meta: dict | None = None) -> str:
+                    extra_meta: dict | None = None,
+                    keep_floor: int | None = None) -> str:
     """Atomically snapshot one tenant's VertexState + serving metadata.
 
     Layout: ``<root>/<tid>/step_XXXXXXXX/`` via ``checkpoint.save`` (tmp
@@ -209,11 +210,14 @@ def snapshot_tenant(mgr: SessionManager, tid: str, root: str, *,
     is the caller's stream position (e.g. rounds served) so successive
     snapshots version the tenant's trajectory. The manifest meta carries
     the resolved variant and full TGNConfig, which ``restore_tenant``
-    validates against the target session.
+    validates against the target session. With an armed journal the
+    caller records the replay cursor via ``extra_meta={"journal":
+    journal.cursor(tid)}`` and pins the WAL's anchor step with
+    ``keep_floor`` (``checkpoint.save(floor=...)``).
     """
     tree, meta = _capture_tenant(mgr, tid, extra_meta)
     return ckpt.save(os.path.join(root, tid), step, tree, meta=meta,
-                     keep=keep)
+                     keep=keep, floor=keep_floor)
 
 
 class TenantSnapshotWriter:
@@ -259,7 +263,8 @@ class TenantSnapshotWriter:
         self._inflight: dict[str, object] = {}
 
     def submit(self, mgr: SessionManager, tid: str, *, step: int = 0,
-               extra_meta: dict | None = None) -> bool:
+               extra_meta: dict | None = None,
+               keep_floor: int | None = None) -> bool:
         """Queue a snapshot of ``tid`` at ``step``; returns False when the
         tenant's previous snapshot is still in flight (skipped). A
         previous write that FAILED (retries exhausted) re-raises here —
@@ -285,7 +290,8 @@ class TenantSnapshotWriter:
                     if faults is not None:
                         faults.on_snapshot_write(tid)
                     return ckpt.save(os.path.join(self.root, tid), step,
-                                     tree, meta=meta, keep=self.keep)
+                                     tree, meta=meta, keep=self.keep,
+                                     floor=keep_floor)
                 except Exception:
                     if attempt >= self.retries:
                         if self.obs is not None:
@@ -358,7 +364,7 @@ def list_snapshots(root: str) -> dict:
 
 def restore_tenant(mgr: SessionManager, root: str, tid: str, *,
                    name: str | None = None, step: int | None = None,
-                   params: str | None = None) -> str:
+                   params: str | None = None, journal=None) -> str:
     """Restore a snapshotted tenant into ``mgr`` and return its id.
 
     The target may be a different cohort, a different mesh shape, or the
@@ -381,6 +387,16 @@ def restore_tenant(mgr: SessionManager, root: str, tid: str, *,
     and the restore falls back to the newest PRIOR valid step
     (``checkpoint.restore_valid``) — a torn background write never
     strands a restorable tenant. An explicit ``step=`` stays strict.
+
+    With ``journal=`` (an ``EventJournal``), the restore becomes
+    LOSSLESS: after the state lands, every journaled flush past the
+    restored manifest's cursor replays through the normal batching
+    pipeline, so the tenant resumes bitwise where the original left
+    off — not merely at its last snapshot. The cursor is read from the
+    manifest of the step ACTUALLY restored (the fallback walk may land
+    below the newest), so replay always starts exactly where that
+    state's history ends. ``journal.last_replay.pending`` then holds
+    accepted-but-never-flushed events for the caller to re-enqueue.
     """
     d = os.path.join(root, tid)
     meta = _meta_with_fallback(root, tid, step)
@@ -425,11 +441,36 @@ def restore_tenant(mgr: SessionManager, root: str, tid: str, *,
                 "pass params= to rebind explicitly")
     tree_like = cohort.pipeline.init_state()._asdict()
     if step is None:
-        state, _meta, _used = ckpt.restore_valid(d, tree_like)
+        state, rmeta, _used = ckpt.restore_valid(d, tree_like)
     else:
-        state, _meta = ckpt.restore(d, tree_like, step=step)
+        state, rmeta = ckpt.restore(d, tree_like, step=step)
     mgr.set_state(new, mailbox.VertexState(**state))
+    if journal is not None and rmeta.get("journal") is not None:
+        journal.replay(tid, rmeta["journal"], mgr.step, as_tid=new)
     return new
+
+
+def truncate_journal(journal, root: str, tid: str) -> int | None:
+    """Truncate ``tid``'s WAL up to the OLDEST retained snapshot's
+    cursor — the GC-coordination contract (docs/ROBUSTNESS.md): every
+    snapshot ``checkpoint._gc`` keeps can still anchor a full replay,
+    so truncation never outruns what recovery may need. Steps whose
+    manifests are corrupt or pre-journal (no cursor) are skipped — no
+    bound can be proven, nothing is deleted. Returns the anchor step
+    the truncation is bounded by (pass it as the next snapshot's
+    ``keep_floor``), or None when no cursor-bearing snapshot exists.
+    """
+    for s in ckpt.list_steps(os.path.join(root, tid)):
+        try:
+            meta = snapshot_meta(root, tid, step=s)
+        except ckpt.CORRUPTION_ERRORS:
+            return None
+        cur = meta.get("journal")
+        if cur is None:
+            return None
+        journal.truncate_upto(tid, cur)
+        return s
+    return None
 
 
 def _meta_with_fallback(root: str, tid: str, step: int | None) -> dict:

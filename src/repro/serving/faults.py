@@ -40,6 +40,13 @@ Fault taxonomy (``KINDS``; docs/ROBUSTNESS.md):
   path and ``count > retries`` its failure path).
 * ``stall``        — advance the injected clock by ``delay_s`` at round
   ``at`` (a stuck round; the guard's watchdog must flag it).
+* ``journal_io``   — raise ``JournalIOFault`` on the tenant's
+  ``at``-th..``at+count-1``-th journal append (a WAL write error; the
+  frontend must REJECT the ingest — an event that is not on disk was
+  never accepted, so the client's retry is safe).
+* ``torn_write``   — make the tenant's ``at``-th journal append write a
+  PARTIAL record and wedge the log (a crash mid-append; reopen must
+  truncate the torn tail, never fabricate the record).
 """
 from __future__ import annotations
 
@@ -50,7 +57,7 @@ import numpy as np
 
 #: every fault kind a plan may contain (see module docstring).
 KINDS = ("nan_state", "poison_batch", "poison_event", "kernel_fail",
-         "snapshot_io", "stall")
+         "snapshot_io", "stall", "journal_io", "torn_write")
 
 #: kinds keyed by the injector's round cursor.
 _ROUND_KINDS = ("nan_state", "poison_batch", "kernel_fail", "stall")
@@ -70,6 +77,10 @@ class KernelFault(RuntimeError):
 
 class SnapshotIOFault(OSError):
     """An injected snapshot-write IO error."""
+
+
+class JournalIOFault(OSError):
+    """An injected journal-append IO error."""
 
 
 class FakeClock:
@@ -105,7 +116,8 @@ class Fault:
             raise ValueError(f"unknown fault kind {self.kind!r}; "
                              f"known: {KINDS}")
         if self.kind in ("nan_state", "poison_batch", "poison_event",
-                         "snapshot_io", "kernel_fail") \
+                         "snapshot_io", "kernel_fail", "journal_io",
+                         "torn_write") \
                 and self.tenant is None:
             raise ValueError(f"fault kind {self.kind!r} needs tenant=")
 
@@ -128,6 +140,9 @@ class FaultInjector:
       validation; returns the possibly-corrupted event tuple.
     * ``on_snapshot_write(tid)``   — ``TenantSnapshotWriter`` worker
       thread, once per write attempt; raises ``SnapshotIOFault``.
+    * ``on_journal_append(tid)``   — ``ServingFrontend.submit`` before
+      the journal write; raises ``JournalIOFault`` or returns
+      ``"torn"`` to make the append itself tear.
     """
 
     def __init__(self, faults, clock: FakeClock | None = None):
@@ -146,6 +161,7 @@ class FaultInjector:
         self.fired: list[dict] = []
         self._event_idx: dict[str, int] = {}
         self._write_idx: dict[str, int] = {}
+        self._journal_idx: dict[str, int] = {}
 
     def _fire(self, f: Fault, pos: int) -> None:
         f.fired += 1
@@ -236,3 +252,23 @@ class FaultInjector:
                 raise SnapshotIOFault(
                     f"injected snapshot IO error for tenant {tid!r} "
                     f"(write attempt {pos})")
+
+    def on_journal_append(self, tid: str) -> str | None:
+        """Journal-append hook: fail or tear the tenant's ``at``-th..
+        ``at+count-1``-th WAL append. Returns ``"torn"`` when the
+        append should write a partial record (and wedge the log), else
+        ``None``; raises ``JournalIOFault`` for a clean IO failure."""
+        pos = self._journal_idx.get(tid, 0)
+        self._journal_idx[tid] = pos + 1
+        for f in self.faults:
+            if f.tenant != tid or not f._active(pos):
+                continue
+            if f.kind == "journal_io" and f.fired < f.count:
+                self._fire(f, pos)
+                raise JournalIOFault(
+                    f"injected journal IO error for tenant {tid!r} "
+                    f"(append {pos})")
+            if f.kind == "torn_write" and f.fired < f.count:
+                self._fire(f, pos)
+                return "torn"
+        return None

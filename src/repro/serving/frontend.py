@@ -65,13 +65,34 @@ class RetryAfter(Exception):
     """
 
     def __init__(self, tid: str, seconds: float, depth: int,
-                 reason: str = "queue_full"):
+                 reason: str = "queue_full", last_seq=None):
         super().__init__(f"tenant {tid!r} {reason} ({depth} rows); "
                          f"retry after {seconds:.3f}s")
         self.tid = tid
         self.seconds = seconds
         self.depth = depth
         self.reason = reason
+        #: with a journal armed, the client's highest accepted seq — a
+        #: reconnecting client resumes after it without a stats
+        #: round-trip (docs/SERVING.md retry contract)
+        self.last_seq = last_seq
+
+
+class DuplicateEvent(Exception):
+    """An ingest retry the journal's dedup window already accepted.
+
+    NOT an error: the event is durably journaled (and possibly already
+    applied), so the transport ACKS it — ``{"ok": true, "dedup": true}``
+    — and never re-enqueues. This is the server half of the exactly-once
+    contract: clients retry at-least-once, the dedup window makes the
+    retries idempotent (docs/ROBUSTNESS.md)."""
+
+    def __init__(self, tid: str, client_id: str, seq: int):
+        super().__init__(f"tenant {tid!r} client {client_id!r} seq {seq} "
+                         "already accepted")
+        self.tid = tid
+        self.client_id = client_id
+        self.seq = seq
 
 
 @dataclass(frozen=True)
@@ -127,14 +148,22 @@ class DeadlineBatcher:
         """Detach bookkeeping; returns (possibly non-empty) leftovers."""
         return self._q.pop(tid, deque())
 
-    def submit(self, tid: str, src: int, dst: int, eid: int, ts: float,
-               neg_dst: int = 0) -> int:
-        """Enqueue one edge event; returns the tenant's queue depth.
-        Raises ``RetryAfter`` when the bounded queue is full."""
+    def check_capacity(self, tid: str) -> None:
+        """Raise ``RetryAfter`` if the tenant's bounded queue is full.
+        The frontend pre-checks this BEFORE a write-ahead journal append
+        — a journaled-then-rejected event would dedup the client's retry
+        into a silently lost event."""
         q = self._q[tid]
         if len(q) >= self.cfg.queue_rows:
             self.rejected += 1
             raise RetryAfter(tid, self.cfg.retry_after_s, len(q))
+
+    def submit(self, tid: str, src: int, dst: int, eid: int, ts: float,
+               neg_dst: int = 0) -> int:
+        """Enqueue one edge event; returns the tenant's queue depth.
+        Raises ``RetryAfter`` when the bounded queue is full."""
+        self.check_capacity(tid)
+        q = self._q[tid]
         q.append((int(src), int(dst), int(eid), float(ts), int(neg_dst),
                   self.clock()))
         self.accepted += 1
@@ -207,8 +236,14 @@ class ServingFrontend:
     def __init__(self, mgr, cfg: FrontendConfig | None = None,
                  clock=time.monotonic, record_rounds: bool = False,
                  tracer=None, slo_ms: float | None = None,
-                 slo_objective: float = 0.99):
+                 slo_objective: float = 0.99, journal=None):
         self.mgr = mgr
+        #: optional ``EventJournal`` (serving/journal.py). Armed, every
+        #: accepted ingest is write-ahead journaled BEFORE enqueue and
+        #: ``(client_id, seq)`` retries dedup; disarmed, the hot path
+        #: pays one attribute test (session_lint rule 5).
+        self.journal = journal
+        self.dedups = 0     #: retried ingests absorbed by the window
         self.cfg = cfg or FrontendConfig()
         self.clock = clock
         self.batcher = DeadlineBatcher(self.cfg, clock)
@@ -244,39 +279,80 @@ class ServingFrontend:
 
     # ------------------------------------------------------------- core
     def submit(self, tid: str, src: int, dst: int, eid: int, ts: float,
-               neg_dst: int = 0) -> int:
+               neg_dst: int = 0, *, client_id=None, seq=None) -> int:
+        """Validate + (journal-armed) write-ahead log + enqueue one
+        event. ``(client_id, seq)`` is the client's idempotency stamp:
+        a seq the dedup window already accepted raises
+        ``DuplicateEvent`` (ack, don't re-enqueue); a journal write
+        failure raises ``RetryAfter(reason="journal_io")`` with the seq
+        NOT committed, so the client's retry is accepted."""
         if tid not in self.mgr.tenants:
             raise KeyError(f"unknown tenant {tid!r}")
-        if getattr(self.mgr, "is_quarantined", None) is not None \
-                and self.mgr.is_quarantined(tid):
-            # transient: the guard's auto-restore is pending — suggest
-            # its next-attempt countdown when one is scheduled
-            guard = getattr(self.mgr, "guard", None)
-            view = guard.tenant_view(tid) if guard is not None else {}
-            after = view.get("next_attempt_in_s")
-            raise RetryAfter(tid, (after if after
-                                   else self.cfg.retry_after_s),
-                             0, reason="quarantined")
-        faults = getattr(self.mgr, "_faults", None)
-        if faults is not None:
-            # chaos-only wire-corruption hook (gated: session_lint rule 4)
-            src, dst, eid, ts, neg_dst = faults.on_ingest(
-                tid, src, dst, eid, ts, neg_dst)
-        # ingest validation: corruption past this point would poison the
-        # tenant's resident state, so reject it at the wire (permanent)
-        ts = float(ts)
-        if not math.isfinite(ts):
-            raise ValueError(f"non-finite timestamp {ts!r} for tenant "
-                             f"{tid!r}")
-        src, dst, eid, neg_dst = (int(src), int(dst), int(eid),
-                                  int(neg_dst))
-        if min(src, dst, eid, neg_dst) < 0:
-            raise ValueError(f"negative id in event ({src}, {dst}, "
-                             f"{eid}, neg {neg_dst}) for tenant {tid!r}")
-        # tenants attached straight through the manager (or an
-        # AdmissionController) get their queue on first ingest
-        self.batcher.add_tenant(tid)
-        depth = self.batcher.submit(tid, src, dst, eid, ts, neg_dst)
+        try:
+            if getattr(self.mgr, "is_quarantined", None) is not None \
+                    and self.mgr.is_quarantined(tid):
+                # transient: the guard's auto-restore is pending —
+                # suggest its next-attempt countdown when scheduled
+                guard = getattr(self.mgr, "guard", None)
+                view = guard.tenant_view(tid) if guard is not None else {}
+                after = view.get("next_attempt_in_s")
+                raise RetryAfter(tid, (after if after
+                                       else self.cfg.retry_after_s),
+                                 0, reason="quarantined")
+            faults = getattr(self.mgr, "_faults", None)
+            if faults is not None:
+                # chaos-only wire-corruption hook (gated: lint rule 4)
+                src, dst, eid, ts, neg_dst = faults.on_ingest(
+                    tid, src, dst, eid, ts, neg_dst)
+            # ingest validation: corruption past this point would poison
+            # the tenant's resident state, so reject at the wire
+            ts = float(ts)
+            if not math.isfinite(ts):
+                raise ValueError(f"non-finite timestamp {ts!r} for "
+                                 f"tenant {tid!r}")
+            src, dst, eid, neg_dst = (int(src), int(dst), int(eid),
+                                      int(neg_dst))
+            if min(src, dst, eid, neg_dst) < 0:
+                raise ValueError(f"negative id in event ({src}, {dst}, "
+                                 f"{eid}, neg {neg_dst}) for tenant "
+                                 f"{tid!r}")
+            # tenants attached straight through the manager (or an
+            # AdmissionController) get their queue on first ingest
+            self.batcher.add_tenant(tid)
+            if self.journal is not None:
+                # write-ahead + exactly-once (gated: lint rule 5):
+                # dedup query -> capacity pre-check -> WAL append, in
+                # that order — a duplicate never re-journals, and an
+                # event is only ever on disk once it is guaranteed a
+                # queue slot
+                if client_id is not None and seq is not None \
+                        and self.journal.is_duplicate(tid, client_id,
+                                                      seq):
+                    self.dedups += 1
+                    raise DuplicateEvent(tid, client_id, seq)
+                self.batcher.check_capacity(tid)
+                torn = None
+                if faults is not None:
+                    # chaos-only WAL failure hook (gated: lint rule 4)
+                    torn = faults.on_journal_append(tid)
+                self.journal.append_event(tid, src, dst, eid, ts,
+                                          neg_dst, client_id=client_id,
+                                          seq=seq, torn=torn == "torn")
+            depth = self.batcher.submit(tid, src, dst, eid, ts, neg_dst)
+        except RetryAfter as e:
+            if self.journal is not None and client_id is not None:
+                e.last_seq = self.journal.last_seq(tid, client_id)
+            raise
+        except OSError as e:
+            # the WAL append failed: nothing reached disk, the seq was
+            # never committed to the dedup window — reject transiently
+            # and the client's retry of the SAME seq is accepted
+            err = RetryAfter(tid, self.cfg.retry_after_s,
+                             self.batcher.depths().get(tid, 0),
+                             reason="journal_io")
+            if self.journal is not None and client_id is not None:
+                err.last_seq = self.journal.last_seq(tid, client_id)
+            raise err from e
         self.events += 1
         if self._wake is not None:
             self._wake.set()
@@ -306,6 +382,18 @@ class ServingFrontend:
             return {}
         if self.round_log is not None:
             self.round_log.append(batches)
+        if self.journal is not None:
+            # WAL flush markers (gated: session_lint rule 5), written
+            # BEFORE the state transition so replay can rebuild this
+            # exact batch boundary. A quarantined tenant's batch is
+            # DROPPED by step() — no marker, so its journaled events
+            # stay pending and a post-restore replay re-applies them.
+            qset = getattr(self.mgr, "quarantined", frozenset())
+            for jtid, arr in arrivals.items():
+                if jtid in qset:
+                    continue
+                self.journal.note_flush(jtid, len(arr),
+                                        batches[jtid].src.shape[0])
         if trace is not None:
             t_step = trace.clock()
             trace.add("flush", t_flush, t_step, cat="frontend",
@@ -362,6 +450,9 @@ class ServingFrontend:
             "compile": self.mgr.compile_counters(),
             **({"guard": self.mgr.guard.snapshot()}
                if getattr(self.mgr, "guard", None) is not None else {}),
+            **({"journal": {**self.journal.stats(),
+                            "dedups": self.dedups}}
+               if self.journal is not None else {}),
         }
 
     def metrics_snapshot(self) -> dict:
@@ -387,7 +478,8 @@ class ServingFrontend:
     def handle(self, req: dict) -> dict:
         """One request dict -> one response dict (the wire protocol).
 
-        ops: ``ingest`` (tid, src, dst, eid, ts[, neg_dst]) |
+        ops: ``ingest`` (tid, src, dst, eid, ts[, neg_dst]
+        [, client_id, seq — the exactly-once idempotency stamp]) |
         ``attach`` ([variant][, name][, use_kernels][, params]) |
         ``detach`` (tid) | ``stats`` | ``metrics`` (registry snapshot +
         SLO burn + trace tallies) | ``flush`` (force a round now).
@@ -420,7 +512,9 @@ class ServingFrontend:
                             "detail": f"ingest missing fields {missing}"}
                 depth = self.submit(req["tid"], req["src"], req["dst"],
                                     req.get("eid", 0), req["ts"],
-                                    req.get("neg_dst", 0))
+                                    req.get("neg_dst", 0),
+                                    client_id=req.get("client_id"),
+                                    seq=req.get("seq"))
                 return {"ok": True, "queued": depth}
             if op == "attach":
                 tid = self.attach(req.get("variant"),
@@ -442,11 +536,20 @@ class ServingFrontend:
                 return {"ok": True, "flushed": sorted(outs)}
             return {"ok": False, "error": "unknown_op", "op": op,
                     "transient": False}
+        except DuplicateEvent as e:
+            # exactly-once ack: the event is already journaled (and
+            # possibly applied) — acknowledge, never re-enqueue
+            return {"ok": True, "dedup": True, "tid": e.tid,
+                    "client_id": e.client_id, "seq": e.seq}
         except RetryAfter as e:
-            return {"ok": False, "error": "retry_after",
+            resp = {"ok": False, "error": "retry_after",
                     "transient": True, "reason": e.reason,
                     "retry_after_s": e.seconds, "tid": e.tid,
                     "depth": e.depth}
+            if e.last_seq is not None:
+                # resume hint: the client's highest accepted seq
+                resp["last_seq"] = e.last_seq
+            return resp
         except KeyError as e:
             return {"ok": False, "error": "unknown_tenant",
                     "transient": False, "detail": str(e)}

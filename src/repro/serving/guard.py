@@ -105,7 +105,8 @@ class FleetGuard:
                  writer=None, clock=time.monotonic, max_restores: int = 3,
                  backoff_s: float = 1.0, backoff_cap_s: float = 30.0,
                  quarantine_slo_burn: float = 0.0, watchdog_s: float = 0.0,
-                 check_every: int = 1, degrade_after: int = 1):
+                 check_every: int = 1, degrade_after: int = 1,
+                 journal=None):
         if max_restores < 1:
             raise ValueError(f"max_restores must be >= 1, got "
                              f"{max_restores}")
@@ -122,6 +123,12 @@ class FleetGuard:
         #: the fleet's background snapshot writer (joined per tenant
         #: before a restore so the newest write is committed) or None.
         self.writer = writer
+        #: the fleet's ``EventJournal`` (serving/journal.py) or None.
+        #: Armed, an auto-restore is LOSSLESS: after the snapshot state
+        #: reloads, the journal suffix past its cursor replays through
+        #: the normal step pipeline, so the tenant resumes bitwise
+        #: where it left off — post-snapshot events included.
+        self.journal = journal
         self.clock = clock
         self.max_restores = int(max_restores)
         self.backoff_s = float(backoff_s)
@@ -245,16 +252,18 @@ class FleetGuard:
     def _attempt_restore(self, tid: str, rec: dict) -> None:
         """One restore attempt: join the tenant's in-flight snapshot
         write, reload its newest VALID snapshot in place (when a root is
-        configured), and count success only if the resulting state
-        passes the finite sentinel. Failure backs off exponentially
-        (capped); ``max_restores`` failures evict permanently."""
+        configured), replay the journal suffix past that snapshot's
+        cursor (when a journal is armed — the lossless half), and count
+        success only if the resulting state passes the finite sentinel.
+        Failure backs off exponentially (capped); ``max_restores``
+        failures evict permanently."""
         from repro.distributed import checkpoint as ckpt
 
         mgr = self.mgr
         t0 = self.clock()
         rec["attempts"] += 1
         rec["attempt_times"].append(t0)
-        err, healthy = None, False
+        err, healthy, replayed = None, False, 0
         try:
             if self.snapshot_root is not None:
                 if self.writer is not None:
@@ -262,8 +271,25 @@ class FleetGuard:
                         self.writer.join(tid)
                     except Exception as e:  # a failed write: older steps
                         err = e             # may still restore below
-                from repro.serving.cluster import restore_tenant_state
-                restore_tenant_state(mgr, self.snapshot_root, tid)
+                from repro.serving import cluster
+                used = cluster.restore_tenant_state(
+                    mgr, self.snapshot_root, tid)
+                if self.journal is not None:
+                    # lossless resume: replay every journaled flush past
+                    # the RESTORED step's cursor through the normal step
+                    # pipeline (mgr.step, not guarded_step — no guard
+                    # recursion). The lane must serve during replay, so
+                    # the quarantine lifts for it and re-arms after; the
+                    # sentinel below decides whether it stays lifted.
+                    cur = cluster.snapshot_meta(
+                        self.snapshot_root, tid, step=used).get("journal")
+                    if cur is not None:
+                        mgr.unquarantine(tid)
+                        try:
+                            res = self.journal.replay(tid, cur, mgr.step)
+                        finally:
+                            mgr.quarantine(tid)
+                        replayed = res.rounds
             healthy = self._tenant_healthy(tid)
         except (FileNotFoundError, *ckpt.CORRUPTION_ERRORS) as e:
             err = e
@@ -273,7 +299,7 @@ class FleetGuard:
             self.restores += 1
             self.obs.counter("guard.restores").inc()
             self._span("restore", t0, tenant=tid,
-                       attempts=rec["attempts"])
+                       attempts=rec["attempts"], replayed=replayed)
             return
         if rec["attempts"] >= self.max_restores:
             self._evict(tid, rec, err)

@@ -413,6 +413,45 @@ def test_frontend_detach_flushes_pending(setup):
     assert fe.rounds == 1
 
 
+def test_journaled_ingest_wire_contract(setup, tmp_path):
+    """The exactly-once wire contract (docs/SERVING.md): a retried
+    ingest with the same ``(client_id, seq)`` acks ``dedup: true``
+    without re-enqueueing, ``retry_after`` carries ``last_seq`` so an
+    at-least-once client knows where to resume, and ``stats`` exposes
+    the journal block."""
+    from repro.serving.journal import EventJournal
+
+    g, cfg, params, ef = setup
+    mgr = SessionManager(params, ef, model=cfg, reserve=True)
+    a = mgr.add_tenant()
+    clk = FakeClock()
+    journal = EventJournal(str(tmp_path), clock=clk)
+    fe = ServingFrontend(mgr, FrontendConfig(max_wait_s=10.0, max_rows=64,
+                                             queue_rows=8),
+                         clock=clk, journal=journal)
+
+    req = {"op": "ingest", "tid": a, "src": int(g.src[0]),
+           "dst": int(g.dst[0]), "eid": 0, "ts": float(g.ts[0]),
+           "client_id": "c0", "seq": 0}
+    assert fe.handle(dict(req))["ok"] is True
+    dup = fe.handle(dict(req))
+    assert dup == {"ok": True, "dedup": True, "tid": a,
+                   "client_id": "c0", "seq": 0}
+    assert fe.batcher.depths()[a] == 1          # not re-enqueued
+    assert fe.dedups == 1
+
+    for i in range(1, 8):                       # fill the queue
+        fe.handle({**req, "eid": i, "seq": i})
+    r = fe.handle({**req, "eid": 8, "seq": 8})
+    assert r["error"] == "retry_after"
+    assert r["last_seq"] == 7                   # seq 8 was NOT accepted
+    assert not journal.is_duplicate(a, "c0", 8)
+
+    st = fe.stats()
+    assert st["journal"]["dedups"] == 1
+    assert st["journal"]["appends"] == 8
+
+
 def test_jsonl_server_roundtrip(setup):
     """The wire transport: ingest / stats / backpressure / live attach
     over newline-delimited JSON on an ephemeral port."""

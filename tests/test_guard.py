@@ -129,6 +129,62 @@ def test_auto_restore_resumes_bitwise_from_snapshot(small_graph, tmp_path):
     _assert_state_equal(mgr.state_of(t1), solo.state_of(ts), "resume")
 
 
+def test_auto_restore_with_journal_is_lossless(small_graph, tmp_path):
+    """With a journal armed, auto-restore replays the suffix past the
+    snapshot cursor — the rounds the tenant missed while quarantined
+    (dropped by ``SessionManager.step``) AND the round that poisoned it
+    — so the recovered tenant is bitwise identical to an unfaulted twin
+    that applied every round, not just bitwise-at-the-snapshot."""
+    from repro.serving.journal import EventJournal
+
+    g = small_graph
+    root = str(tmp_path / "snaps")
+    journal = EventJournal(str(tmp_path / "wal"))
+    mgr = _make_mgr(g)
+    t0, t1 = mgr.add_tenant(), mgr.add_tenant()
+    clock = FakeClock()
+    guard = FleetGuard(mgr, snapshot_root=root, clock=clock, backoff_s=1.0,
+                       journal=journal)
+
+    r0, r1 = _rounds(g, 0, n=6), _rounds(g, 1, n=6)
+    for k in range(2):
+        journal.append_batch(t1, r1[k])
+        guard.step({t0: r0[k], t1: r1[k]})
+    mgr.sync()
+    snapshot_tenant(mgr, t1, root, step=2,
+                    extra_meta={"journal": journal.cursor(t1)})
+
+    _poison(mgr, t1)
+    journal.append_batch(t1, r1[2])
+    guard.step({t0: r0[2], t1: r1[2]})          # detect + quarantine
+    assert mgr.is_quarantined(t1)
+    journal.append_batch(t1, r1[3])
+    guard.step({t0: r0[3], t1: r1[3]})          # outage round: dropped
+    clock.advance(1.0)
+    journal.append_batch(t1, r1[4])
+    guard.step({t0: r0[4], t1: r1[4]})          # restore + replay 2..4
+    mgr.sync()
+    assert not mgr.is_quarantined(t1)
+    assert guard.restores == 1
+    journal.append_batch(t1, r1[5])
+    guard.step({t0: r0[5], t1: r1[5]})          # healthy again: live
+    mgr.sync()
+
+    twin = _make_mgr(g)
+    tw = twin.add_tenant()
+    for k in range(6):
+        twin.step({tw: r1[k]})
+    twin.sync()
+    _assert_state_equal(mgr.state_of(t1), twin.state_of(tw), "lossless")
+    # the survivor never saw the episode
+    solo = _make_mgr(g)
+    ts = solo.add_tenant()
+    for k in range(6):
+        solo.step({ts: r0[k]})
+    solo.sync()
+    _assert_state_equal(mgr.state_of(t0), solo.state_of(ts), "survivor")
+
+
 def test_backoff_schedule_and_eviction_are_deterministic(small_graph):
     """With no snapshot root a NaN tenant can never heal: restore
     attempts fire exactly at the capped-doubling backoff marks on the

@@ -1,0 +1,427 @@
+"""Crash-consistency tests for the durable event journal (tier 1).
+
+Covers the recovery contract end to end: torn tails truncated on open,
+crc-corrupt records stopping replay with a warning (and the restore path
+falling back to an older snapshot whose longer replay suffix is still
+bitwise), crash-mid-truncation leaving a replayable prefix, segment
+rotation boundaries, kill-and-recover bitwise identity through
+``cluster.restore_tenant(journal=...)``, duplicate-ingest idempotency,
+and the snapshot-GC floor that anchors un-truncated journal records.
+"""
+
+import os
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import pipeline as pl, tgn
+from repro.data import temporal_graph as tgd
+from repro.serving import cluster
+from repro.serving.faults import FakeClock, Fault, FaultInjector
+from repro.serving.frontend import (
+    DuplicateEvent,
+    FrontendConfig,
+    RetryAfter,
+    ServingFrontend,
+)
+from repro.serving.journal import EventJournal, _HEADER
+from repro.serving.session import SessionManager
+
+
+@pytest.fixture(scope="module")
+def small_graph():
+    return tgd.wikipedia_like(n_edges=400)
+
+
+def _dims(g, f=16):
+    return dict(n_nodes=g.cfg.n_nodes, n_edges=g.n_edges, f_edge=172,
+                f_mem=f, f_time=f, f_emb=f, m_r=10)
+
+
+def _make_mgr(g):
+    cfg = pl.variant_config("sat+lut+np4", **_dims(g))
+    params = tgn.init_params(jax.random.key(0), cfg)
+    return SessionManager(params, jnp.asarray(g.edge_feats), model=cfg)
+
+
+def _events(g, n, seed=0):
+    rng = np.random.RandomState(seed)
+    src = rng.randint(0, g.cfg.n_nodes, n)
+    dst = rng.randint(0, g.cfg.n_nodes, n)
+    return [(int(src[i]), int(dst[i]), i, float(i) * 0.5, 0)
+            for i in range(n)]
+
+
+def _frontend(mgr, journal=None, clock=None):
+    cfg = FrontendConfig(max_rows=8, pad_quantum=8, max_wait_s=0.001)
+    return ServingFrontend(mgr, cfg, clock=clock or FakeClock(),
+                           journal=journal)
+
+
+def _assert_state_equal(a, b, msg=""):
+    for f in a._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, f)), np.asarray(getattr(b, f)),
+            err_msg=f"{msg}: field {f}")
+
+
+def _run(mgr, fe, tid, events, start=0, client="c"):
+    """Feed events in rounds of 8 through the frontend."""
+    for i, e in enumerate(events, start=start):
+        fe.submit(tid, *e, client_id=client, seq=i)
+        if (i + 1) % 8 == 0:
+            fe.pump(force=True)
+
+
+# ---------------------------------------------------------------------------
+# journal primitives
+# ---------------------------------------------------------------------------
+
+def test_append_cursor_reopen(tmp_path):
+    j = EventJournal(str(tmp_path))
+    for i in range(10):
+        j.append_event("t", i, i + 1, i, float(i), client_id="c", seq=i)
+    j.note_flush("t", 8, 8)
+    cur = j.cursor("t")
+    assert cur["events"] == 8
+    assert j.last_seq("t", "c") == 9
+    j.close()
+
+    j2 = EventJournal(str(tmp_path))
+    cur2 = j2.cursor("t")
+    assert cur2 == cur
+    assert j2.last_seq("t", "c") == 9
+    assert j2.is_duplicate("t", "c", 9)
+    assert not j2.is_duplicate("t", "c", 10)
+
+
+def test_dedup_window_semantics(tmp_path):
+    j = EventJournal(str(tmp_path), dedup_window=4)
+    for i in range(10):
+        assert not j.is_duplicate("t", "c", i)
+        j.append_event("t", 0, 1, i, 0.0, client_id="c", seq=i)
+    # in-window duplicates
+    for i in range(6, 10):
+        assert j.is_duplicate("t", "c", i)
+    # below the window: conservatively treated as duplicates
+    assert j.is_duplicate("t", "c", 0)
+    assert j.is_duplicate("t", "c", 5)
+    assert not j.is_duplicate("t", "c", 10)
+
+
+def test_torn_tail_truncated_on_open(tmp_path):
+    j = EventJournal(str(tmp_path))
+    for i in range(4):
+        j.append_event("t", i, i + 1, i, float(i))
+    with pytest.raises(OSError):
+        j.append_event("t", 9, 9, 99, 9.0, torn=True)
+    # journal is wedged after a torn write, like a crashed process
+    with pytest.raises(OSError):
+        j.append_event("t", 9, 9, 100, 9.0)
+    j.close()
+
+    j2 = EventJournal(str(tmp_path))
+    with pytest.warns(UserWarning, match="torn"):
+        j2.log_for("t")  # tenant logs scan (and truncate) lazily
+    recs = [r for r in j2.records("t", 0, 0) if r is not None]
+    assert [r["i"] for r in recs if r["k"] == "ev"] == [0, 1, 2, 3]
+    # the log accepts appends again at the truncated tail
+    j2.append_event("t", 5, 6, 4, 4.0)
+    recs = [r for r in j2.records("t", 0, 0) if r is not None]
+    assert [r["i"] for r in recs if r["k"] == "ev"] == [0, 1, 2, 3, 4]
+
+
+def test_crc_corrupt_record_stops_replay(tmp_path):
+    j = EventJournal(str(tmp_path))
+    offs = []
+    for i in range(6):
+        j.append_event("t", i, i + 1, i, float(i))
+        offs.append(j.cursor("t"))
+    j.close()
+
+    # flip a payload byte inside record 3
+    seg = os.path.join(str(tmp_path), "t", "seg_00000000.wal")
+    with open(seg, "r+b") as f:
+        data = bytearray(f.read())
+    # locate record 3's payload start by walking frames
+    off = 0
+    for _ in range(3):
+        n, _ = _HEADER.unpack_from(data, off)
+        off += _HEADER.size + n
+    data[off + _HEADER.size + 2] ^= 0xFF
+    with open(seg, "wb") as f:
+        f.write(bytes(data))
+
+    j2 = EventJournal(str(tmp_path))
+    with pytest.warns(UserWarning, match="corrupt"):
+        j2.log_for("t")
+    got = []
+    with pytest.warns(UserWarning, match="corrupt"):
+        for r in j2.records("t", 0, 0):
+            if r is None:
+                break
+            got.append(r["i"])
+    assert got == [0, 1, 2]
+
+
+def test_segment_rotation_boundary_replay(tmp_path):
+    j = EventJournal(str(tmp_path), segment_bytes=128)
+    for i in range(12):
+        j.append_event("t", i, i + 1, i, float(i), client_id="c", seq=i)
+    log = j.log_for("t")
+    assert len(log.segments()) > 1
+    j.close()
+
+    j2 = EventJournal(str(tmp_path), segment_bytes=128)
+    recs = [r for r in j2.records("t", 0, 0) if r is not None]
+    assert [r["i"] for r in recs if r["k"] == "ev"] == list(range(12))
+    assert j2.last_seq("t", "c") == 11
+
+
+def test_truncate_upto_and_crash_mid_truncation(tmp_path):
+    j = EventJournal(str(tmp_path), segment_bytes=128)
+    for i in range(24):
+        j.append_event("t", i, i + 1, i, float(i))
+    j.note_flush("t", 24, 8)
+    cur = j.cursor("t")
+    log = j.log_for("t")
+    segs = log.segments()
+    assert cur["segment"] >= 2 and len(segs) >= 3
+
+    # crash mid-truncation: only the oldest segment got removed
+    victim = os.path.join(str(tmp_path), "t", "seg_00000000.wal")
+    os.remove(victim)
+    j.close()
+
+    # reopen: scan starts at the oldest *present* segment; the cursor
+    # still replays cleanly because it points past the removed prefix
+    j2 = EventJournal(str(tmp_path), segment_bytes=128)
+    recs = [r for r in j2.records("t", cur["segment"], cur["offset"])
+            if r is not None]
+    assert recs == []  # nothing after the flush cursor: fully applied
+
+    # finish the truncation: idempotent, removes the remaining old segs
+    removed = j2.truncate_upto("t", cur)
+    assert removed >= 1
+    left = j2.log_for("t").segments()
+    assert min(left) == cur["segment"]
+
+
+# ---------------------------------------------------------------------------
+# end-to-end recovery
+# ---------------------------------------------------------------------------
+
+def test_kill_and_recover_bitwise(small_graph, tmp_path):
+    g = small_graph
+    ev = _events(g, 48)
+    jroot, sroot = str(tmp_path / "wal"), str(tmp_path / "snaps")
+
+    # interrupted run: snapshot after 24 events, crash after 32
+    j = EventJournal(jroot, fsync_s=0.005, clock=FakeClock())
+    mgr = _make_mgr(g)
+    t0 = mgr.add_tenant(name="t0")
+    fe = _frontend(mgr, journal=j)
+    for i, e in enumerate(ev[:32]):
+        fe.submit(t0, *e, client_id="c", seq=i)
+        if (i + 1) % 8 == 0:
+            fe.pump(force=True)
+        if (i + 1) == 24:
+            mgr.sync()
+            cluster.snapshot_tenant(mgr, t0, sroot, step=3,
+                                    extra_meta={"journal": j.cursor(t0)})
+    mgr.sync()
+    crashed = mgr.state_of(t0)
+    # no close(): simulate the process dying with the fd open
+
+    j2 = EventJournal(jroot)
+    mgr2 = _make_mgr(g)
+    new = cluster.restore_tenant(mgr2, sroot, "t0", journal=j2)
+    assert j2.last_replay.rounds == 1
+    assert j2.last_replay.events == 8
+    assert not j2.last_replay.corrupt
+    mgr2.sync()
+    _assert_state_equal(mgr2.state_of(new), crashed, "post-replay")
+
+    # continue with the remaining events; must match an uninterrupted twin
+    fe2 = _frontend(mgr2, journal=j2)
+    _run(mgr2, fe2, new, ev[32:], start=32)
+    mgr2.sync()
+
+    mgrT = _make_mgr(g)
+    tT = mgrT.add_tenant(name="tw")
+    feT = _frontend(mgrT)
+    for i, e in enumerate(ev):
+        feT.submit(tT, *e)
+        if (i + 1) % 8 == 0:
+            feT.pump(force=True)
+    mgrT.sync()
+    _assert_state_equal(mgr2.state_of(new), mgrT.state_of(tT), "vs twin")
+
+
+def test_corrupt_journal_falls_back_one_snapshot(small_graph, tmp_path):
+    """Corruption after snapshot B's cursor: replay from A's older cursor
+    still reaches every intact record before the corruption point."""
+    g = small_graph
+    ev = _events(g, 32)
+    jroot, sroot = str(tmp_path / "wal"), str(tmp_path / "snaps")
+
+    j = EventJournal(jroot)
+    mgr = _make_mgr(g)
+    t0 = mgr.add_tenant(name="t0")
+    fe = _frontend(mgr, journal=j)
+    states = {}
+    for i, e in enumerate(ev):
+        fe.submit(t0, *e, client_id="c", seq=i)
+        if (i + 1) % 8 == 0:
+            fe.pump(force=True)
+        if (i + 1) in (8, 16):
+            mgr.sync()
+            step = (i + 1) // 8
+            cluster.snapshot_tenant(mgr, t0, sroot, step=step,
+                                    extra_meta={"journal": j.cursor(t0)})
+            states[step] = mgr.state_of(t0)
+    mgr.sync()
+    j.close()
+
+    # corrupt the journal just past snapshot 2's cursor so its replay
+    # hits the bad record immediately; snapshot 1 replays 8 clean events
+    cur2 = None
+    meta2 = cluster.snapshot_meta(sroot, "t0", step=2)
+    cur2 = meta2["journal"]
+    seg = os.path.join(jroot, "t0", f"seg_{cur2['segment']:08d}.wal")
+    with open(seg, "r+b") as f:
+        f.seek(cur2["offset"] + _HEADER.size + 2)
+        b = f.read(1)
+        f.seek(cur2["offset"] + _HEADER.size + 2)
+        f.write(bytes([b[0] ^ 0xFF]))
+
+    j2 = EventJournal(jroot)
+    with pytest.warns(UserWarning, match="corrupt"):
+        j2.log_for("t0")
+    mgr2 = _make_mgr(g)
+    new = mgr2.add_tenant(name="t0")
+    cluster.restore_tenant_state(mgr2, sroot, new, step=1)
+    with pytest.warns(UserWarning, match="corrupt"):
+        res = j2.replay("t0", cluster.snapshot_meta(sroot, "t0", step=1)["journal"],
+                        mgr2.step, as_tid=new)
+    assert res.corrupt
+    assert res.rounds == 1  # events 8..15 replayed before the bad record
+    mgr2.sync()
+    _assert_state_equal(mgr2.state_of(new), states[2],
+                        "fallback snapshot + longer replay suffix")
+
+
+def test_duplicate_ingest_fuzz_bitwise(small_graph, tmp_path):
+    g = small_graph
+    ev = _events(g, 24)
+
+    jD = EventJournal(str(tmp_path / "wal"))
+    mgrD = _make_mgr(g)
+    tD = mgrD.add_tenant(name="t0")
+    feD = _frontend(mgrD, journal=jD)
+    for i, e in enumerate(ev):
+        feD.submit(tD, *e, client_id="c", seq=i)
+        with pytest.raises(DuplicateEvent):
+            feD.submit(tD, *e, client_id="c", seq=i)
+        if (i + 1) % 8 == 0:
+            feD.pump(force=True)
+    mgrD.sync()
+    assert feD.dedups == 24
+
+    mgrO = _make_mgr(g)
+    tO = mgrO.add_tenant(name="t0")
+    feO = _frontend(mgrO)
+    for i, e in enumerate(ev):
+        feO.submit(tO, *e)
+        if (i + 1) % 8 == 0:
+            feO.pump(force=True)
+    mgrO.sync()
+    _assert_state_equal(mgrD.state_of(tD), mgrO.state_of(tO), "dup fuzz")
+
+
+def test_dedup_wire_ack_and_retry_after_last_seq(small_graph, tmp_path):
+    g = small_graph
+    j = EventJournal(str(tmp_path))
+    mgr = _make_mgr(g)
+    t0 = mgr.add_tenant(name="t0")
+    cfg = FrontendConfig(max_rows=8, pad_quantum=8, max_wait_s=0.001,
+                         queue_rows=16)
+    fe = ServingFrontend(mgr, cfg, clock=FakeClock(), journal=j)
+    e = _events(g, 1)[0]
+    fe.submit(t0, *e, client_id="c", seq=0)
+    r = fe.handle({"op": "ingest", "tid": t0, "src": e[0], "dst": e[1],
+                   "eid": e[2], "ts": e[3], "client_id": "c", "seq": 0})
+    assert r == {"ok": True, "dedup": True, "tid": t0,
+                 "client_id": "c", "seq": 0}
+
+    # queue full -> retry_after carries last_seq for client resync
+    for i, ee in enumerate(_events(g, 300, seed=1), start=1):
+        try:
+            fe.submit(t0, *ee, client_id="c", seq=i)
+        except RetryAfter as exc:
+            assert exc.last_seq == i - 1
+            r = fe.handle({"op": "ingest", "tid": t0, "src": ee[0],
+                           "dst": ee[1], "eid": ee[2], "ts": ee[3],
+                           "client_id": "c", "seq": i})
+            assert r["error"] == "retry_after" and r["last_seq"] == i - 1
+            break
+    else:
+        pytest.fail("queue never filled")
+
+
+def test_journal_io_fault_then_retry_succeeds(small_graph, tmp_path):
+    g = small_graph
+    j = EventJournal(str(tmp_path))
+    mgr = _make_mgr(g)
+    t0 = mgr.add_tenant(name="t0")
+    mgr.set_faults(FaultInjector([Fault(kind="journal_io", tenant=t0,
+                                        at=0, count=1)]))
+    fe = _frontend(mgr, journal=j)
+    e = _events(g, 1)[0]
+    with pytest.raises(RetryAfter) as exc:
+        fe.submit(t0, *e, client_id="c", seq=0)
+    assert exc.value.reason == "journal_io"
+    assert exc.value.last_seq is None  # seq 0 was NOT committed
+    assert not j.is_duplicate(t0, "c", 0)
+    # at-least-once client retries the same (client_id, seq): accepted once
+    fe.submit(t0, *e, client_id="c", seq=0)
+    assert j.last_seq(t0, "c") == 0
+    with pytest.raises(DuplicateEvent):
+        fe.submit(t0, *e, client_id="c", seq=0)
+
+
+def test_gc_floor_protects_anchor_snapshot(small_graph, tmp_path):
+    g = small_graph
+    ev = _events(g, 40)
+    jroot, sroot = str(tmp_path / "wal"), str(tmp_path / "snaps")
+
+    j = EventJournal(jroot, segment_bytes=256)
+    mgr = _make_mgr(g)
+    t0 = mgr.add_tenant(name="t0")
+    fe = _frontend(mgr, journal=j)
+    floor = None
+    for i, e in enumerate(ev):
+        fe.submit(t0, *e, client_id="c", seq=i)
+        if (i + 1) % 8 == 0:
+            fe.pump(force=True)
+            mgr.sync()
+            step = (i + 1) // 8
+            cluster.snapshot_tenant(mgr, t0, sroot, step=step, keep=2,
+                                    extra_meta={"journal": j.cursor(t0)},
+                                    keep_floor=floor)
+            if step == 2:
+                anchor = cluster.truncate_journal(j, sroot, t0)
+                assert anchor is not None
+                floor = anchor
+
+    steps = cluster.ckpt.list_steps(os.path.join(sroot, t0))
+    # the anchor snapshot survives GC even with keep=2
+    assert floor in steps
+    # journal records at/after the anchor cursor are still replayable
+    cur = cluster.snapshot_meta(sroot, t0, step=floor)["journal"]
+    recs = list(j.records(t0, cur["segment"], cur["offset"]))
+    assert all(r is not None for r in recs)
+    j.close()

@@ -25,6 +25,13 @@ recovery contract end to end:
   ``metrics_snapshot()["guard"]`` and as ``cat="guard"`` spans in the
   round tracer.
 
+A final kill-and-recover leg runs a JOURNALED tenant on the same fake
+clock, abandons the process mid-stream (no close, no final fsync), and
+recovers snapshot + journal-replay into a fresh fleet: the continued
+run must be bitwise identical to an uninterrupted twin (the fault-plan
+leg stays journal-free — replay advances the injector's round cursor,
+so round-indexed fault plans and journal replay don't mix).
+
 Everything — deadline batcher, guard backoff, fault plan, tracer — runs
 on ONE shared fake clock, which is what makes the chaos run replayable.
 """
@@ -166,7 +173,71 @@ def main() -> int:
                    "watchdog"} <= guard_spans
               and fe.stats()["guard"] == gs)
 
-    ok = detect_ok and sick_ok and degrade_ok and bitwise_ok and obs_ok
+    # kill-and-recover: a journaled tenant on the SAME fake clock dies
+    # mid-stream and comes back bitwise through snapshot + replay
+    from repro.serving import cluster
+    from repro.serving.journal import EventJournal
+
+    kroot = tempfile.mkdtemp(prefix="chaos-wal-")
+    jdir, sdir = f"{kroot}/wal", f"{kroot}/snaps"
+    KR, KILL, SNAP = 8, 5, 3
+    journal = EventJournal(jdir, fsync_s=0.05, clock=clock)
+    km = make_fleet()
+    kt = km.add_tenant(name="kt")
+    kfe = ServingFrontend(
+        mgr=km, cfg=FrontendConfig(max_wait_s=0.005, max_rows=8,
+                                   queue_rows=256, pad_quantum=8),
+        clock=clock, journal=journal)
+    ev = [(int(g.src[i]), int(g.dst[i]), i, float(g.ts[i]),
+           int(g.dst[(i + 3) % 500])) for i in range(KR * ROWS)]
+    for r in range(KILL):
+        for i in range(r * ROWS, (r + 1) * ROWS):
+            kfe.submit(kt, *ev[i], client_id="c0", seq=i)
+        clock.advance(0.006)
+        kfe.pump()
+        if r + 1 == SNAP:
+            km.sync()
+            cluster.snapshot_tenant(km, kt, sdir, step=SNAP,
+                                    extra_meta={"journal":
+                                                journal.cursor(kt)})
+    km.sync()
+    del kfe, km                                 # killed: fd abandoned
+
+    j2 = EventJournal(jdir, fsync_s=0.05, clock=clock)
+    km2 = make_fleet()
+    knew = cluster.restore_tenant(km2, sdir, "kt", journal=j2)
+    kfe2 = ServingFrontend(
+        mgr=km2, cfg=FrontendConfig(max_wait_s=0.005, max_rows=8,
+                                    queue_rows=256, pad_quantum=8),
+        clock=clock, journal=j2)
+    for r in range(KILL, KR):
+        for i in range(r * ROWS, (r + 1) * ROWS):
+            kfe2.submit(knew, *ev[i], client_id="c0", seq=i)
+        clock.advance(0.006)
+        kfe2.pump()
+    km2.sync()
+
+    twin = make_fleet()
+    tw = twin.add_tenant()
+    tfe = ServingFrontend(
+        mgr=twin, cfg=FrontendConfig(max_wait_s=0.005, max_rows=8,
+                                     queue_rows=256, pad_quantum=8),
+        clock=clock, journal=None)
+    for r in range(KR):
+        for i in range(r * ROWS, (r + 1) * ROWS):
+            tfe.submit(tw, *ev[i])
+        clock.advance(0.006)
+        tfe.pump()
+    twin.sync()
+    ka, kb = km2.state_of(knew), twin.state_of(tw)
+    recover_ok = (j2.last_replay.rounds == KILL - SNAP
+                  and not j2.last_replay.corrupt
+                  and all(np.array_equal(np.asarray(x), np.asarray(y))
+                          for x, y in zip(jax.tree.leaves(ka),
+                                          jax.tree.leaves(kb))))
+
+    ok = (detect_ok and sick_ok and degrade_ok and bitwise_ok and obs_ok
+          and recover_ok)
     print(f"chaos-smoke: {ROUNDS} rounds, faults fired {fired}, "
           f"guard {gs} -> {'OK' if detect_ok else 'FAIL'}")
     print(f"chaos-smoke: sick tenant restored "
@@ -178,6 +249,9 @@ def main() -> int:
     print(f"chaos-smoke: survivor bitwise vs solo replay -> "
           f"{'OK' if bitwise_ok else 'FAIL'}; guard spans "
           f"{sorted(guard_spans)} -> {'OK' if obs_ok else 'FAIL'}")
+    print(f"chaos-smoke: kill@{KILL}/{KR} + journal recover "
+          f"(replayed {j2.last_replay.rounds}) bitwise vs twin -> "
+          f"{'OK' if recover_ok else 'FAIL'}")
     if not ok:
         print(f"chaos-smoke: view={view} counters={counters} "
               f"compile={c} fired={injector.fired}", file=sys.stderr)

@@ -45,6 +45,7 @@ FALLBACK_TESTS = (
     "tests/test_session.py",
     "tests/test_obs.py",
     "tests/test_guard.py",
+    "tests/test_journal.py",
 )
 
 

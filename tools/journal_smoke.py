@@ -1,0 +1,165 @@
+#!/usr/bin/env python
+"""Durable-journal smoke (make journal-smoke, wired into make lint).
+
+Boots a journaled frontend, streams client-stamped events through it,
+KILLS the process mid-stream (the journal fd is simply abandoned, the
+last appends unfsynced), then recovers into a fresh fleet and asserts
+the lossless-recovery contract end to end:
+
+- recovery = snapshot + replay: ``cluster.restore_tenant(journal=...)``
+  reloads the newest snapshot and re-applies the journal suffix through
+  the normal batcher -> step pipeline, so the recovered tenant is
+  BITWISE identical to the state at the kill point;
+- the recovered run, continued to completion, is BITWISE identical to
+  an uninterrupted twin that never crashed;
+- retried ingests are idempotent: a duplicate-fuzz leg submits EVERY
+  event twice (same ``client_id``/``seq``) and lands on the same
+  trajectory as a send-once run, with every duplicate acked
+  ``dedup: true`` and never re-enqueued;
+- recovery is quiet: after the restore round the recovered fleet's
+  ``relayouts`` counter is FROZEN, and every completed round is still
+  ONE compiled launch (``launches_per_round == {1}``).
+
+Everything runs on one shared fake clock, which is what makes the kill
+point and the replay deterministic.
+"""
+from __future__ import annotations
+
+import sys
+import tempfile
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _bitwise(a, b) -> bool:
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def main() -> int:
+    from repro.core import pipeline as pl, tgn
+    from repro.data import temporal_graph as tgd
+    from repro.serving import cluster
+    from repro.serving.faults import FakeClock
+    from repro.serving.frontend import (DuplicateEvent, FrontendConfig,
+                                        ServingFrontend)
+    from repro.serving.journal import EventJournal
+    from repro.serving.session import SessionManager
+
+    g = tgd.wikipedia_like(n_edges=500)
+    cfg = pl.variant_config("sat+lut+np4", n_nodes=g.cfg.n_nodes,
+                            n_edges=g.n_edges, f_edge=172, f_mem=16,
+                            f_time=16, f_emb=16, m_r=10)
+    params = tgn.init_params(jax.random.key(0), cfg)
+
+    def make_fleet():
+        return SessionManager(params, jnp.asarray(g.edge_feats), model=cfg)
+
+    def make_frontend(mgr, journal, clock):
+        return ServingFrontend(
+            mgr, FrontendConfig(max_wait_s=0.005, max_rows=8,
+                                queue_rows=256, pad_quantum=8),
+            clock=clock, journal=journal)
+
+    ROWS, ROUNDS, KILL_AT, SNAP_AT = 8, 10, 6, 4
+    EV = [(int(g.src[i]), int(g.dst[i]), i, float(g.ts[i]),
+           int(g.dst[(i + 3) % 500])) for i in range(ROWS * ROUNDS)]
+    root = tempfile.mkdtemp(prefix="journal-smoke-")
+    jroot, sroot = os.path.join(root, "wal"), os.path.join(root, "snaps")
+
+    # ---- leg 1: ingest, snapshot, KILL mid-stream ----------------------
+    clock = FakeClock()
+    journal = EventJournal(jroot, fsync_s=0.05, clock=clock)
+    mgr = make_fleet()
+    t0 = mgr.add_tenant(name="t0")
+    fe = make_frontend(mgr, journal, clock)
+    for r in range(KILL_AT):
+        for i in range(r * ROWS, (r + 1) * ROWS):
+            fe.submit(t0, *EV[i], client_id="c0", seq=i)
+        clock.advance(0.006)
+        assert fe.pump(), "deadline flush did not fire"
+        if r + 1 == SNAP_AT:
+            mgr.sync()
+            cluster.snapshot_tenant(mgr, t0, sroot, step=SNAP_AT,
+                                    extra_meta={"journal":
+                                                journal.cursor(t0)})
+    mgr.sync()
+    at_kill = mgr.state_of(t0)
+    del fe, mgr  # the process dies here: no close(), no final fsync
+
+    # ---- leg 2: recover = snapshot + replay, then run to completion ----
+    j2 = EventJournal(jroot, fsync_s=0.05, clock=clock)
+    mgr2 = make_fleet()
+    new = cluster.restore_tenant(mgr2, sroot, "t0", journal=j2)
+    res = j2.last_replay
+    mgr2.sync()
+    recover_ok = (res is not None and not res.corrupt
+                  and res.rounds == KILL_AT - SNAP_AT
+                  and _bitwise(mgr2.state_of(new), at_kill))
+
+    fe2 = make_frontend(mgr2, j2, clock)
+    c0 = mgr2.compile_counters()           # post-replay layout baseline
+    for r in range(KILL_AT, ROUNDS):
+        for i in range(r * ROWS, (r + 1) * ROWS):
+            fe2.submit(new, *EV[i], client_id="c0", seq=i)
+        clock.advance(0.006)
+        assert fe2.pump(), "deadline flush did not fire"
+    mgr2.sync()
+    c = mgr2.compile_counters()
+    launches = {m["launches"] for m in mgr2.metrics}
+    quiet_ok = (c["relayouts"] == c0["relayouts"] and launches == {1})
+
+    # ---- leg 3: uninterrupted twin -------------------------------------
+    twin_clock = FakeClock()
+    twin = make_fleet()
+    tw = twin.add_tenant(name="tw")
+    few = make_frontend(twin, None, twin_clock)
+    for r in range(ROUNDS):
+        for i in range(r * ROWS, (r + 1) * ROWS):
+            few.submit(tw, *EV[i])
+        twin_clock.advance(0.006)
+        few.pump()
+    twin.sync()
+    bitwise_ok = _bitwise(mgr2.state_of(new), twin.state_of(tw))
+
+    # ---- leg 4: duplicate-ingest fuzz (every event sent twice) ---------
+    fuzz_clock = FakeClock()
+    jf = EventJournal(os.path.join(root, "wal-fuzz"), clock=fuzz_clock)
+    fz = make_fleet()
+    tf = fz.add_tenant(name="t0")
+    fef = make_frontend(fz, jf, fuzz_clock)
+    dedups = 0
+    for r in range(ROUNDS):
+        for i in range(r * ROWS, (r + 1) * ROWS):
+            fef.submit(tf, *EV[i], client_id="c0", seq=i)
+            try:
+                fef.submit(tf, *EV[i], client_id="c0", seq=i)
+            except DuplicateEvent:
+                dedups += 1
+        fuzz_clock.advance(0.006)
+        fef.pump()
+    fz.sync()
+    fuzz_ok = (dedups == ROWS * ROUNDS and fef.dedups == dedups
+               and _bitwise(fz.state_of(tf), twin.state_of(tw)))
+
+    ok = recover_ok and quiet_ok and bitwise_ok and fuzz_ok
+    print(f"journal-smoke: killed after round {KILL_AT}/{ROUNDS}, "
+          f"snapshot at {SNAP_AT}, replayed {res.rounds} round(s) "
+          f"({res.events} events) -> {'OK' if recover_ok else 'FAIL'}")
+    print(f"journal-smoke: recovered run vs uninterrupted twin bitwise "
+          f"-> {'OK' if bitwise_ok else 'FAIL'}; relayouts frozen, "
+          f"launches {sorted(launches)} -> {'OK' if quiet_ok else 'FAIL'}")
+    print(f"journal-smoke: duplicate fuzz ({dedups} dedups, every event "
+          f"sent twice) bitwise vs send-once -> "
+          f"{'OK' if fuzz_ok else 'FAIL'}")
+    if not ok:
+        print(f"journal-smoke: replay={res} compile={c} vs {c0} "
+              f"stats={fef.stats().get('journal')}", file=sys.stderr)
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -47,6 +47,14 @@ silent — everything still computes the right numbers, just slower):
    plan is armed — the injection layer's contract is strictly zero cost
    when disarmed (see docs/ROBUSTNESS.md).
 
+5. Journal hooks on the ingest hot path must stay armed-gated the same
+   way: every ``EventJournal`` call (append / flush-marker / dedup
+   query) in ``ServingFrontend.submit``/``pump`` must sit inside an
+   ``if`` whose test references the journal (``if self.journal is not
+   None:``, ...). A fleet that never arms a journal pays one attribute
+   test per event and NO disk IO (docs/ROBUSTNESS.md, "Recovery
+   semantics").
+
 Exits non-zero listing every violation; also fails if a guarded function
 disappears (a rename must update this guard, not silently skip it).
 """
@@ -111,7 +119,7 @@ FENCE_GUARDED = {
 
 #: FaultInjector hook methods whose call must be fault-gated (rule 4).
 FAULT_HOOKS = {"on_round", "before_launch", "on_ingest",
-               "on_snapshot_write"}
+               "on_snapshot_write", "on_journal_append"}
 
 #: file -> ((scope, function), ...): hot-path functions that are allowed
 #: to call FAULT_HOOKS, but only under an ``if ... fault ...:`` gate.
@@ -121,9 +129,25 @@ FAULT_GUARDED = {
     ),
     os.path.join("src", "repro", "serving", "frontend.py"): (
         ("ServingFrontend", "submit"),
+        ("ServingFrontend", "pump"),
     ),
     os.path.join("src", "repro", "serving", "cluster.py"): (
         ("*", "work"),
+    ),
+}
+
+#: EventJournal methods whose ingest-hot-path call must be journal-gated
+#: (rule 5). ``append_event`` and ``note_flush`` are the disk writes;
+#: ``is_duplicate``/``last_seq`` are the per-event dedup queries.
+JOURNAL_HOOKS = {"append_event", "note_flush", "is_duplicate",
+                 "last_seq"}
+
+#: file -> ((scope, function), ...): hot-path functions allowed to call
+#: JOURNAL_HOOKS, but only under an ``if ... journal ...:`` gate.
+JOURNAL_GUARDED = {
+    os.path.join("src", "repro", "serving", "frontend.py"): (
+        ("ServingFrontend", "submit"),
+        ("ServingFrontend", "pump"),
     ),
 }
 
@@ -239,6 +263,42 @@ def _fault_violations(fn: ast.FunctionDef) -> list:
     return out
 
 
+def _is_journal_gate(test: ast.expr) -> bool:
+    """True when an ``if`` test references the journal — any name/
+    attribute containing "journal" (``if self.journal is not None:``,
+    ``if journal:``, ...)."""
+    for n in ast.walk(test):
+        ident = (n.id if isinstance(n, ast.Name)
+                 else n.attr if isinstance(n, ast.Attribute) else "")
+        if "journal" in ident.lower():
+            return True
+    return False
+
+
+def _journal_violations(fn: ast.FunctionDef) -> list:
+    """JOURNAL_HOOKS calls reachable outside every journal-gated ``if``
+    body (and outside ``except`` handlers that re-gate on the journal)
+    inside ``fn``."""
+    out = []
+
+    def visit(node, gated):
+        for sub in ast.iter_child_nodes(node):
+            if isinstance(sub, ast.If) and _is_journal_gate(sub.test):
+                for b in sub.body:
+                    visit(b, True)
+                for b in sub.orelse:
+                    visit(b, gated)
+                continue
+            if (not gated and isinstance(sub, ast.Call)
+                    and isinstance(sub.func, ast.Attribute)
+                    and sub.func.attr in JOURNAL_HOOKS):
+                out.append((sub.lineno, sub.func.attr))
+            visit(sub, gated)
+
+    visit(fn, False)
+    return out
+
+
 def check_file(relpath: str, guards) -> tuple[int, list]:
     with open(os.path.join(REPO, relpath)) as f:
         tree = ast.parse(f.read(), relpath)
@@ -316,6 +376,31 @@ def check_faults(relpath: str, guards) -> tuple[int, list]:
     return checked, errors
 
 
+def check_journal(relpath: str, guards) -> tuple[int, list]:
+    with open(os.path.join(REPO, relpath)) as f:
+        tree = ast.parse(f.read(), relpath)
+    functions = _functions(tree)
+    errors, checked = [], 0
+    base = os.path.basename(relpath)
+    for scope, name in guards:
+        fn = functions.get((scope, name))
+        qual = ".".join(p for p in (None if scope == "*" else scope, name)
+                        if p)
+        if fn is None:
+            errors.append(f"guarded function {qual} not found in {base} — "
+                          "update tools/session_lint.py alongside the "
+                          "rename")
+            continue
+        checked += 1
+        for lineno, what in _journal_violations(fn):
+            errors.append(
+                f"{base}:{lineno}: ungated journal hook {what}() in "
+                f"{qual} — WAL appends/dedup queries must sit inside an "
+                "`if ... journal ...:` gate so a disarmed fleet pays no "
+                "disk IO on the ingest hot path")
+    return checked, errors
+
+
 def main() -> int:
     errors, checked = [], 0
     for relpath, guards in GUARDED.items():
@@ -328,6 +413,10 @@ def main() -> int:
         errors.extend(errs)
     for relpath, guards in FAULT_GUARDED.items():
         c, errs = check_faults(relpath, guards)
+        checked += c
+        errors.extend(errs)
+    for relpath, guards in JOURNAL_GUARDED.items():
+        c, errs = check_journal(relpath, guards)
         checked += c
         errors.extend(errs)
     for e in errors:
